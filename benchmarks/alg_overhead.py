@@ -1,0 +1,44 @@
+"""Section V-D reproduction: allocator invocation overhead.
+
+Paper claim: the greedy hill-climbing allocation runs in < 2 ms.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import HW, K_MAX, Row, full_tpu_rates_for_utilization, tenants
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import hill_climb
+
+CASES = [
+    ("n2", ["mnasnet", "inceptionv4"]),
+    ("n3", ["mobilenetv2", "gpunet", "inceptionv4"]),
+    ("n4", ["mobilenetv2", "efficientnet", "xception", "inceptionv4"]),
+]
+
+
+def run() -> list[Row]:
+    rows = []
+    for name, names in CASES:
+        profs = [paper_profile(n) for n in names]
+        rates = full_tpu_rates_for_utilization(profs, 0.5)
+        ts = tenants(profs, rates)
+        hill_climb(ts, HW, K_MAX)  # warm-up
+        n_iter = 20
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            hill_climb(ts, HW, K_MAX)
+        dt = (time.perf_counter() - t0) / n_iter
+        rows.append(
+            Row(
+                f"alg_overhead/{name}",
+                dt * 1e6,
+                f"ms_per_invocation={dt*1e3:.2f} (paper <2ms)",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Output convention (benchmarks/run.py): CSV rows ``name,us_per_call,derived``
+where ``us_per_call`` is the scenario's mean end-to-end latency in
+microseconds (what the paper's figures plot) and ``derived`` is the
+figure's headline metric (MAPE, swap share, latency reduction, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+from repro.core.planner import ModelProfile, Plan, TenantSpec, prefix_service_time
+from repro.hw.specs import EDGE_TPU_PLATFORM
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def full_tpu_rates_for_utilization(
+    profiles: Sequence[ModelProfile], rho: float
+) -> list[float]:
+    """Per-model rates so each contributes rho/n TPU load at full-TPU
+    execution (the paper: 'each model contributes equally to the load')."""
+    n = len(profiles)
+    rates = []
+    for prof in profiles:
+        s = prefix_service_time(prof, prof.num_partition_points, HW)
+        rates.append(rho / n / s)
+    return rates
+
+
+def tenants(profiles: Sequence[ModelProfile], rates: Sequence[float]) -> list[TenantSpec]:
+    return [TenantSpec(p, r) for p, r in zip(profiles, rates)]
+
+
+def mape(pred: Sequence[float], obs: Sequence[float]) -> float:
+    pairs = [(p, o) for p, o in zip(pred, obs) if o > 0]
+    return 100.0 * sum(abs(p - o) / o for p, o in pairs) / len(pairs)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,33 @@
+"""Fig. 1 reproduction: intra-model swapping overhead on full-TPU execution.
+
+Paper claim: swapping overhead ranges from 20.2% (DenseNet201) to 62.4%
+(InceptionV4) of total processing time for models exceeding the 8 MB SRAM.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, Row
+from repro.configs.paper_models import all_paper_profiles
+from repro.core.planner import intra_swap_bytes
+
+
+def run() -> list[Row]:
+    rows = []
+    for name, prof in all_paper_profiles().items():
+        P = prof.num_partition_points
+        compute = prof.prefix_tpu_time(P)
+        swap = intra_swap_bytes(prof, P, HW) / HW.swap_bw
+        total = compute + swap
+        frac = 100.0 * swap / total if total else 0.0
+        rows.append(
+            Row(
+                name=f"fig1/{name}",
+                us_per_call=total * 1e6,
+                derived=f"intra_swap_pct={frac:.1f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

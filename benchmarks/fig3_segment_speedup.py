@@ -1,0 +1,29 @@
+"""Fig. 3 reproduction: per-segment TPU vs CPU performance (InceptionV4).
+
+Paper claim: early segments see large TPU gains; the last three segments
+are CPU-comparable -- the opportunity for collaborative inference.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs.paper_models import paper_profile
+
+
+def run() -> list[Row]:
+    rows = []
+    prof = paper_profile("inceptionv4")
+    for i, seg in enumerate(prof.segments):
+        speedup = seg.cpu_time_1core / seg.tpu_time
+        rows.append(
+            Row(
+                name=f"fig3/inceptionv4/seg{i}",
+                us_per_call=seg.tpu_time * 1e6,
+                derived=f"tpu_speedup={speedup:.1f}x;cpu_us={seg.cpu_time_1core*1e6:.0f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,90 @@
+"""Fig. 5 reproduction: single-tenant analytic-model validation.
+
+(a) InceptionV4 at rho=0.2 across partition points: predicted vs observed
+    (DES) mean latency; paper reports MAPE 1.9%, 92.3% within +/-5%.
+(b) across request rates: the optimal partition point shifts with load
+    (paper: PP9 below ~4.5 RPS, PP7 above).
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, K_MAX, Row, mape, tenants
+from repro.configs.paper_models import paper_profile
+from repro.core import latency
+from repro.core.allocator import prop_alloc
+from repro.core.planner import Plan, prefix_service_time
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+
+DURATION = 3000.0
+
+
+def _plan_for_pp(ts, pp):
+    P = ts[0].profile.num_partition_points
+    cores = prop_alloc(ts, [pp], K_MAX)
+    return Plan((pp,), cores)
+
+
+def run() -> list[Row]:
+    rows = []
+    prof = paper_profile("inceptionv4")
+    P = prof.num_partition_points
+    s_full = prefix_service_time(prof, P, HW)
+    rate_rho02 = 0.2 / s_full
+
+    # (a) across partition points at rho = 0.2.
+    preds, obss = [], []
+    for pp in range(0, P + 1):
+        ts = tenants([prof], [rate_rho02])
+        plan = _plan_for_pp(ts, pp)
+        pred = latency.predict(ts, plan, HW)
+        if pred.tpu_utilization >= 1.0 or not pred.stable:
+            continue
+        reqs = poisson_trace([rate_rho02], DURATION, seed=pp)
+        sim = simulate(ts, plan, HW, reqs)
+        p, o = pred.latencies[0], sim.mean_latency(0)
+        preds.append(p)
+        obss.append(o)
+        rows.append(
+            Row(
+                name=f"fig5a/inceptionv4/pp{pp}",
+                us_per_call=o * 1e6,
+                derived=f"pred_us={p*1e6:.0f};err_pct={100*abs(p-o)/o:.1f}",
+            )
+        )
+    m = mape(preds, obss)
+    within5 = 100.0 * sum(
+        1 for p, o in zip(preds, obss) if abs(p - o) / o <= 0.05
+    ) / len(preds)
+    rows.append(
+        Row(
+            name="fig5a/summary",
+            us_per_call=0.0,
+            derived=f"mape_pct={m:.1f};within5_pct={within5:.0f};paper_mape=1.9",
+        )
+    )
+
+    # (b) across request rates: which PP is optimal?
+    for rps in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0):
+        ts = tenants([prof], [rps])
+        best_pp, best_lat = None, float("inf")
+        for pp in range(0, P + 1):
+            plan = _plan_for_pp(ts, pp)
+            pred = latency.predict(ts, plan, HW)
+            if not pred.stable:
+                continue
+            if pred.latencies[0] < best_lat:
+                best_lat = pred.latencies[0]
+                best_pp = pp
+        rows.append(
+            Row(
+                name=f"fig5b/inceptionv4/rps{rps:.0f}",
+                us_per_call=best_lat * 1e6,
+                derived=f"optimal_pp={best_pp}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,118 @@
+"""Fig. 6 reproduction: multi-tenant analytic-model validation.
+
+(a) alpha across mixes (fit -> 0; 50:50 -> 0.5; 90:10 -> 0.9/0.1) vs the
+    DES's observed miss rates.
+(b) predicted vs observed latency across model mixes (paper MAPE 6.8%).
+(c) accuracy across request rates for one mix.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, Row, mape, tenants
+from repro.configs.paper_models import paper_profile
+from repro.core import latency, swap
+from repro.core.allocator import edge_tpu_compiler_plan
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+
+DURATION = 3000.0
+
+ALPHA_SCENARIOS = [
+    ("mobilenetv2+squeezenet", ["mobilenetv2", "squeezenet"], (2.0, 2.0)),
+    ("efficientnet+gpunet_50:50", ["efficientnet", "gpunet"], (2.0, 2.0)),
+    ("efficientnet+gpunet_90:10", ["efficientnet", "gpunet"], (3.6, 0.4)),
+]
+
+MIXES = [
+    ("mobilenet+squeeze", ["mobilenetv2", "squeezenet"]),
+    ("efficient+gpunet", ["efficientnet", "gpunet"]),
+    ("densenet+gpunet", ["densenet201", "gpunet"]),
+    ("mnasnet+gpunet", ["mnasnet", "gpunet"]),
+    ("efficient+mnasnet+gpunet", ["efficientnet", "mnasnet", "gpunet"]),
+]
+
+
+def run() -> list[Row]:
+    rows = []
+    # (a) alpha validation.
+    for name, names, rates in ALPHA_SCENARIOS:
+        profs = [paper_profile(n) for n in names]
+        ts = tenants(profs, rates)
+        plan = edge_tpu_compiler_plan(ts)
+        alphas = swap.weight_miss_probs(ts, plan.partition, HW)
+        sim = simulate(ts, plan, HW, poisson_trace(list(rates), DURATION, seed=1))
+        for i, n in enumerate(names):
+            rows.append(
+                Row(
+                    name=f"fig6a/{name}/{n}",
+                    us_per_call=sim.mean_latency(i) * 1e6,
+                    derived=(
+                        f"alpha={alphas[i]:.2f};"
+                        f"observed_miss={sim.observed_miss_rate(i):.2f}"
+                    ),
+                )
+            )
+
+    # (b) latency prediction across mixes (equal TPU load per model).
+    preds, obss = [], []
+    for mix_name, names in MIXES:
+        profs = [paper_profile(n) for n in names]
+        from benchmarks.common import full_tpu_rates_for_utilization
+
+        rates = full_tpu_rates_for_utilization(profs, 0.5)
+        ts = tenants(profs, rates)
+        plan = edge_tpu_compiler_plan(ts)
+        pred = latency.predict(ts, plan, HW)
+        sim = simulate(ts, plan, HW, poisson_trace(rates, DURATION, seed=2))
+        p = pred.mean_latency(ts)
+        o = sim.overall_mean()
+        preds.append(p)
+        obss.append(o)
+        rows.append(
+            Row(
+                name=f"fig6b/{mix_name}",
+                us_per_call=o * 1e6,
+                derived=f"pred_us={p*1e6:.0f};err_pct={100*abs(p-o)/o:.1f}",
+            )
+        )
+    rows.append(
+        Row(
+            name="fig6b/summary",
+            us_per_call=0.0,
+            derived=f"mape_pct={mape(preds, obss):.1f};paper_mape=6.8",
+        )
+    )
+
+    # (c) across request rates for efficientnet+gpunet.
+    profs = [paper_profile("efficientnet"), paper_profile("gpunet")]
+    preds, obss = [], []
+    for rho in (0.2, 0.35, 0.5, 0.65):
+        from benchmarks.common import full_tpu_rates_for_utilization
+
+        rates = full_tpu_rates_for_utilization(profs, rho)
+        ts = tenants(profs, rates)
+        plan = edge_tpu_compiler_plan(ts)
+        pred = latency.predict(ts, plan, HW).mean_latency(ts)
+        sim = simulate(ts, plan, HW, poisson_trace(rates, DURATION, seed=3))
+        obs = sim.overall_mean()
+        preds.append(pred)
+        obss.append(obs)
+        rows.append(
+            Row(
+                name=f"fig6c/rho{rho:.2f}",
+                us_per_call=obs * 1e6,
+                derived=f"pred_us={pred*1e6:.0f};err_pct={100*abs(pred-obs)/obs:.1f}",
+            )
+        )
+    rows.append(
+        Row(
+            name="fig6c/summary",
+            us_per_call=0.0,
+            derived=f"mape_pct={mape(preds, obss):.1f}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

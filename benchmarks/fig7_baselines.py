@@ -1,0 +1,92 @@
+"""Fig. 7 reproduction: SwapLess vs baselines across mixes and utilization.
+
+Policies: Edge TPU Compiler (all-TPU co-compilation), Threshold-based
+partitioning, SwapLess (alpha=0), SwapLess.  All four plans are evaluated on
+the same DES traces.  Paper headline: up to 63.8% (single-tenant) and 77.4%
+(multi-tenant) mean-latency reduction vs the compiler baseline at rho=0.5.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, K_MAX, Row, full_tpu_rates_for_utilization, tenants
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import (
+    edge_tpu_compiler_plan,
+    swapless_alpha0_plan,
+    swapless_plan,
+    threshold_plan,
+)
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+
+DURATION = 2500.0
+
+SINGLE = ["mobilenetv2", "gpunet", "resnet50v2", "xception", "inceptionv4"]
+MULTI = [
+    ("mobilenetv2+squeezenet", ["mobilenetv2", "squeezenet"]),
+    ("mobilenetv2+squeezenet+resnet", ["mobilenetv2", "squeezenet", "resnet50v2"]),
+    ("efficientnet+gpunet", ["efficientnet", "gpunet"]),
+    ("xception+inceptionv4", ["xception", "inceptionv4"]),
+    ("densenet+resnet+gpunet", ["densenet201", "resnet50v2", "gpunet"]),
+]
+
+POLICIES = [
+    ("compiler", lambda ts: edge_tpu_compiler_plan(ts)),
+    ("threshold", lambda ts: threshold_plan(ts, HW, K_MAX)),
+    ("swapless_a0", lambda ts: swapless_alpha0_plan(ts, HW, K_MAX)),
+    ("swapless", lambda ts: swapless_plan(ts, HW, K_MAX)),
+]
+
+
+def _evaluate(scenario: str, names: list[str], rho: float, rows: list[Row]):
+    profs = [paper_profile(n) for n in names]
+    rates = full_tpu_rates_for_utilization(profs, rho)
+    ts = tenants(profs, rates)
+    reqs = poisson_trace(rates, DURATION, seed=13)
+    base_lat = None
+    for pol_name, pol in POLICIES:
+        plan = pol(ts)
+        sim = simulate(ts, plan, HW, reqs)
+        lat = sim.overall_mean()
+        if pol_name == "compiler":
+            base_lat = lat
+        red = 100.0 * (base_lat - lat) / base_lat if base_lat else 0.0
+        rows.append(
+            Row(
+                name=f"fig7/{scenario}/rho{rho}/{pol_name}",
+                us_per_call=lat * 1e6,
+                derived=f"reduction_vs_compiler_pct={red:.1f};plan={list(plan.partition)}",
+            )
+        )
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    best_single, best_multi = 0.0, 0.0
+    for rho in (0.2, 0.5):
+        for name in SINGLE:
+            _evaluate(f"single/{name}", [name], rho, rows)
+        for mix_name, names in MULTI:
+            _evaluate(f"multi/{mix_name}", names, rho, rows)
+    # Summaries.
+    for r in rows:
+        if not r.name.endswith("/swapless"):
+            continue
+        red = float(r.derived.split("reduction_vs_compiler_pct=")[1].split(";")[0])
+        if "/single/" in r.name:
+            best_single = max(best_single, red)
+        else:
+            best_multi = max(best_multi, red)
+    rows.append(
+        Row(
+            "fig7/summary",
+            0.0,
+            f"best_single_reduction_pct={best_single:.1f} (paper 63.8);"
+            f"best_multi_reduction_pct={best_multi:.1f} (paper 77.4)",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

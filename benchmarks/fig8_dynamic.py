@@ -1,0 +1,75 @@
+"""Fig. 8 reproduction: dynamic workload adaptation.
+
+MnasNet + InceptionV4; rates (5,1) RPS -> (5,3) at 300 s -> (5,5) at 600 s.
+SwapLess re-plans online from sliding-window rate estimates; baselines keep
+their static plans.  Paper headline: up to 75.1% reduction vs static
+allocation; allocator overhead < 2 ms per invocation.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, K_MAX, Row, tenants
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import (
+    edge_tpu_compiler_plan,
+    swapless_plan,
+    threshold_plan,
+)
+from repro.serving.controller import run_adaptive
+from repro.serving.simulator import simulate
+from repro.serving.workload import RatePhase, dynamic_trace
+
+PHASES = [
+    RatePhase(0.0, 300.0, (5.0, 1.0)),
+    RatePhase(300.0, 600.0, (5.0, 3.0)),
+    RatePhase(600.0, 900.0, (5.0, 5.0)),
+]
+
+
+def run() -> list[Row]:
+    rows = []
+    profs = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+    trace = dynamic_trace(PHASES, seed=5)
+
+    res = run_adaptive(
+        profs, trace, HW, K_MAX,
+        replan_period=30.0, window=30.0, initial_rates=(5.0, 1.0),
+    )
+    adaptive_lat = res.sim.overall_mean()
+    max_plan_ms = max(res.plan_compute_seconds) * 1e3
+    rows.append(
+        Row(
+            "fig8/adaptive",
+            adaptive_lat * 1e6,
+            f"replans={len(res.plans)};max_alloc_ms={max_plan_ms:.2f} (paper <2ms)",
+        )
+    )
+
+    # Static baselines planned for the initial rates.
+    ts0 = tenants(profs, [5.0, 1.0])
+    best_red = 0.0
+    for name, plan in [
+        ("static_compiler", edge_tpu_compiler_plan(ts0)),
+        ("static_threshold", threshold_plan(ts0, HW, K_MAX)),
+        ("static_swapless_initial", swapless_plan(ts0, HW, K_MAX)),
+    ]:
+        sim = simulate(ts0, plan, HW, trace)
+        lat = sim.overall_mean()
+        red = 100.0 * (lat - adaptive_lat) / lat if lat > 0 else 0.0
+        best_red = max(best_red, red)
+        rows.append(
+            Row(
+                f"fig8/{name}",
+                lat * 1e6,
+                f"adaptive_reduction_pct={red:.1f}",
+            )
+        )
+    rows.append(
+        Row("fig8/summary", adaptive_lat * 1e6,
+            f"best_reduction_vs_static_pct={best_red:.1f} (paper 75.1)")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run            # all figures
+    PYTHONPATH=src python -m benchmarks.run fig7       # one figure
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    alg_overhead,
+    alpha_ablation,
+    fig1_intra_swap,
+    fig2_inter_swap,
+    fig3_segment_speedup,
+    fig5_validation_single,
+    fig6_validation_multi,
+    fig7_baselines,
+    fig8_dynamic,
+)
+
+MODULES = {
+    "fig1": fig1_intra_swap,
+    "fig2": fig2_inter_swap,
+    "fig3": fig3_segment_speedup,
+    "fig5": fig5_validation_single,
+    "fig6": fig6_validation_multi,
+    "fig7": fig7_baselines,
+    "fig8": fig8_dynamic,
+    "alg_overhead": alg_overhead,
+    "alpha_ablation": alpha_ablation,
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    for key in selected:
+        mod = MODULES[key]
+        t0 = time.perf_counter()
+        for row in mod.run():
+            print(row.csv())
+        dt = time.perf_counter() - t0
+        print(f"{key}/_harness,{dt*1e6:.0f},wall_s={dt:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from repro.configs.registry import ARCHS, all_pairs, get_arch, get_shape
+
+__all__ = [
+    "ARCHS",
+    "ArchConfig",
+    "INPUT_SHAPES",
+    "InputShape",
+    "all_pairs",
+    "get_arch",
+    "get_shape",
+]

@@ -1,0 +1,58 @@
+"""SwapLess core: the paper's analytic queueing model and resource allocator."""
+from repro.core.planner import (
+    ModelProfile,
+    Plan,
+    Segment,
+    TenantSpec,
+    intra_swap_bytes,
+    load_time,
+    prefix_service_time,
+    validate_plan,
+)
+from repro.core.queueing import mdk_wait, mg1_wait, mixture_moments
+from repro.core.swap import aggregate_footprint, tpu_arrival_rate, weight_miss_probs
+from repro.core.latency import (
+    LatencyBreakdown,
+    SystemPrediction,
+    objective,
+    penalized_objective,
+    predict,
+)
+from repro.core.allocator import (
+    brute_force_oracle,
+    edge_tpu_compiler_plan,
+    hill_climb,
+    prop_alloc,
+    swapless_alpha0_plan,
+    swapless_plan,
+    threshold_plan,
+)
+
+__all__ = [
+    "LatencyBreakdown",
+    "ModelProfile",
+    "Plan",
+    "Segment",
+    "SystemPrediction",
+    "TenantSpec",
+    "aggregate_footprint",
+    "brute_force_oracle",
+    "edge_tpu_compiler_plan",
+    "hill_climb",
+    "intra_swap_bytes",
+    "load_time",
+    "mdk_wait",
+    "mg1_wait",
+    "mixture_moments",
+    "objective",
+    "penalized_objective",
+    "predict",
+    "prefix_service_time",
+    "prop_alloc",
+    "swapless_alpha0_plan",
+    "swapless_plan",
+    "threshold_plan",
+    "tpu_arrival_rate",
+    "validate_plan",
+    "weight_miss_probs",
+]

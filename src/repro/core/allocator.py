@@ -1,0 +1,202 @@
+"""Greedy hill-climbing joint partitioning + core allocation (Algorithm 1),
+the PropAlloc fair-share routine, baseline policies, and a brute-force NLIP
+oracle used by tests on small instances.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Sequence
+
+from repro.core import latency
+from repro.core.planner import Plan, TenantSpec, validate_plan
+from repro.hw.specs import Platform
+
+
+def prop_alloc(
+    tenants: Sequence[TenantSpec],
+    partition: Sequence[int],
+    k_max: int,
+) -> tuple[int, ...]:
+    """Proportional fair-share integer core allocation (Alg. 1, line 2/10).
+
+    Models with a CPU suffix receive cores proportional to their CPU workload
+    ``lambda_i * s_cpu_suffix(1 core)``, subject to constraint (8): at least
+    one core for any model with a suffix, zero cores for full-TPU models.
+    Largest-remainder rounding keeps the total at ``min(K_max, ...)``.
+    """
+    n = len(tenants)
+    needs_cpu = [p < t.profile.num_partition_points for t, p in zip(tenants, partition)]
+    if not any(needs_cpu):
+        return (0,) * n
+    loads = [
+        t.rate * t.profile.suffix_cpu_time_1core(p) if need else 0.0
+        for t, p, need in zip(tenants, partition, needs_cpu)
+    ]
+    n_need = sum(needs_cpu)
+    if n_need > k_max:
+        raise ValueError(
+            f"{n_need} models need a CPU core but only K_max={k_max} available"
+        )
+    # Start from the constraint floor: 1 core per suffix-bearing model.
+    cores = [1 if need else 0 for need in needs_cpu]
+    spare = k_max - n_need
+    total_load = sum(loads)
+    if spare > 0 and total_load > 0:
+        shares = [spare * l / total_load for l in loads]
+        floors = [int(math.floor(s)) for s in shares]
+        for i in range(n):
+            cores[i] += floors[i]
+        leftover = spare - sum(floors)
+        # Largest remainder first; stable tie-break on index.
+        order = sorted(range(n), key=lambda i: (-(shares[i] - floors[i]), i))
+        for i in order[:leftover]:
+            if needs_cpu[i]:
+                cores[i] += 1
+            else:
+                leftover_targets = [j for j in order if needs_cpu[j]]
+                if leftover_targets:
+                    cores[leftover_targets[0]] += 1
+    return tuple(cores)
+
+
+def hill_climb(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+    *,
+    force_alpha_zero: bool = False,
+    max_iters: int = 10_000,
+) -> tuple[Plan, float]:
+    """Algorithm 1: greedy hill-climbing resource allocation.
+
+    Starts all-CPU, each iteration tries moving h in {1,2} layers of each
+    model from CPU to TPU, re-running PropAlloc for each candidate, and
+    commits the best strictly-improving move.  The 2-step lookahead lets the
+    search hop over single-point latency spikes (local optima).
+
+    Returns the final (Plan, predicted objective).
+    """
+    n = len(tenants)
+    partition = [0] * n
+    cores = prop_alloc(tenants, partition, k_max)
+    plan = Plan(tuple(partition), cores)
+    l_curr = latency.penalized_objective(
+        tenants, plan, platform, force_alpha_zero=force_alpha_zero
+    )
+
+    for _ in range(max_iters):
+        best: tuple[float, int, int, tuple[int, ...]] | None = None
+        for m in range(n):
+            P_m = tenants[m].profile.num_partition_points
+            for h in (1, 2):
+                if partition[m] + h > P_m:
+                    continue
+                cand = list(partition)
+                cand[m] += h
+                try:
+                    k_cand = prop_alloc(tenants, cand, k_max)
+                except ValueError:
+                    continue
+                l_cand = latency.penalized_objective(
+                    tenants,
+                    Plan(tuple(cand), k_cand),
+                    platform,
+                    force_alpha_zero=force_alpha_zero,
+                )
+                if best is None or l_cand < best[0]:
+                    best = (l_cand, m, h, k_cand)
+        if best is None or best[0] >= l_curr:
+            break
+        l_cand, m_star, h_star, k_star = best
+        partition[m_star] += h_star
+        cores = k_star
+        l_curr = l_cand
+
+    plan = Plan(tuple(partition), tuple(cores))
+    validate_plan(plan, tenants, k_max)
+    return plan, l_curr
+
+
+# --------------------------------------------------------------------------
+# Baselines (Section V-A3)
+# --------------------------------------------------------------------------
+
+def edge_tpu_compiler_plan(tenants: Sequence[TenantSpec]) -> Plan:
+    """Industry-default baseline: every model fully on the TPU (p_i = P_i),
+    co-compiled, sharing TPU memory; no CPU offload."""
+    partition = tuple(t.profile.num_partition_points for t in tenants)
+    cores = (0,) * len(tenants)
+    return Plan(partition, cores)
+
+
+def threshold_plan(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+    *,
+    threshold: float = 0.10,
+) -> Plan:
+    """Threshold-based partitioning baseline: walk segments from the last
+    layer backward and offload a segment to CPU if its 1-core CPU time is
+    within ``threshold`` of its TPU time.  Ignores queueing/multi-tenancy."""
+    partition: list[int] = []
+    for t in tenants:
+        segs = t.profile.segments
+        p = len(segs)
+        while p > 0:
+            seg = segs[p - 1]
+            if seg.cpu_time_1core <= (1.0 + threshold) * seg.tpu_time:
+                p -= 1
+            else:
+                break
+        partition.append(p)
+    cores = prop_alloc(tenants, partition, k_max)
+    return Plan(tuple(partition), cores)
+
+
+def swapless_plan(
+    tenants: Sequence[TenantSpec], platform: Platform, k_max: int
+) -> Plan:
+    """Full SwapLess: Algorithm 1 with the complete analytic model."""
+    plan, _ = hill_climb(tenants, platform, k_max)
+    return plan
+
+
+def swapless_alpha0_plan(
+    tenants: Sequence[TenantSpec], platform: Platform, k_max: int
+) -> Plan:
+    """SwapLess (alpha=0) ablation: plans with queueing but no swap model."""
+    plan, _ = hill_climb(tenants, platform, k_max, force_alpha_zero=True)
+    return plan
+
+
+def brute_force_oracle(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+) -> tuple[Plan, float]:
+    """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
+    only for tests/validation on small instances."""
+    n = len(tenants)
+    best_plan: Plan | None = None
+    best_obj = math.inf
+    part_ranges = [range(t.profile.num_partition_points + 1) for t in tenants]
+    for partition in itertools.product(*part_ranges):
+        needs = [p < t.profile.num_partition_points for t, p in zip(tenants, partition)]
+        n_need = sum(needs)
+        if n_need > k_max:
+            continue
+        core_ranges = [
+            range(1, k_max + 1) if need else range(0, 1) for need in needs
+        ]
+        for cores in itertools.product(*core_ranges):
+            if sum(cores) > k_max:
+                continue
+            plan = Plan(tuple(partition), tuple(cores))
+            obj = latency.objective(tenants, plan, platform)
+            if obj < best_obj:
+                best_obj = obj
+                best_plan = plan
+    assert best_plan is not None
+    return best_plan, best_obj

@@ -1,0 +1,254 @@
+"""End-to-end latency prediction (Eq. 1-4) for a global configuration."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import queueing, swap
+from repro.core.planner import (
+    ModelProfile,
+    Plan,
+    TenantSpec,
+    load_time,
+    prefix_service_time,
+)
+from repro.hw.specs import Platform
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBreakdown:
+    """Per-model expected latency components (all seconds)."""
+
+    input_xfer: float
+    tpu_wait: float
+    tpu_swap: float          # expected inter-model swap: alpha * T_load
+    tpu_service: float       # prefix compute + intra-model swap streaming
+    boundary_xfer: float
+    cpu_wait: float
+    cpu_service: float
+
+    @property
+    def total(self) -> float:
+        return (
+            self.input_xfer
+            + self.tpu_wait
+            + self.tpu_swap
+            + self.tpu_service
+            + self.boundary_xfer
+            + self.cpu_wait
+            + self.cpu_service
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemPrediction:
+    per_model: tuple[LatencyBreakdown, ...]
+    tpu_utilization: float
+    cpu_utilizations: tuple[float, ...]
+    alphas: tuple[float, ...]
+
+    @property
+    def stable(self) -> bool:
+        return self.tpu_utilization < 1.0 and all(
+            u < 1.0 for u in self.cpu_utilizations
+        )
+
+    @property
+    def overload(self) -> float:
+        """Total excess utilization; 0 when all queues are stable."""
+        return max(0.0, self.tpu_utilization - 1.0) + sum(
+            max(0.0, u - 1.0) for u in self.cpu_utilizations
+        )
+
+    @property
+    def latencies(self) -> tuple[float, ...]:
+        return tuple(b.total for b in self.per_model)
+
+    def weighted_latency(self, tenants: Sequence[TenantSpec]) -> float:
+        """Objective of Eq. 5: sum_i lambda_i * T_e2e_i."""
+        return sum(t.rate * b.total for t, b in zip(tenants, self.per_model))
+
+    def mean_latency(self, tenants: Sequence[TenantSpec]) -> float:
+        """Request-weighted mean latency (what the paper's figures report)."""
+        tot = sum(t.rate for t in tenants)
+        if tot <= 0:
+            return 0.0
+        return self.weighted_latency(tenants) / tot
+
+
+def tpu_service_distribution(
+    tenants: Sequence[TenantSpec],
+    partition: Sequence[int],
+    alphas: Sequence[float],
+    platform: Platform,
+) -> tuple[list[float], list[float]]:
+    """The TPU service-time mixture of Eq. 2 as (weights, atoms).
+
+    Each TPU-active model contributes two atoms: a hit (prob 1-alpha) with
+    service ``s_tpu`` and a miss (prob alpha) with service ``T_load + s_tpu``.
+    Using the full two-atom mixture gives the exact E[S^2] needed by
+    Pollaczek-Khinchine (the paper states only the mean, Eq. 2; the second
+    moment follows from the same distribution).
+    """
+    weights: list[float] = []
+    atoms: list[float] = []
+    for t, p, a in zip(tenants, partition, alphas):
+        if p <= 0:
+            continue
+        s = prefix_service_time(t.profile, p, platform)
+        tl = load_time(t.profile, p, platform)
+        if a > 0.0:
+            weights.extend([t.rate * (1.0 - a), t.rate * a])
+            atoms.extend([s, s + tl])
+        else:
+            weights.append(t.rate)
+            atoms.append(s)
+    return weights, atoms
+
+
+def predict(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    *,
+    force_alpha_zero: bool = False,
+) -> SystemPrediction:
+    """Predict per-model end-to-end latency under (P, K)  --  Eq. 4.
+
+    ``force_alpha_zero`` implements the paper's "SwapLess (alpha=0)" ablation
+    baseline: the queueing terms are kept but inter-model swapping is ignored.
+    """
+    partition, cores = plan.partition, plan.cores
+    if force_alpha_zero:
+        alphas = [0.0] * len(tenants)
+    else:
+        alphas = swap.weight_miss_probs(tenants, partition, platform)
+
+    lam_tpu = swap.tpu_arrival_rate(tenants, partition)
+    weights, atoms = tpu_service_distribution(tenants, partition, alphas, platform)
+    es, es2 = queueing.mixture_moments(weights, atoms)
+    tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
+    rho_tpu = lam_tpu * es
+
+    per_model: list[LatencyBreakdown] = []
+    cpu_utils: list[float] = []
+    for t, p, k, a in zip(tenants, partition, cores, alphas):
+        prof = t.profile
+        P_i = prof.num_partition_points
+        on_tpu = p > 0
+        on_cpu = p < P_i
+
+        input_xfer = prof.input_bytes / platform.swap_bw if on_tpu else 0.0
+        t_wait = tpu_wait if on_tpu else 0.0
+        t_swap = a * load_time(prof, p, platform) if on_tpu else 0.0
+        t_serv = prefix_service_time(prof, p, platform) if on_tpu else 0.0
+        b_xfer = prof.boundary_bytes(p) / platform.swap_bw if on_tpu and on_cpu else 0.0
+
+        if on_cpu:
+            # The paper's runtime executes each request's suffix on one
+            # worker thread of a model-specific pool of size k_i (Sec. IV);
+            # parallelism comes from serving k_i requests concurrently, so
+            # the M/D/k pool has k servers of per-server rate 1/s_cpu(1 core).
+            s_one = prof.suffix_cpu_time(p, 1)
+            mu_one = 1.0 / s_one if s_one > 0 else math.inf
+            c_wait = queueing.mdk_wait(t.rate, mu_one, k)
+            c_serv = s_one
+            cpu_utils.append(t.rate * s_one / max(k, 1))
+        else:
+            c_wait = 0.0
+            c_serv = 0.0
+            cpu_utils.append(0.0)
+
+        per_model.append(
+            LatencyBreakdown(
+                input_xfer=input_xfer,
+                tpu_wait=t_wait,
+                tpu_swap=t_swap,
+                tpu_service=t_serv,
+                boundary_xfer=b_xfer,
+                cpu_wait=c_wait,
+                cpu_service=c_serv,
+            )
+        )
+    return SystemPrediction(
+        per_model=tuple(per_model),
+        tpu_utilization=rho_tpu,
+        cpu_utilizations=tuple(cpu_utils),
+        alphas=tuple(alphas),
+    )
+
+
+def objective(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    *,
+    force_alpha_zero: bool = False,
+) -> float:
+    """Eq. 5 objective; ``inf`` when any queue is unstable."""
+    pred = predict(tenants, plan, platform, force_alpha_zero=force_alpha_zero)
+    return pred.weighted_latency(tenants)
+
+
+# Any finite objective is < _PENALTY_BASE; overload adds gradient on top so
+# the hill-climb can walk *out* of infeasible regions (the all-CPU start is
+# often unstable at the paper's moderate loads).
+_PENALTY_BASE = 1e9
+
+
+def penalized_objective(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    *,
+    force_alpha_zero: bool = False,
+) -> float:
+    """Eq. 5 objective with a smooth infeasibility penalty.
+
+    Stable configurations return their true weighted latency.  Unstable ones
+    return ``_PENALTY_BASE * (1 + overload)`` so that moves reducing excess
+    utilization still rank as improvements -- this is what lets Algorithm 1's
+    all-CPU initialization climb into the feasible region.
+
+    This is the allocator's hot path (hundreds of evaluations per
+    re-planning); it computes the scalar objective without materializing the
+    per-model breakdown dataclasses ``predict`` builds for reporting.
+    """
+    partition, cores = plan.partition, plan.cores
+    if force_alpha_zero:
+        alphas = [0.0] * len(tenants)
+    else:
+        alphas = swap.weight_miss_probs(tenants, partition, platform)
+
+    lam_tpu = swap.tpu_arrival_rate(tenants, partition)
+    weights, atoms = tpu_service_distribution(tenants, partition, alphas, platform)
+    es, es2 = queueing.mixture_moments(weights, atoms)
+    rho_tpu = lam_tpu * es
+    tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
+
+    total = 0.0
+    overload = max(0.0, rho_tpu - 1.0)
+    bw = platform.swap_bw
+    for t, p, k, a in zip(tenants, partition, cores, alphas):
+        prof = t.profile
+        P_i = prof.num_partition_points
+        lat = 0.0
+        if p > 0:
+            lat += (
+                prof.input_bytes / bw
+                + tpu_wait
+                + a * load_time(prof, p, platform)
+                + prefix_service_time(prof, p, platform)
+            )
+            if p < P_i:
+                lat += prof.boundary_bytes(p) / bw
+        if p < P_i:
+            s_one = prof.suffix_cpu_time(p, 1)
+            overload += max(0.0, t.rate * s_one / max(k, 1) - 1.0)
+            mu_one = 1.0 / s_one if s_one > 0 else math.inf
+            lat += queueing.mdk_wait(t.rate, mu_one, k) + s_one
+        total += t.rate * lat
+    if overload == 0.0 and math.isfinite(total):
+        return total
+    return _PENALTY_BASE * (1.0 + overload)

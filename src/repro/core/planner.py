@@ -1,0 +1,169 @@
+"""Model partition plans and profiles.
+
+A model is viewed as a chain of ``Segment`` blocks separated by candidate
+partition points (the paper's offline phase enumerates these along
+single-edge cuts of the graph).  A partition point ``p`` in ``{0..P}`` places
+``segments[:p]`` on the accelerator (the "TPU prefix") and ``segments[p:]``
+on the host CPU (the "CPU suffix"); ``p == 0`` is full-CPU, ``p == P`` full-TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.hw.specs import Platform
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One partitionable block of a model, with profiled per-block costs."""
+
+    name: str
+    flops: float              # ops in this block
+    weight_bytes: int         # parameter footprint of this block
+    out_bytes: int            # activation size at the block's output boundary
+    tpu_time: float           # profiled service time on the accelerator (s)
+    cpu_time_1core: float     # profiled service time on one host core (s)
+    cpu_parallel_frac: float  # Amdahl parallel fraction for multi-core scaling
+
+    def cpu_time(self, k_cores: int) -> float:
+        """Amdahl-scaled CPU service time on ``k_cores`` cores."""
+        if k_cores <= 0:
+            return math.inf
+        f = self.cpu_parallel_frac
+        return self.cpu_time_1core * ((1.0 - f) + f / k_cores)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Offline profile of one model: segments + I/O sizes."""
+
+    name: str
+    segments: tuple[Segment, ...]
+    input_bytes: int
+
+    @property
+    def num_partition_points(self) -> int:
+        return len(self.segments)
+
+    @property
+    def total_weight_bytes(self) -> int:
+        return sum(s.weight_bytes for s in self.segments)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(s.flops for s in self.segments)
+
+    # --- cached cumulative tables (hot path of the online allocator) -----
+    @functools.cached_property
+    def _cum_weight(self) -> np.ndarray:
+        return np.concatenate(
+            [[0], np.cumsum([s.weight_bytes for s in self.segments])]
+        )
+
+    @functools.cached_property
+    def _cum_tpu(self) -> np.ndarray:
+        return np.concatenate(
+            [[0.0], np.cumsum([s.tpu_time for s in self.segments])]
+        )
+
+    @functools.cached_property
+    def _cum_cpu1(self) -> np.ndarray:
+        return np.concatenate(
+            [[0.0], np.cumsum([s.cpu_time_1core for s in self.segments])]
+        )
+
+    # --- block aggregates -----------------------------------------------
+    def prefix_weight_bytes(self, p: int) -> int:
+        return int(self._cum_weight[p])
+
+    def prefix_tpu_time(self, p: int) -> float:
+        """Pure compute time of the TPU prefix (no swap)."""
+        return float(self._cum_tpu[p])
+
+    def suffix_cpu_time(self, p: int, k_cores: int) -> float:
+        """Service time of the CPU suffix ``segments[p:]`` on ``k_cores``."""
+        if p >= len(self.segments):
+            return 0.0
+        if k_cores <= 0:
+            return math.inf
+        t1 = float(self._cum_cpu1[-1] - self._cum_cpu1[p])
+        f = self.segments[-1].cpu_parallel_frac
+        return t1 * ((1.0 - f) + f / k_cores)
+
+    def suffix_cpu_time_1core(self, p: int) -> float:
+        return float(self._cum_cpu1[-1] - self._cum_cpu1[p])
+
+    def boundary_bytes(self, p: int) -> int:
+        """Intermediate tensor size d_out at partition point ``p``."""
+        if p <= 0:
+            return self.input_bytes
+        return self.segments[p - 1].out_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One co-located model with its arrival rate (requests/s)."""
+
+    profile: ModelProfile
+    rate: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A global configuration: partition vector P and core vector K."""
+
+    partition: tuple[int, ...]
+    cores: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.partition) != len(self.cores):
+            raise ValueError("partition and cores must have equal length")
+
+
+def validate_plan(plan: Plan, tenants: Sequence[TenantSpec], k_max: int) -> None:
+    """Enforce the NLIP constraints (6)-(9)."""
+    for p_i, k_i, t in zip(plan.partition, plan.cores, tenants):
+        P_i = t.profile.num_partition_points
+        if not 0 <= p_i <= P_i:
+            raise ValueError(f"{t.profile.name}: partition {p_i} outside [0,{P_i}]")
+        if p_i < P_i and k_i < 1:
+            raise ValueError(f"{t.profile.name}: CPU suffix requires >=1 core")
+        if p_i == P_i and k_i != 0:
+            raise ValueError(f"{t.profile.name}: full-TPU must have 0 cores")
+        if k_i < 0:
+            raise ValueError("negative core count")
+    if sum(plan.cores) > k_max:
+        raise ValueError(f"core allocation {plan.cores} exceeds K_max={k_max}")
+
+
+def intra_swap_bytes(profile: ModelProfile, p: int, platform: Platform) -> int:
+    """Bytes streamed per inference due to *intra-model* swapping.
+
+    When a TPU prefix exceeds SRAM capacity ``C``, the runtime keeps the first
+    ``C`` bytes resident and streams the remainder from host memory on every
+    request (the Edge TPU runtime's sequential segment-swap behaviour).
+    """
+    return max(0, profile.prefix_weight_bytes(p) - platform.sram_bytes)
+
+
+def prefix_service_time(profile: ModelProfile, p: int, platform: Platform) -> float:
+    """s_TPU for the prefix: deterministic compute + intra-model swap."""
+    if p <= 0:
+        return 0.0
+    swap = intra_swap_bytes(profile, p, platform) / platform.swap_bw
+    return profile.prefix_tpu_time(p) + swap
+
+
+def load_time(profile: ModelProfile, p: int, platform: Platform) -> float:
+    """T_load: inter-model swap latency = resident prefix bytes / bandwidth B.
+
+    Only the portion that is (normally) resident needs reloading after an
+    eviction; the intra-swapped overflow is streamed every request anyway.
+    """
+    resident = min(profile.prefix_weight_bytes(p), platform.sram_bytes)
+    return resident / platform.swap_bw

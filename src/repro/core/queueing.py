@@ -1,0 +1,60 @@
+"""Queueing primitives from the paper's analytic model (Section III-B).
+
+* TPU: single unified M/G/1/FCFS queue; expected wait via Pollaczek-Khinchine
+  (Eq. 1) with the effective service time the lambda-weighted mixture over
+  model prefixes including inter-model swap latency (Eq. 2).
+* CPU: per-model M/D/k queues with dedicated cores (Eq. 3).
+"""
+from __future__ import annotations
+
+import math
+
+
+def mg1_wait(lam: float, es: float, es2: float) -> float:
+    """Pollaczek-Khinchine expected queueing delay for an M/G/1/FCFS queue.
+
+    Args:
+      lam: aggregate Poisson arrival rate (1/s).
+      es: E[S], mean service time (s).
+      es2: E[S^2], second moment of service time (s^2).
+
+    Returns:
+      E[W] in seconds; ``inf`` if the queue is unstable (rho >= 1).
+    """
+    if lam <= 0.0:
+        return 0.0
+    rho = lam * es
+    if rho >= 1.0:
+        return math.inf
+    return lam * es2 / (2.0 * (1.0 - rho))
+
+
+def mdk_wait(lam: float, mu: float, k: int) -> float:
+    """Approximate expected queueing delay for an M/D/k queue (Eq. 3).
+
+    E[W] ~= 1/2 * (1/(k*mu - lam) - 1/(k*mu))  -- i.e. half the M/M/1-style
+    wait of a pooled server, halved for deterministic service.
+    """
+    if lam <= 0.0:
+        return 0.0
+    if k <= 0 or mu <= 0:
+        return math.inf
+    cap = k * mu
+    if lam >= cap:
+        return math.inf
+    return 0.5 * (1.0 / (cap - lam) - 1.0 / cap)
+
+
+def mixture_moments(weights: list[float], values: list[float]) -> tuple[float, float]:
+    """First and second moments of a discrete mixture distribution.
+
+    ``weights`` need not be normalized; each request class i has a
+    *deterministic* service time ``values[i]`` and probability proportional
+    to ``weights[i]`` -- the TPU service distribution of Eq. 2.
+    """
+    tot = sum(weights)
+    if tot <= 0.0:
+        return 0.0, 0.0
+    m1 = sum(w * v for w, v in zip(weights, values)) / tot
+    m2 = sum(w * v * v for w, v in zip(weights, values)) / tot
+    return m1, m2

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticTokens, batches_for_arch
+
+__all__ = ["DataConfig", "SyntheticTokens", "batches_for_arch"]

@@ -1,0 +1,23 @@
+from repro.hw.specs import (
+    AcceleratorSpec,
+    CORAL_EDGE_TPU,
+    CORTEX_A76_QUAD,
+    EDGE_TPU_PLATFORM,
+    HostCPUSpec,
+    Platform,
+    TPU_V5E,
+    TPU_V5E_SERVING_PLATFORM,
+    TPUChipSpec,
+)
+
+__all__ = [
+    "AcceleratorSpec",
+    "CORAL_EDGE_TPU",
+    "CORTEX_A76_QUAD",
+    "EDGE_TPU_PLATFORM",
+    "HostCPUSpec",
+    "Platform",
+    "TPU_V5E",
+    "TPU_V5E_SERVING_PLATFORM",
+    "TPUChipSpec",
+]

@@ -1,0 +1,60 @@
+"""MXU-tiled blocked matmul Pallas kernel.
+
+Block sizes default to 128x128x128 (MXU-native 128-lane tiles); the K grid
+dimension iterates sequentially with a float32 VMEM accumulator, so inputs
+can be bf16 while accumulation stays full precision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K) @ y: (K, N) -> (M, N).  M, N, K must divide the blocks
+    (the ops.py wrapper pads otherwise)."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

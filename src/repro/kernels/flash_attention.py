@@ -1,0 +1,116 @@
+"""Flash-attention Pallas kernel: causal (optionally sliding-window)
+online-softmax attention.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); the KV dimension iterates
+sequentially carrying (m, l, acc) running statistics in VMEM scratch, so the
+(Sq, Sk) score matrix never exists.  Block shapes are MXU/VPU aligned
+(q/kv blocks multiples of 128 lanes where possible).
+
+The TPU adaptation of the GPU flash algorithm: instead of warp-level
+shuffles for the rescaling reductions, the row statistics live in VMEM
+scratch across sequential grid steps (TPU grids execute in order on a core),
+and all inner products are MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    window: int,          # 0 = global
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (block_q, hd)
+    k = k_ref[0]                       # (block_k, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                          # (block_q, block_k)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,     # (BH, Sq, hd)
+    k: jax.Array,     # (BH, Sk, hd)
+    v: jax.Array,     # (BH, Sk, hd)
+    *,
+    scale: float,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_kv = Sq // block_q, Sk // block_k
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv=n_kv,
+        window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

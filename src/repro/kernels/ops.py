@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU backends (this container) the kernels execute via ``interpret=True``
+-- the kernel body runs in Python for correctness validation; on TPU they
+compile to Mosaic.  Wrappers handle padding to block multiples and GQA
+head-repeat plumbing so callers keep natural shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_matmul import block_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.wkv6 import wkv6_chunked
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+) -> jax.Array:
+    """Padded tiled matmul: (M, K) @ (K, N) for arbitrary M, N, K."""
+    M, K = x.shape
+    _, N = y.shape
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, max(8, N))
+    bk = min(block_k, max(8, K))
+    x, _ = _pad_to(x, 0, bm)
+    x, _ = _pad_to(x, 1, bk)
+    y, _ = _pad_to(y, 0, bk)
+    y, _ = _pad_to(y, 1, bn)
+    out = block_matmul(
+        x, y,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype,
+        interpret=_use_interpret(),
+    )
+    return out[:M, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_q", "block_k")
+)
+def causal_attention(
+    q: jax.Array,    # (B, S, H, hd)
+    k: jax.Array,    # (B, S, KV, hd)
+    v: jax.Array,
+    *,
+    scale: float,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """GQA flash attention over natural (B, S, H, hd) layouts."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    out = flash_attention(
+        qf, kf, vf,
+        scale=scale, window=window,
+        block_q=max(bq, 1), block_k=max(bk, 1),
+        interpret=_use_interpret(),
+    )
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(
+    r: jax.Array,    # (B, T, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,    # (H, hd)
+    *,
+    chunk: int = 32,
+) -> jax.Array:
+    """RWKV6 WKV over natural (B, T, H, hd) layouts; float32 output."""
+    B, T, H, hd = r.shape
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    u_flat = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    out = wkv6_chunked(
+        flat(r), flat(k), flat(v), flat(w), u_flat,
+        chunk=max(c, 1),
+        interpret=_use_interpret(),
+    )
+    return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

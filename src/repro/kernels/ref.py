@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(out_dtype or x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,    # (BH, Sq, hd)
+    k: jax.Array,    # (BH, Sk, hd)
+    v: jax.Array,
+    *,
+    scale: float,
+    window: int = 0,
+) -> jax.Array:
+    Sq, Sk = q.shape[1], k.shape[1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def wkv6_ref(
+    r: jax.Array,    # (BH, T, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,    # (BH, 1, hd)
+) -> jax.Array:
+    """Step-by-step WKV6 recurrence (float32)."""
+    BH, T, hd = r.shape
+
+    def per_head(r_h, k_h, v_h, w_h, u_h):
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]                 # (hd, hd)
+            out = (S + u_h[0][:, None] * kv).T @ r_t          # (hd,)
+            S = w_t[:, None] * S + kv
+            return S, out
+
+        S0 = jnp.zeros((hd, hd), jnp.float32)
+        _, outs = jax.lax.scan(
+            step,
+            S0,
+            (
+                r_h.astype(jnp.float32),
+                k_h.astype(jnp.float32),
+                v_h.astype(jnp.float32),
+                w_h.astype(jnp.float32),
+            ),
+        )
+        return outs
+
+    return jax.vmap(per_head)(r, k, v, w, u.astype(jnp.float32))

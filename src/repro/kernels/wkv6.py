@@ -1,0 +1,111 @@
+"""Chunked WKV6 Pallas kernel -- the RWKV6 recurrence re-thought for TPU.
+
+The reference CUDA WKV kernel is a per-timestep sequential loop with warp
+parallelism over channels.  The TPU-native formulation processes the
+sequence in chunks of L tokens: within a chunk, the recurrence closed form
+
+    out_t = r~_t S_0 + sum_{s<t} (r~_t . k~_s) v_s + (r_t . (u*k_t)) v_t
+    S_L   = diag(c_L) (S_0 + k~^T v)
+
+with c_t = prod_{j<t} w_j (inclusive cumulative decay), r~_t = r_t * c_t,
+k~_s = k_s / c_{s+1} turns all inner work into (L x hd) x (hd x hd) MXU
+matmuls and one (L x L) strictly-lower-triangular combine -- within-chunk
+parallel, cross-chunk sequential carry in VMEM scratch.
+
+Numerics: decays are accumulated in log space within the chunk; chunk
+length bounds the dynamic range of 1/c (documented constraint: chunk_len *
+|log w| must stay within float32 range; RWKV6's w = exp(-exp(...)) < 1 and
+typically > 0.5, so chunks of 16-64 are safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
+    state_ref,
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # (L, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)        # decays in (0, 1)
+    u = u_ref[0].astype(jnp.float32)        # (1, hd) bonus
+
+    logw = jnp.log(w)
+    # c_incl[t] = prod_{j<=t} w_j ; c_excl[t] = prod_{j<t} w_j.
+    lc_incl = jnp.cumsum(logw, axis=0)
+    lc_excl = lc_incl - logw
+    r_t = r * jnp.exp(lc_excl)              # r~
+    k_t = k * jnp.exp(-lc_incl)             # k~
+
+    # Intra-chunk pairwise term, strictly lower triangular.
+    a = jax.lax.dot_general(
+        r_t, k_t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # (L, L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(cols < rows, a, 0.0)
+    # Diagonal bonus term: (r_t . (u * k_t)) v_t.
+    diag = jnp.sum(r * u * k, axis=-1)       # (L,)
+
+    out = (
+        jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + diag[:, None] * v
+        + jax.lax.dot_general(r_t, state_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    )
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # Carry: S_L = diag(c_L) (S_0 + k~^T v).
+    c_last = jnp.exp(lc_incl[-1])            # (hd,)
+    kv = jax.lax.dot_general(
+        k_t, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # (hd, hd)
+    state_ref[...] = c_last[:, None] * (state_ref[...] + kv)
+
+
+def wkv6_chunked(
+    r: jax.Array,   # (BH, T, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,   # (BH, T, hd) decays in (0, 1)
+    u: jax.Array,   # (BH, 1, hd)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, T, hd = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

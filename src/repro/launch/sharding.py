@@ -1,0 +1,259 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Baseline placement (the §Perf pass iterates on this):
+
+* batch axes -> ('pod','data') [multi-pod] or ('data',);
+* attention / MLP / RWKV / SSM matrices: column-shard the wide output dim on
+  'model', row-shard the contraction dim of output projections on 'model';
+* embeddings / lm_head: vocab on 'model';
+* MoE expert tensors: expert axis on 'data' when divisible (expert
+  parallelism -- llama4's 128 experts / 16), otherwise shard d_model on
+  'data' and d_ff on 'model' (grok's 8 experts);
+* layer-stacked leaves keep their leading (n_groups,) axis unsharded;
+* KV caches: batch on the batch axes, everything else replicated;
+* optimizer moments follow their parameter's spec.
+
+Rules are name-based over tree paths, so they apply to any arch config.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import batch_axes
+
+
+def _data_size(mesh: Mesh) -> int:
+    return mesh.shape["data"]
+
+
+def batch_axes_for(cfg: ArchConfig, mesh: Mesh) -> tuple[str, ...]:
+    """FSDP shards the batch over every mesh axis; zero3/TP over pod/data."""
+    if cfg.parallelism == "fsdp":
+        return tuple(mesh.axis_names)
+    return batch_axes(mesh)
+
+
+def _fsdp_spec(path: str, leaf, mesh: Mesh) -> P:
+    """ZeRO-3: shard each tensor's largest dim over ALL mesh axes."""
+    stacked = "groups" in path
+    shape = leaf.shape
+    start = 1 if stacked else 0
+    if leaf.ndim - start < 1:
+        return P(*([None] * leaf.ndim))
+    all_axes = tuple(mesh.axis_names)
+    extent = 1
+    for a in all_axes:
+        extent *= mesh.shape[a]
+    # Pick the largest divisible dim (prefer later dims on ties -- weight
+    # matrices put d_model/d_ff there).
+    best = None
+    for i in range(start, leaf.ndim):
+        if shape[i] % extent == 0 and (best is None or shape[i] >= shape[best]):
+            best = i
+    spec = [None] * leaf.ndim
+    if best is not None:
+        spec[best] = all_axes
+    return P(*spec)
+
+
+def _spec_for_param(path: str, leaf, cfg: ArchConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (path = jax keystr)."""
+    stacked = "groups" in path          # leading (n_groups,) axis
+    lead: tuple = (None,) if stacked else ()
+
+    def p(*axes):
+        return P(*lead, *axes)
+
+    nd = leaf.ndim - (1 if stacked else 0)
+
+    # --- top-level ---------------------------------------------------------
+    if "embed" in path:
+        return P("model", None)
+    if "lm_head" in path:
+        return P(None, "model")
+    if "frontend_proj" in path:
+        return P(None, "model")
+    if "final_norm" in path:
+        return P(None)
+
+    # --- MoE ---------------------------------------------------------------
+    if "moe" in path:
+        if "router" in path:
+            return p(None, None)
+        E = cfg.n_experts
+        model_size = mesh.shape["model"]
+        if E % _data_size(mesh) == 0:
+            # Expert parallel over 'data' + d_ff over 'model' (llama4: 128e).
+            if "w_out" in path:  # (E, F, D)
+                return p("data", "model", None)
+            return p("data", None, "model")
+        if E % model_size == 0:
+            # Expert parallel over 'model' + d_ff over 'data' -- reachable by
+            # refactoring the logical mesh (grok: 8e on a 32x8 mesh).  The
+            # contraction dim stays unsharded so the expert matmuls produce
+            # no partial sums (no (G,E,C,F) all-reduce).
+            if "w_out" in path:
+                return p("model", "data", None)
+            return p("model", None, "data")
+        # Tensor-parallel fallback: shard inside each expert.
+        if "w_out" in path:
+            return p(None, "model", "data")
+        return p(None, "data", "model")
+
+    # --- attention -----------------------------------------------------------
+    if "attn" in path:
+        if path.endswith("['wo']"):
+            return p("model", None)
+        if "wq" in path or "wk" in path or "wv" in path:
+            return p(None, "model")
+        if "bq" in path or "bk" in path or "bv" in path:
+            return p("model")
+        return p(*([None] * nd))
+
+    # --- RWKV ----------------------------------------------------------------
+    if "rwkv" in path:
+        if any(k in path for k in ("['wr']", "['wk']", "['wv']", "['wg']", "['ck']")):
+            return p(None, "model")
+        if "['wo']" in path or "['cv']" in path:
+            return p("model", None)
+        if "['cr']" in path:
+            return p(None, "model")
+        if "w_lora_a" in path:
+            return p(None, None)
+        if "w_lora_b" in path:
+            return p(None, "model")
+        return p(*([None] * nd))
+
+    # --- SSM (hymba) -----------------------------------------------------------
+    if "ssm" in path:
+        if any(k in path for k in ("w_in", "w_gate", "w_dt")):
+            return p(None, "model")
+        if "w_out" in path:
+            return p("model", None)
+        return p(*([None] * nd))
+
+    # --- dense MLP ---------------------------------------------------------------
+    if "mlp" in path:
+        if "w_out" in path:
+            return p("model", None)
+        return p(None, "model")
+
+    # --- norms & anything else: replicate -------------------------------------
+    return p(*([None] * nd))
+
+
+def _sanitize(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec axes whose mesh extent doesn't divide the dim (jax requires
+    divisible input shardings; e.g. hymba's vocab of 32001)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        out.append(entry if shape[i] % extent == 0 else None)
+    return P(*out)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_like: Any) -> Any:
+    """NamedSharding pytree matching ``params_like`` (arrays or SDS)."""
+
+    def assign(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        if cfg.parallelism in ("fsdp", "zero3"):
+            spec = _fsdp_spec(ks, leaf, mesh)
+        else:
+            spec = _spec_for_param(ks, leaf, cfg, mesh)
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, params_like)
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh: Mesh, opt_like: Any) -> Any:
+    """Moments follow their parameter's sharding; step is replicated."""
+
+    def assign(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        if "step" in ks:
+            return NamedSharding(mesh, P())
+        # strip the leading ['m'] / ['v'] container key
+        if cfg.parallelism in ("fsdp", "zero3"):
+            spec = _fsdp_spec(ks, leaf, mesh)
+        else:
+            spec = _spec_for_param(ks, leaf, cfg, mesh)
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, opt_like)
+
+
+def _best_batch_axes(
+    preferred: tuple[str, ...], batch_dim: int, mesh: Mesh
+) -> tuple[str, ...] | None:
+    """Longest divisible suffix fallback: full axes, then drop leading axes
+    until the batch dim divides (e.g. global_batch=32 on a 2x32x8 mesh:
+    ('pod','data')=64 fails -> ('data',)=32 works).  Prevents the sanitizer
+    from silently replicating the whole batch."""
+    for start in range(len(preferred)):
+        cand = preferred[start:]
+        extent = 1
+        for a in cand:
+            extent *= mesh.shape[a]
+        if extent and batch_dim % extent == 0:
+            return cand
+    return None
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, batch_like: Any) -> Any:
+    axes = batch_axes_for(cfg, mesh)
+
+    def assign(path, leaf):
+        best = _best_batch_axes(axes, leaf.shape[0], mesh)
+        rest = (None,) * (leaf.ndim - 1)
+        spec = P(best, *rest) if best else P(None, *rest)
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_like)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, caches_like: Any) -> Any:
+    """Decode caches.
+
+    KV caches (B, S, KV, hd): batch over the batch axes when divisible, and
+    the *sequence* dim over 'model' when divisible -- KV-head counts rarely
+    divide the model axis (grok kv=8 vs model=16), but the 32k/500k sequence
+    always does, and seq-sharding is what keeps a 1 TB cache at ~4 GB/chip.
+    Attention over a seq-sharded cache costs an all-gather of per-position
+    logits (small at decode).  SSM/RWKV states: batch only.
+    """
+    axes = batch_axes_for(cfg, mesh)
+    model_size = mesh.shape["model"]
+
+    def assign(path, leaf):
+        key = jax.tree_util.keystr(path)
+        b = leaf.shape[0]
+        batch_spec = _best_batch_axes(axes, b, mesh)
+        is_kv = key.endswith("['k']") or key.endswith("['v']")
+        if is_kv and leaf.ndim == 4:
+            s = leaf.shape[1]
+            seq_spec = "model" if s % model_size == 0 else None
+            return NamedSharding(
+                mesh,
+                _sanitize(P(batch_spec, seq_spec, None, None), leaf.shape, mesh),
+            )
+        rest = (None,) * (leaf.ndim - 1)
+        return NamedSharding(
+            mesh, _sanitize(P(batch_spec, *rest), leaf.shape, mesh)
+        )
+
+    return jax.tree_util.tree_map_with_path(assign, caches_like)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

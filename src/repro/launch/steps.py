@@ -1,0 +1,180 @@
+"""Step builders: (step_fn, abstract inputs, in/out shardings) per
+(arch x input-shape), shared by the dry-run, the roofline analysis, and the
+real launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.models.frontend import decode_token_specs, train_input_specs
+from repro.models.transformer import (
+    decode_step,
+    init_decode_caches,
+    init_params,
+    prefill_step,
+)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, make_train_step
+
+BIG_MODEL_PARAMS = 50e9  # above this, keep Adam moments in bf16
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to jit/lower one step."""
+
+    fn: Callable
+    args: tuple            # abstract (ShapeDtypeStruct) arguments
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    description: str = ""
+
+
+def _abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _n_batch_shards(mesh: Mesh, cfg: ArchConfig | None = None) -> int:
+    from repro.launch.sharding import batch_axes_for
+
+    axes = batch_axes_for(cfg, mesh) if cfg is not None else batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def train_config_for(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> TrainConfig:
+    n_shards = _n_batch_shards(mesh, cfg)
+    n_micro = max(shape.global_batch // n_shards, 1)
+    moments = (
+        jnp.bfloat16 if cfg.param_count() > BIG_MODEL_PARAMS else jnp.float32
+    )
+    return TrainConfig(
+        optimizer=AdamWConfig(moments_dtype=moments),
+        n_microbatches=n_micro,
+        remat=True,
+        remat_policy=cfg.remat_policy,
+    )
+
+
+def build_train(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> StepBundle:
+    tcfg = train_config_for(cfg, shape, mesh)
+    step = make_train_step(cfg, tcfg)
+
+    params_sds = _abstract_params(cfg)
+    from repro.training.optimizer import adamw_init
+
+    opt_sds = jax.eval_shape(partial(adamw_init, cfg=tcfg.optimizer), params_sds)
+    batch_sds = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+
+    p_shard = shd.param_shardings(cfg, mesh, params_sds)
+    o_shard = shd.opt_state_shardings(cfg, mesh, opt_sds)
+    b_shard = shd.batch_shardings(cfg, mesh, batch_sds)
+    metrics_shard = {
+        "loss": shd.replicated(mesh),
+        "grad_norm": shd.replicated(mesh),
+    }
+    return StepBundle(
+        fn=step,
+        args=(params_sds, opt_sds, batch_sds),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1),
+        description=f"train_step[{cfg.name} x {shape.name}] "
+        f"(micro={tcfg.n_microbatches})",
+    )
+
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> StepBundle:
+    params_sds = _abstract_params(cfg)
+    batch_sds = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+    batch_sds.pop("labels")
+
+    def fn(params, batch):
+        return prefill_step(cfg, params, batch, max_len=shape.seq_len)
+
+    caches_sds = jax.eval_shape(
+        lambda: init_decode_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+    p_shard = shd.param_shardings(cfg, mesh, params_sds)
+    b_shard = shd.batch_shardings(cfg, mesh, batch_sds)
+    c_shard = shd.cache_shardings(cfg, mesh, caches_sds)
+    logits_shape = (shape.global_batch, 1, cfg.vocab_size)
+    from repro.launch.sharding import batch_axes_for
+    vocab_ax = None if cfg.parallelism == "fsdp" else "model"
+    logits_shard = NamedSharding(
+        mesh,
+        shd._sanitize(
+            P(batch_axes_for(cfg, mesh), None, vocab_ax), logits_shape, mesh
+        ),
+    )
+    return StepBundle(
+        fn=fn,
+        args=(params_sds, batch_sds),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+        description=f"prefill_step[{cfg.name} x {shape.name}]",
+    )
+
+
+def build_decode(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> StepBundle:
+    params_sds = _abstract_params(cfg)
+    caches_sds = jax.eval_shape(
+        lambda: init_decode_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+    tok_sds = decode_token_specs(cfg, shape.global_batch)
+    len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, caches, tokens, cur_len):
+        return decode_step(cfg, params, caches, tokens, cur_len)
+
+    p_shard = shd.param_shardings(cfg, mesh, params_sds)
+    c_shard = shd.cache_shardings(cfg, mesh, caches_sds)
+    from repro.launch.sharding import batch_axes_for
+    b = shape.global_batch
+    baxes = batch_axes_for(cfg, mesh)
+    t_spec = (
+        P(baxes, None)
+        if b % _n_batch_shards(mesh, cfg) == 0
+        else P(None, None)
+    )
+    if cfg.frontend == "audio":
+        t_spec = P(*t_spec, None)
+    t_shard = NamedSharding(mesh, t_spec)
+    l_shard = shd.replicated(mesh)
+    vocab_ax = None if cfg.parallelism == "fsdp" else "model"
+    logits_spec = (
+        P(baxes, None, vocab_ax)
+        if b % _n_batch_shards(mesh, cfg) == 0
+        else P(None, None, vocab_ax)
+    )
+    logits_spec = shd._sanitize(logits_spec, (b, 1, cfg.vocab_size), mesh)
+    return StepBundle(
+        fn=fn,
+        args=(params_sds, caches_sds, tok_sds, len_sds),
+        in_shardings=(p_shard, c_shard, t_shard, l_shard),
+        out_shardings=(NamedSharding(mesh, logits_spec), c_shard),
+        donate_argnums=(1,),
+        description=f"decode_step[{cfg.name} x {shape.name}]",
+    )
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> StepBundle:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return build_decode(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,83 @@
+"""Training launcher.
+
+On real TPU pods this drives the full configs over the production mesh; on
+this CPU container use ``--reduced`` (smoke-scale variants).  Example:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 50 --batch 8 --seq 128 --log-every 10
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.pipeline import batches_for_arch
+from repro.models.transformer import init_params
+from repro.training.checkpoint import save
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.schedule import cosine_schedule, wsd_schedule
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", choices=["wsd", "cosine"], default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    # MiniCPM trains with WSD (its signature contribution); others cosine.
+    sched_name = args.schedule or ("wsd" if "minicpm" in cfg.name else "cosine")
+    sched = wsd_schedule if sched_name == "wsd" else cosine_schedule
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        n_microbatches=args.microbatches,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(args.seed), dtype=jnp.float32)
+    opt_state = adamw_init(params, tcfg.optimizer)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M schedule={sched_name}")
+
+    data = batches_for_arch(cfg, args.batch, args.seq, seed=args.seed)
+    t0 = time.time()
+    first = last = None
+    for step, batch in zip(range(args.steps), data):
+        lr_scale = sched(step, total_steps=args.steps)
+        params, opt_state, metrics = step_fn(params, opt_state, batch, lr_scale)
+        loss = float(metrics["loss"])
+        if first is None:
+            first = loss
+        last = loss
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(
+                f"step {step:5d} loss {loss:8.4f} gnorm "
+                f"{float(metrics['grad_norm']):8.3f} lr x{float(lr_scale):.3f} "
+                f"({dt:.1f}s)"
+            )
+    print(f"loss: {first:.4f} -> {last:.4f}")
+    if args.checkpoint:
+        save(args.checkpoint, params, {"arch": cfg.name, "steps": args.steps})
+        print(f"checkpoint saved to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.models.transformer import (
+    backbone,
+    count_params,
+    decode_step,
+    forward_loss,
+    init_decode_caches,
+    init_params,
+)
+
+__all__ = [
+    "backbone",
+    "count_params",
+    "decode_step",
+    "forward_loss",
+    "init_decode_caches",
+    "init_params",
+]

@@ -1,0 +1,220 @@
+"""GQA attention block: projections + RoPE + masked attention + KV cache.
+
+Supports per-layer local/global switching via a traced ``window`` value so a
+single scanned layer stack can interleave sliding-window and full-attention
+layers (gemma3 5:1, llama4 iRoPE-style, hymba SWA).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    attention_chunked,
+    attention_plain,
+    causal_window_mask,
+    repeat_kv,
+)
+
+CHUNKED_SEQ_THRESHOLD = 2048  # use online-softmax path at/above this length
+
+
+def attn_init(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool,
+    dtype,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d_model)
+    so = 1.0 / np.sqrt(n_heads * head_dim)
+    p: Params = {
+        "wq": (jax.random.normal(kq, (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, n_kv_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, n_kv_heads * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads * head_dim, d_model)) * so).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def attn_param_count(
+    d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, qkv_bias: bool
+) -> int:
+    n = d_model * head_dim * (2 * n_heads + 2 * n_kv_heads)
+    if qkv_bias:
+        n += head_dim * (n_heads + 2 * n_kv_heads)
+    return n
+
+
+def _project_qkv(x, p, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (
+        q.reshape(B, S, n_heads, head_dim),
+        k.reshape(B, S, n_kv_heads, head_dim),
+        v.reshape(B, S, n_kv_heads, head_dim),
+    )
+
+
+def attn_forward(
+    x: jax.Array,
+    p: Params,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: jax.Array | int,
+    positions: jax.Array | None = None,
+    return_kv: bool = False,
+):
+    """Full-sequence (training / prefill) attention.  x: (B, S, D).
+
+    ``return_kv=True`` additionally returns the post-RoPE (k, v) in
+    (B, S, KV, hd) layout for KV-cache construction during prefill.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k_kv, v_kv = _project_qkv(x, p, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k_kv = apply_rope(k_kv, positions, rope_theta)
+    k = repeat_kv(k_kv, n_heads // n_kv_heads)
+    v = repeat_kv(v_kv, n_heads // n_kv_heads)
+    scale = 1.0 / np.sqrt(head_dim)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    if S >= CHUNKED_SEQ_THRESHOLD:
+        out = attention_chunked(q, k, v, pos1d, pos1d, window, scale)
+    else:
+        mask = causal_window_mask(pos1d, pos1d, window)
+        out = attention_plain(q, k, v, mask, scale)
+    out = out.reshape(B, S, n_heads * head_dim) @ p["wo"]
+    if return_kv:
+        return out, k_kv, v_kv
+    return out
+
+
+def _gqa_cache_attention(
+    q: jax.Array,          # (B, 1, H, hd)
+    k_cache: jax.Array,    # (B, S, KV, hd)
+    v_cache: jax.Array,    # (B, S, KV, hd)
+    mask: jax.Array,       # (S,) bool
+    scale: float,
+) -> jax.Array:
+    """Decode attention against a (possibly seq-sharded) cache.
+
+    Grouped einsums instead of ``repeat_kv``: broadcasting query heads over
+    their KV group never reshapes the cache, so a cache whose sequence dim is
+    sharded over 'model' STAYS sharded -- GSPMD reduces the softmax stats and
+    the weighted-V contraction with tiny all-reduces instead of all-gathering
+    the multi-GB cache (distributed flash-decode; EXPERIMENTS.md §Perf C).
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                           # (B, KV, G, 1, S)
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    denom = p_.sum(axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p_.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    ) / denom.reshape(B, 1, KV, G, 1)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attn_decode_step(
+    x: jax.Array,
+    p: Params,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: jax.Array | int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with a KV cache.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S_max, KV, hd); cur_len: scalar count
+    of valid cache entries.  Returns (out, new_k_cache, new_v_cache).
+    """
+    B, _, _ = x.shape
+    S_max = k_cache.shape[1]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, cur_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, cur_len, axis=1)
+
+    scale = 1.0 / np.sqrt(head_dim)
+    kv_pos = jnp.arange(S_max)
+    window = jnp.asarray(window)
+    valid = kv_pos <= cur_len
+    in_window = jnp.where(window > 0, cur_len - kv_pos < window, True)
+    mask = valid & in_window                                   # (S_max,)
+    out = _gqa_cache_attention(q, k_cache, v_cache, mask, scale)
+    out = out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def attn_decode_step_ring(
+    x: jax.Array,
+    p: Params,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a *ring-buffered* sliding-window cache.
+
+    The cache holds only the last ``W`` tokens (W = cache size); slot
+    ``cur_len % W`` is overwritten each step.  RoPE is applied with absolute
+    positions at insertion, so attention logits need no per-slot position
+    bookkeeping -- only an occupancy mask.  This is what makes long_500k
+    decode memory O(window) instead of O(seq) for local layers.
+    """
+    B, _, _ = x.shape
+    W = k_cache.shape[1]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    slot = jnp.mod(cur_len, W)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
+
+    scale = 1.0 / np.sqrt(head_dim)
+    occupied = jnp.arange(W) <= cur_len  # ring fully valid once len >= W
+    out = _gqa_cache_attention(q, k_cache, v_cache, occupied, scale)
+    out = out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
+    return out, k_cache, v_cache

@@ -1,0 +1,101 @@
+"""Partitionable convolutional model families (the paper's Table II models).
+
+These are real, runnable JAX conv nets used by the serving-engine
+integration path and examples: each model is a chain of *stages* (the
+paper's partition points) so the SwapLess planner can split them between
+the accelerator worker and CPU pools.  Channel widths are chosen per family
+so stage weight footprints follow the back-loaded distribution used by the
+synthetic profiles.  (Latency *validation* uses the calibrated profiles +
+DES; these nets prove the execution plumbing with real tensors.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import ExecutableModel
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNSpec:
+    name: str
+    stage_channels: tuple[int, ...]   # output channels per stage
+    in_size: int = 64                 # input spatial resolution
+    in_channels: int = 3
+    kernel: int = 3
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def init_cnn(spec: CNNSpec, key: jax.Array, dtype=jnp.float32) -> list[dict]:
+    """One params dict per stage: conv + pointwise conv."""
+    params = []
+    c_in = spec.in_channels
+    for i, c_out in enumerate(spec.stage_channels):
+        key, k1, k2 = jax.random.split(key, 3)
+        fan = spec.kernel * spec.kernel * c_in
+        params.append(
+            {
+                "conv": (
+                    jax.random.normal(k1, (spec.kernel, spec.kernel, c_in, c_out))
+                    / np.sqrt(fan)
+                ).astype(dtype),
+                "pw": (
+                    jax.random.normal(k2, (1, 1, c_out, c_out)) / np.sqrt(c_out)
+                ).astype(dtype),
+            }
+        )
+        c_in = c_out
+    return params
+
+
+def stage_fn(p: dict, downsample: bool) -> Callable[[jax.Array], jax.Array]:
+    def fn(x: jax.Array) -> jax.Array:
+        y = jax.nn.relu(_conv(x, p["conv"], stride=2 if downsample else 1))
+        return jax.nn.relu(_conv(y, p["pw"]))
+    return fn
+
+
+def build_executable(
+    spec: CNNSpec, seed: int = 0, jit_stages: bool = True
+) -> ExecutableModel:
+    params = init_cnn(spec, jax.random.PRNGKey(seed))
+    segs = []
+    for i, p in enumerate(params):
+        fn = stage_fn(p, downsample=(i % 2 == 0))
+        segs.append(jax.jit(fn) if jit_stages else fn)
+
+    def make_input(seed2: int) -> jax.Array:
+        return jax.random.normal(
+            jax.random.PRNGKey(seed2),
+            (1, spec.in_size, spec.in_size, spec.in_channels),
+        )
+
+    return ExecutableModel(name=spec.name, segments=tuple(segs), make_input=make_input)
+
+
+# Reduced-scale counterparts of the paper's models (stage count == Table II
+# partition points; widths grow with depth like the real families).
+PAPER_CNN_SPECS: dict[str, CNNSpec] = {
+    "squeezenet": CNNSpec("squeezenet", (16, 32)),
+    "mobilenetv2": CNNSpec("mobilenetv2", (8, 16, 24, 32, 48)),
+    "efficientnet": CNNSpec("efficientnet", (8, 16, 24, 32, 48, 64)),
+    "mnasnet": CNNSpec("mnasnet", (8, 16, 16, 24, 32, 48, 64)),
+    "gpunet": CNNSpec("gpunet", (16, 32, 48, 64, 96)),
+    "densenet201": CNNSpec("densenet201", (16, 24, 32, 48, 64, 96, 128)),
+    "resnet50v2": CNNSpec("resnet50v2", (16, 24, 32, 48, 64, 96, 128, 160)),
+    "xception": CNNSpec("xception", (8, 16, 24, 32, 48, 64, 96, 128, 160, 192, 224)),
+    "inceptionv4": CNNSpec("inceptionv4", (8, 16, 24, 32, 48, 64, 96, 128, 160, 192, 256)),
+}

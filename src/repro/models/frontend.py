@@ -1,0 +1,86 @@
+"""Modality-frontend stubs + batch/spec builders for every arch x shape.
+
+Per the assignment carve-out, the vision encoder (ViT/SigLIP) and the audio
+codec (EnCodec/mel+conv) are NOT implemented; ``input_specs`` provides
+precomputed patch/frame embeddings of the right shape, and concrete batches
+for smoke tests are drawn from a PRNG.  The learned projector that maps
+frontend features into d_model lives in the transformer params.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+EMBED_DTYPE = jnp.bfloat16
+
+
+def train_input_specs(
+    cfg: ArchConfig, batch: int, seq_len: int
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a train/prefill step (no allocation)."""
+    if cfg.frontend == "vision":
+        s_text = seq_len - cfg.n_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.n_patches, cfg.frontend_dim), EMBED_DTYPE
+            ),
+            "labels": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+        }
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct(
+                (batch, seq_len, cfg.frontend_dim), EMBED_DTYPE
+            ),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+
+
+def decode_token_specs(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((batch, 1, cfg.frontend_dim), EMBED_DTYPE)
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def make_train_batch(
+    cfg: ArchConfig, batch: int, seq_len: int, seed: int = 0
+) -> dict[str, Any]:
+    """Concrete random batch matching train_input_specs (smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.frontend == "vision":
+        s_text = seq_len - cfg.n_patches
+        return {
+            "tokens": jax.random.randint(k1, (batch, s_text), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(
+                k2, (batch, cfg.n_patches, cfg.frontend_dim), EMBED_DTYPE
+            ),
+            "labels": jax.random.randint(k3, (batch, s_text), 0, cfg.vocab_size),
+        }
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.random.normal(
+                k1, (batch, seq_len, cfg.frontend_dim), EMBED_DTYPE
+            ),
+            "labels": jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size),
+    }
+
+
+def make_decode_token(cfg: ArchConfig, batch: int, seed: int = 0) -> Any:
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "audio":
+        return jax.random.normal(key, (batch, 1, cfg.frontend_dim), EMBED_DTYPE)
+    return jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)

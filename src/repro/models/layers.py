@@ -1,0 +1,200 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+All modules are plain functions over parameter pytrees so that layer stacks
+can be ``lax.scan``-ed with stacked weights (HLO size O(1) in depth) and
+partitioned at block boundaries by the SwapLess planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Normalization
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def causal_window_mask(
+    q_pos: jax.Array, kv_pos: jax.Array, window: jax.Array | int
+) -> jax.Array:
+    """(Q, K) boolean mask: causal, optionally restricted to a local window.
+
+    ``window`` <= 0 means unrestricted (global/full attention); a traced
+    value is allowed so one scanned layer stack can mix local/global layers
+    via a per-layer flag.
+    """
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    causal = k <= q
+    window = jnp.asarray(window)
+    in_window = jnp.where(window > 0, q - k < window, True)
+    return causal & in_window
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+    ).reshape(b, s, kv * n_rep, hd)
+
+
+def attention_plain(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    scale: float,
+) -> jax.Array:
+    """Reference attention.  q:(B,Sq,H,hd) k,v:(B,Sk,H,hd) mask:(Sq,Sk)."""
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    window: jax.Array | int,
+    scale: float,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Scans over query chunks; inside each, scans over KV chunks maintaining
+    (m, l, acc) running statistics.  Never materializes the (Sq, Sk) score
+    matrix -- required to even *lower* prefill_32k within HBM.  This is also
+    the numerical oracle for the Pallas flash kernel.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_positions.reshape(nq, q_chunk)
+    ks = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kpos = kv_positions.reshape(nk, kv_chunk)
+
+    def q_block(carry, q_item):
+        qb, qp = q_item  # (B,qc,H,hd), (qc,)
+
+        def kv_block(state, kv_item):
+            m, l, acc = state
+            kb, vb, kp = kv_item
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            mask = causal_window_mask(qp, kp, window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (ks, vs, kpos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,qc,H,hd)
+
+    _, outs = jax.lax.scan(q_block, None, (qs, qpos))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+def mlp_forward(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    """kind: swiglu | gelu | relu2 (Nemotron squared-ReLU)."""
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+        return h @ p["w_out"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    if kind == "relu2":
+        return jnp.square(jax.nn.relu(x @ p["w_in"])) @ p["w_out"]
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    p: Params = {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (
+            jax.random.normal(k3, (d_model, d_ff)) * scale_in
+        ).astype(dtype)
+    return p
+
+
+def mlp_param_count(d_model: int, d_ff: int, kind: str) -> int:
+    n = 2 * d_model * d_ff
+    if kind == "swiglu":
+        n += d_model * d_ff
+    return n

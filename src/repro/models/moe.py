@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with GShard-style capacity-bounded dense dispatch.
+
+TPU adaptation note (DESIGN.md Sec. 2): CUDA MoE stacks use ragged
+gather/scatter + NCCL all-to-all.  The TPU-native formulation keeps dispatch
+as dense one-hot einsums (MXU-friendly, statically shaped) with a capacity
+bound; expert weights shard over the mesh ('data' on the expert axis when
+divisible, 'model' on d_ff), and GSPMD lowers the dispatch einsums into
+all-to-all/all-gather collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params
+from repro.models.sharding_utils import constrain
+
+
+def moe_init(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    dtype,
+) -> Params:
+    kr, kg, ki, ko = jax.random.split(key, 4)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "router": (jax.random.normal(kr, (d_model, n_experts)) * s_in).astype(
+            jnp.float32
+        ),
+        "w_gate": (
+            jax.random.normal(kg, (n_experts, d_model, d_ff)) * s_in
+        ).astype(dtype),
+        "w_in": (
+            jax.random.normal(ki, (n_experts, d_model, d_ff)) * s_in
+        ).astype(dtype),
+        "w_out": (
+            jax.random.normal(ko, (n_experts, d_ff, d_model)) * s_out
+        ).astype(dtype),
+    }
+
+
+def moe_param_count(d_model: int, d_ff: int, n_experts: int) -> int:
+    return d_model * n_experts + n_experts * 3 * d_model * d_ff
+
+
+def expert_capacity(
+    n_tokens: int, n_experts: int, k: int, capacity_factor: float
+) -> int:
+    cap = int(np.ceil(n_tokens * k * capacity_factor / n_experts))
+    return max(8, int(np.ceil(cap / 8)) * 8)  # pad for tiling friendliness
+
+
+@dataclasses.dataclass
+class MoEOutput:
+    y: jax.Array
+    aux_loss: jax.Array          # load-balance loss (Shazeer-style)
+    router_entropy: jax.Array
+
+
+def _moe_groups(
+    xg: jax.Array,           # (G, gs, D) token groups
+    p: Params,
+    k: int,
+    C: int,
+    weight_gather: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Capacity-bounded dispatch within each group.
+
+    Returns (y (G, gs, D), frac_tokens (E,), frac_probs (E,)).  The dispatch
+    tensor is (G, gs, E, C) -- bounded by the group size, not the global
+    token count, which is what keeps 32k-sequence prefill lowerable.
+    """
+    G, gs, D = xg.shape
+    E = p["router"].shape[-1]
+
+    logits = xg.astype(jnp.float32) @ p["router"]              # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G, gs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    assign = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)    # (G, gs, k, E)
+    gates_te = jnp.einsum("gtk,gtke->gte", gate_vals, assign)
+    mask_te = assign.sum(2)                                    # (G, gs, E)
+    pos_te = jnp.cumsum(mask_te, axis=1) - mask_te             # within-group
+    keep = mask_te * (pos_te < C)
+    pos_cl = jnp.minimum(pos_te, C - 1).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(pos_cl, C, dtype=xg.dtype)        # (G, gs, E, C)
+    dispatch = slot_oh * keep[..., None].astype(xg.dtype)
+    combine = dispatch * gates_te[..., None].astype(xg.dtype)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xg, dispatch)            # (G, E, C, D)
+    w_gate, w_in, w_out = p["w_gate"], p["w_in"], p["w_out"]
+    if weight_gather:
+        # Expert-parallel compute layout (grok-style E-over-'model'):
+        #  * expert weights: keep E sharded, all-gather the intra-expert
+        #    shards at use (~MB slices) instead of all-reducing the ~GB
+        #    (G,E,C,F) partial sums a sharded-D contraction would produce;
+        #  * dispatched tokens: shard the capacity dim over 'data' so the
+        #    FFN flops stay 256-way sharded (E x C) with no partial sums.
+        w_gate = constrain(w_gate, "model", None, None)
+        w_in = constrain(w_in, "model", None, None)
+        w_out = constrain(w_out, "model", None, None)
+        xe = constrain(xe, None, "model", "data", None)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, w_gate)
+    ) * jnp.einsum("gecd,edf->gecf", xe, w_in)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_out)
+    if weight_gather:
+        ye = constrain(ye, None, "model", "data", None)
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)
+    return y, mask_te.mean((0, 1)), probs.mean((0, 1))
+
+
+def moe_ffn(
+    x: jax.Array,
+    p: Params,
+    *,
+    k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+    scan_group_chunk: int = 64,
+    weight_gather: bool = False,
+) -> MoEOutput:
+    """x: (B, S, D) -> (B, S, D) via grouped top-k capacity dispatch.
+
+    Tokens are split into groups of ``group_size`` (GShard-style) with
+    per-group capacity; when there are many groups (long prefill) the groups
+    are processed ``scan_group_chunk`` at a time under lax.map to bound live
+    memory.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    T = B * S
+    gs = min(group_size, T)
+    while T % gs:
+        gs //= 2
+    gs = max(gs, 1)
+    G = T // gs
+    C = expert_capacity(gs, E, k, capacity_factor)
+    xg = x.reshape(G, gs, D)
+
+    if G > scan_group_chunk and G % scan_group_chunk == 0:
+        n_chunks = G // scan_group_chunk
+        xc = xg.reshape(n_chunks, scan_group_chunk, gs, D)
+        y, ft, fp = jax.lax.map(
+            lambda xi: _moe_groups(xi, p, k, C, weight_gather), xc
+        )
+        y = y.reshape(G, gs, D)
+        frac_tokens, frac_probs = ft.mean(0), fp.mean(0)
+    else:
+        y, frac_tokens, frac_probs = _moe_groups(xg, p, k, C, weight_gather)
+
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    entropy = -jnp.sum(frac_probs * jnp.log(frac_probs + 1e-9))
+    return MoEOutput(
+        y=y.reshape(B, S, D).astype(x.dtype),
+        aux_loss=aux,
+        router_entropy=entropy,
+    )

@@ -1,0 +1,241 @@
+"""RWKV6 ("Finch") block: attention-free time-mix with data-dependent decay.
+
+The WKV6 recurrence per head (state S in R^{hd x hd}):
+
+    out_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+
+with w_t = exp(-exp(w0 + lora(x_t))) the *data-dependent* decay -- the
+paper's headline feature (arXiv:2404.05892).  Token-shift interpolation uses
+static mu parameters (the low-rank data-dependent shift of full RWKV6 is
+orthogonal to the systems behaviour studied here; noted in DESIGN.md).
+
+TPU adaptation: the CUDA WKV kernel is re-expressed as (a) a lax.scan
+recurrence (HLO = one While op, O(1) program size in T) for the reference
+path and (b) a chunked formulation (kernels/rwkv*) that turns the inner work
+into MXU matmuls -- within-chunk parallel, cross-chunk sequential carry.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params, rms_norm
+
+
+def rwkv_init(
+    key: jax.Array, d_model: int, d_ff: int, n_heads: int, decay_rank: int, dtype
+) -> Params:
+    head_dim = d_model // n_heads
+    keys = jax.random.split(key, 10)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        # time-mix
+        "mu": jnp.full((5, d_model), 0.5, dtype),  # r,k,v,w,g lerp coeffs
+        "w0": jnp.full((n_heads, head_dim), -2.0, jnp.float32),
+        "w_lora_a": (jax.random.normal(keys[0], (d_model, decay_rank)) * s).astype(dtype),
+        "w_lora_b": (
+            jax.random.normal(keys[1], (decay_rank, d_model)) / np.sqrt(decay_rank)
+        ).astype(dtype),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),
+        "wr": (jax.random.normal(keys[2], (d_model, d_model)) * s).astype(dtype),
+        "wk": (jax.random.normal(keys[3], (d_model, d_model)) * s).astype(dtype),
+        "wv": (jax.random.normal(keys[4], (d_model, d_model)) * s).astype(dtype),
+        "wg": (jax.random.normal(keys[5], (d_model, d_model)) * s).astype(dtype),
+        "wo": (jax.random.normal(keys[6], (d_model, d_model)) * s).astype(dtype),
+        "ln_x": jnp.zeros((d_model,), dtype),
+        # channel-mix (squared-relu, RWKV convention)
+        "mu_c": jnp.full((2, d_model), 0.5, dtype),
+        "ck": (jax.random.normal(keys[7], (d_model, d_ff)) * s).astype(dtype),
+        "cv": (
+            jax.random.normal(keys[8], (d_ff, d_model)) / np.sqrt(d_ff)
+        ).astype(dtype),
+        "cr": (jax.random.normal(keys[9], (d_model, d_model)) * s).astype(dtype),
+    }
+
+
+def rwkv_param_count(d_model: int, d_ff: int, decay_rank: int) -> int:
+    return (
+        5 * d_model
+        + 2 * d_model                      # w0, u
+        + 2 * d_model * decay_rank
+        + 5 * d_model * d_model            # wr wk wv wg wo
+        + d_model                          # ln_x
+        + 2 * d_model
+        + d_model * d_ff * 2
+        + d_model * d_model                # cr
+    )
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """shift(x)[t] = x[t-1]; position 0 sees ``prev`` (decode carry)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decays(xw: jax.Array, p: Params, n_heads: int, head_dim: int) -> jax.Array:
+    """Data-dependent per-channel decay w_t in (0, 1)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    B, S, D = lora.shape
+    w = p["w0"][None, None] + lora.reshape(B, S, n_heads, head_dim).astype(
+        jnp.float32
+    )
+    return jnp.exp(-jnp.exp(w))
+
+
+def wkv_scan(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference WKV6 recurrence via lax.scan over time.
+
+    r,k,v,w: (B, S, H, hd); u: (H, hd); state: (B, H, hd, hd).
+    Returns (out (B,S,H,hd) float32, final state).
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, out
+
+    seq = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w)
+    )
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def wkv_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: jax.Array,
+    *,
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked closed-form WKV6 (the Pallas kernel's math in pure jnp).
+
+    Within a chunk of L tokens all work is matmuls (MXU-friendly) and the
+    sequential carry is one (B,H,hd,hd) state per chunk instead of per
+    token -- this is the §Perf fix for the memory-bound WKV scan (the
+    per-timestep lax.scan reads+writes the full state T times).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) float32.
+    Returns (out (B,S,H,hd) float32, final state).
+    """
+    B, S, H, hd = r.shape
+    L = min(chunk, S)
+    if S % L:
+        return wkv_scan(r, k, v, w, u, state)  # fallback for ragged tails
+    n_chunks = S // L
+
+    def to_chunks(a):
+        return (
+            a.astype(jnp.float32)
+            .reshape(B, n_chunks, L, H, hd)
+            .transpose(1, 0, 3, 2, 4)          # (C, B, H, L, hd)
+        )
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+
+    def one_chunk(S0, inp):
+        r_, k_, v_, w_ = inp                   # (B,H,L,hd)
+        logw = jnp.log(jnp.maximum(w_, 1e-12))
+        lc_incl = jnp.cumsum(logw, axis=2)
+        lc_excl = lc_incl - logw
+        r_t = r_ * jnp.exp(lc_excl)
+        k_t = k_ * jnp.exp(-lc_incl)
+        a = jnp.einsum("bhld,bhmd->bhlm", r_t, k_t) * mask[None, None]
+        diag = jnp.einsum("bhld,bhld->bhl", r_, u[None, :, None, :] * k_)
+        out = (
+            jnp.einsum("bhlm,bhmd->bhld", a, v_)
+            + diag[..., None] * v_
+            + jnp.einsum("bhlk,bhkv->bhlv", r_t, S0)
+        )
+        c_last = jnp.exp(lc_incl[:, :, -1, :])              # (B,H,hd)
+        kv = jnp.einsum("bhlk,bhlv->bhkv", k_t, v_)
+        S_new = c_last[..., None] * (S0 + kv)
+        return S_new, out
+
+    state, outs = jax.lax.scan(
+        one_chunk, state.astype(jnp.float32), (rc, kc, vc, wc)
+    )
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    # Cast at the boundary: keeps downstream matmuls (and their fwd/bwd
+    # all-reduces) in the model dtype -- f32 stays internal to the chunk.
+    return out.astype(r.dtype), state
+
+
+def time_mix(
+    x: jax.Array,
+    p: Params,
+    state: tuple[jax.Array, jax.Array],
+    *,
+    n_heads: int,
+    eps: float,
+    chunked: bool = False,
+    chunk: int = 128,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """RWKV6 attention replacement.  x: (B,S,D).
+
+    state = (shift_prev (B,D), wkv_state (B,H,hd,hd)); pass zeros for
+    training/prefill from scratch.  ``chunked`` selects the closed-form
+    chunked WKV (the optimized path; identical math, §Perf).
+    """
+    B, S, D = x.shape
+    head_dim = D // n_heads
+    shift_prev, wkv_state = state
+    xs = _token_shift(x, shift_prev)
+    mu = p["mu"]
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xw = x + (xs - x) * mu[3]
+    xg = x + (xs - x) * mu[4]
+
+    r = (xr @ p["wr"]).reshape(B, S, n_heads, head_dim)
+    k = (xk @ p["wk"]).reshape(B, S, n_heads, head_dim)
+    v = (xv @ p["wv"]).reshape(B, S, n_heads, head_dim)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decays(xw, p, n_heads, head_dim)
+
+    if chunked and S > 1:
+        out, wkv_state = wkv_chunked(r, k, v, w, p["u"], wkv_state, chunk=chunk)
+    else:
+        out, wkv_state = wkv_scan(r, k, v, w, p["u"], wkv_state)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = rms_norm(out, p["ln_x"], eps) * g
+    return out @ p["wo"], (x[:, -1, :], wkv_state)
+
+
+def channel_mix(
+    x: jax.Array, p: Params, prev: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV squared-ReLU channel mix with token shift."""
+    xs = _token_shift(x, prev)
+    mu = p["mu_c"]
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"]), x[:, -1, :]
+
+
+def rwkv_state_init(
+    batch: int, d_model: int, n_heads: int, dtype=jnp.float32
+) -> dict[str, jax.Array]:
+    head_dim = d_model // n_heads
+    return {
+        "tm_shift": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d_model), dtype),
+    }

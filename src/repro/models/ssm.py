@@ -1,0 +1,162 @@
+"""Selective state-space mixer (Mamba/SSD-style), used by Hymba's parallel
+SSM heads (arXiv:2411.13676).
+
+Per head with state size N:
+
+    h_t = exp(-softplus(dt_t) * A) * h_{t-1} + (dt_t * B_t) x_t^T
+    y_t = C_t^T h_t + D * x_t
+
+with B_t, C_t, dt_t data-dependent projections of the input (selective
+scan).  Expressed as lax.scan over time (single While op in HLO).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params
+
+
+def ssm_init(
+    key: jax.Array, d_model: int, d_inner: int, state: int, dtype
+) -> Params:
+    keys = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        "w_in": (jax.random.normal(keys[0], (d_model, d_inner)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(keys[1], (d_model, d_inner)) * s).astype(dtype),
+        "w_B": (jax.random.normal(keys[2], (d_model, state)) * s).astype(dtype),
+        "w_C": (jax.random.normal(keys[3], (d_model, state)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(keys[4], (d_model, d_inner)) * s).astype(dtype),
+        "A_log": jnp.zeros((d_inner,), jnp.float32),      # A = exp(A_log) > 0
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": (
+            jax.random.normal(keys[5], (d_inner, d_model)) / np.sqrt(d_inner)
+        ).astype(dtype),
+    }
+
+
+def ssm_param_count(d_model: int, d_inner: int, state: int) -> int:
+    return (
+        3 * d_model * d_inner
+        + 2 * d_model * state
+        + 2 * d_inner
+        + d_inner * d_model
+    )
+
+
+def selective_scan(
+    x: jax.Array,      # (B, S, d_inner)
+    B_t: jax.Array,    # (B, S, N)
+    C_t: jax.Array,    # (B, S, N)
+    dt: jax.Array,     # (B, S, d_inner) pre-softplus
+    A: jax.Array,      # (d_inner,)
+    h0: jax.Array,     # (B, d_inner, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective scan; returns (y (B,S,d_inner), h_final)."""
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp
+        decay = jnp.exp(-dt_t * A[None, :])               # (B, d_inner)
+        h = h * decay[..., None] + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    seq = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B_t.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C_t.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def selective_scan_chunked(
+    x: jax.Array,      # (B, S, d_inner)
+    B_t: jax.Array,    # (B, S, N)
+    C_t: jax.Array,    # (B, S, N)
+    dt: jax.Array,     # (B, S, d_inner) pre-softplus
+    A: jax.Array,      # (d_inner,)
+    h0: jax.Array,     # (B, d_inner, N)
+    *,
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD closed form (within-chunk matmuls, per-chunk carry).
+
+    y_t = ca_t * ((M^T . mask) @ (u'/ca))_t + ca_t * (h0 C_t)
+    h_L = ca_L * (h0 + sum_s (u'_s/ca_s) B_s^T)     with ca = cumprod(a)
+
+    The (L,L) mixing matrix M_st = B_s . C_t is d-independent -- all inner
+    work becomes MXU matmuls (the §Perf fix for the memory-bound
+    per-timestep scan; same class as the chunked WKV).
+    """
+    Bb, S, d_inner = x.shape
+    L = min(chunk, S)
+    if S % L:
+        return selective_scan(x, B_t, C_t, dt, A, h0)
+    n_chunks = S // L
+
+    def chunks(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(Bb, n_chunks, L, -1), 1, 0
+        )                                              # (C, B, L, F)
+
+    xc, bc, cc, dc = map(chunks, (x, B_t, C_t, dt))
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32))     # diagonal included
+
+    def one_chunk(h, inp):
+        x_, b_, c_, dt_ = inp                          # (B, L, *)
+        dt_ = jax.nn.softplus(dt_)
+        loga = -dt_ * A[None, None, :]                 # (B, L, d)
+        lca = jnp.cumsum(loga, axis=1)                 # inclusive cumlog
+        ca = jnp.exp(lca)
+        up = dt_ * x_                                  # u'_s
+        ut = up * jnp.exp(-lca)                        # u'_s / ca_s
+        m = jnp.einsum("bsn,btn->bst", b_, c_) * mask.T[None]   # s<=t
+        y_intra = ca * jnp.einsum("bst,bsd->btd", m, ut)
+        y_carry = ca * jnp.einsum("bdn,btn->btd", h, c_)
+        y = y_intra + y_carry
+        h_new = ca[:, -1, :, None] * (
+            h + jnp.einsum("btd,btn->bdn", ut, b_)
+        )
+        return h_new, y
+
+    h, ys = jax.lax.scan(one_chunk, h0.astype(jnp.float32), (xc, bc, cc, dc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, d_inner)
+    return y, h
+
+
+def ssm_forward(
+    x: jax.Array,
+    p: Params,
+    h0: jax.Array | None = None,
+    *,
+    chunked: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D); returns (y, final_state)."""
+    B, S, D = x.shape
+    d_inner = p["w_in"].shape[-1]
+    N = p["w_B"].shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    u = x @ p["w_in"]
+    z = jax.nn.silu(x @ p["w_gate"])
+    B_t = x @ p["w_B"]
+    C_t = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    A = jnp.exp(p["A_log"])
+    if chunked and S > 1:
+        y, h = selective_scan_chunked(u, B_t, C_t, dt, A, h0)
+    else:
+        y, h = selective_scan(u, B_t, C_t, dt, A, h0)
+    y = (y + p["D"][None, None] * u.astype(jnp.float32)).astype(x.dtype)
+    return (y * z) @ p["w_out"], h
+
+
+def ssm_state_init(batch: int, d_inner: int, state: int) -> jax.Array:
+    return jnp.zeros((batch, d_inner, state), jnp.float32)

@@ -1,0 +1,3 @@
+from repro.profiler.synthetic import SyntheticModelSpec, build_profile
+
+__all__ = ["SyntheticModelSpec", "build_profile"]

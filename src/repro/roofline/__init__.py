@@ -1,0 +1,9 @@
+from repro.roofline.analysis import analyze_compiled, model_flops
+from repro.roofline.hlo_parse import count_collective_ops, parse_collective_bytes
+
+__all__ = [
+    "analyze_compiled",
+    "count_collective_ops",
+    "model_flops",
+    "parse_collective_bytes",
+]

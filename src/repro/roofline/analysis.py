@@ -1,0 +1,94 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        (197e12 bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819e9 B/s)
+    collective term = collective_bytes_per_device / link_bw     (~50e9 B/s)
+
+``compiled.cost_analysis()`` runs on the SPMD-partitioned per-device module,
+so its FLOPs/bytes are already per-chip; collective bytes come from the HLO
+parser (repro/roofline/hlo_parse.py) with while-loop multiplicities.
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference) with N the *active*
+parameter count for MoE; the ratio MODEL_FLOPS / (HLO_FLOPs * chips) shows
+how much compiled compute is "useful" (catches remat recompute, capacity
+overhead, dispatch waste).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.hw.specs import TPU_V5E
+from repro.roofline.hlo_parse import parse_hlo_costs
+
+
+def _cost_dict(compiled) -> dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_compiled(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh,
+    compiled,
+    *,
+    chip=TPU_V5E,
+) -> dict[str, Any]:
+    n_chips = mesh.devices.size
+    cost = _cost_dict(compiled)
+    static_flops = float(cost.get("flops", 0.0))
+    static_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    parsed = parse_hlo_costs(hlo)
+    flops_dev = max(parsed.flops, static_flops)
+    bytes_dev = max(parsed.bytes_accessed, static_bytes)
+
+    compute_s = flops_dev / chip.peak_flops_bf16
+    memory_s = bytes_dev / chip.hbm_bw
+    collective_s = parsed.collective_bytes["total"] / chip.ici_link_bw
+
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+
+    mf = model_flops(cfg, shape)
+    hlo_total_flops = flops_dev * n_chips
+    useful = mf / hlo_total_flops if hlo_total_flops > 0 else 0.0
+
+    return {
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "bottleneck": bottleneck,
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "static_flops_per_device": static_flops,   # cost_analysis (loop
+            "static_bytes_per_device": static_bytes,   # bodies counted once)
+            "collective_bytes_per_device": parsed.collective_bytes["total"],
+            "collective_breakdown": {
+                k: v for k, v in parsed.collective_bytes.items() if k != "total"
+            },
+            "collective_op_counts": parsed.collective_ops,
+            "model_flops": mf,
+            "useful_flops_ratio": useful,
+            "n_chips": int(n_chips),
+        }
+    }

@@ -1,0 +1,26 @@
+from repro.serving.cache import SramCache
+from repro.serving.controller import (
+    AdaptiveRunResult,
+    SlidingRateEstimator,
+    run_adaptive,
+)
+from repro.serving.engine import CompletedRequest, ExecutableModel, ServingEngine
+from repro.serving.simulator import RuntimeSimulator, SimResult, simulate
+from repro.serving.workload import RatePhase, Request, dynamic_trace, poisson_trace
+
+__all__ = [
+    "AdaptiveRunResult",
+    "CompletedRequest",
+    "ExecutableModel",
+    "RatePhase",
+    "Request",
+    "RuntimeSimulator",
+    "ServingEngine",
+    "SimResult",
+    "SlidingRateEstimator",
+    "SramCache",
+    "dynamic_trace",
+    "poisson_trace",
+    "run_adaptive",
+    "simulate",
+]

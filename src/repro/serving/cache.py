@@ -1,0 +1,53 @@
+"""Explicit TPU SRAM residency simulator.
+
+The Edge TPU driver's eviction policy is proprietary (the paper approximates
+it with the conservative alpha of Eq. 10).  For ground-truth simulation we
+implement a concrete, documented policy: model-granularity LRU over resident
+prefixes.  A model whose prefix exceeds capacity ``C`` gets the full ``C``
+as resident working set (the remainder streams every request -- intra-model
+swap, accounted in the service time, not here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class _Entry:
+    bytes_resident: int
+    last_used: float
+
+
+class SramCache:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._entries: dict[int, _Entry] = {}
+
+    def reset(self) -> None:
+        self._entries.clear()
+
+    @property
+    def used(self) -> int:
+        return sum(e.bytes_resident for e in self._entries.values())
+
+    def resident(self, model_idx: int) -> bool:
+        return model_idx in self._entries
+
+    def access(self, model_idx: int, prefix_bytes: int, now: float) -> bool:
+        """Touch ``model_idx``; returns True on a *miss* (weights must load).
+
+        On a miss, LRU entries of other models are evicted until the new
+        prefix's resident share (min(prefix, C)) fits.
+        """
+        want = min(prefix_bytes, self.capacity)
+        entry = self._entries.get(model_idx)
+        if entry is not None and entry.bytes_resident >= want:
+            entry.last_used = now
+            return False
+        # Miss: make room.
+        self._entries.pop(model_idx, None)
+        while self.used + want > self.capacity and self._entries:
+            lru = min(self._entries, key=lambda m: self._entries[m].last_used)
+            del self._entries[lru]
+        self._entries[model_idx] = _Entry(bytes_resident=want, last_used=now)
+        return True

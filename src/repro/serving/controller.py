@@ -1,0 +1,103 @@
+"""Online adaptation: sliding-window rate estimation + periodic re-planning.
+
+Implements Section IV's online phase: request rates are monitored with a
+sliding window; the resource-allocation algorithm re-runs periodically and
+the runtime switches to the new (P, K).  The paper reports <2 ms per
+invocation for the allocator -- ``benchmarks/alg_overhead.py`` measures ours.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+from repro.core.allocator import hill_climb
+from repro.core.planner import ModelProfile, Plan, TenantSpec
+from repro.hw.specs import Platform
+from repro.serving.simulator import RuntimeSimulator, SimResult
+from repro.serving.workload import Request
+
+
+class SlidingRateEstimator:
+    """lambda-hat per model from a sliding window of arrival timestamps."""
+
+    def __init__(self, n_models: int, window: float = 30.0):
+        self.window = window
+        self._stamps: list[collections.deque[float]] = [
+            collections.deque() for _ in range(n_models)
+        ]
+
+    def observe(self, model_idx: int, t: float) -> None:
+        self._stamps[model_idx].append(t)
+
+    def rates(self, now: float) -> list[float]:
+        out = []
+        for dq in self._stamps:
+            while dq and dq[0] < now - self.window:
+                dq.popleft()
+            out.append(len(dq) / self.window)
+        return out
+
+
+@dataclasses.dataclass
+class AdaptiveRunResult:
+    sim: SimResult
+    replan_times: list[float]
+    plans: list[Plan]
+    plan_compute_seconds: list[float]
+
+
+def run_adaptive(
+    profiles: Sequence[ModelProfile],
+    requests: Sequence[Request],
+    platform: Platform,
+    k_max: int,
+    *,
+    replan_period: float = 30.0,
+    window: float = 30.0,
+    initial_rates: Sequence[float] | None = None,
+    planner: Callable[..., tuple[Plan, float]] = hill_climb,
+    min_rate: float = 0.05,
+) -> AdaptiveRunResult:
+    """Simulate the full adaptive runtime over a (possibly dynamic) trace."""
+    n = len(profiles)
+    est = SlidingRateEstimator(n, window=window)
+
+    def plan_for(rates: Sequence[float]) -> tuple[Plan, float]:
+        tenants = [
+            TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
+        ]
+        t0 = time.perf_counter()
+        plan, _ = planner(tenants, platform, k_max)
+        return plan, time.perf_counter() - t0
+
+    rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
+    plan, dt = plan_for(rates0)
+    sim = RuntimeSimulator(profiles, plan, platform)
+    replan_times = [0.0]
+    plans = [plan]
+    compute_times = [dt]
+
+    next_replan = replan_period
+    for req in sorted(requests, key=lambda r: r.arrival):
+        while req.arrival >= next_replan:
+            rates = est.rates(next_replan)
+            if any(r > 0 for r in rates):
+                new_plan, dt = plan_for(rates)
+                if new_plan != sim.plan:
+                    sim.set_plan(new_plan, now=next_replan)
+                replan_times.append(next_replan)
+                plans.append(new_plan)
+                compute_times.append(dt)
+            next_replan += replan_period
+        est.observe(req.model_idx, req.arrival)
+        sim.step(req)
+
+    duration = max((r.arrival for r in requests), default=0.0)
+    return AdaptiveRunResult(
+        sim=sim.result(duration),
+        replan_times=replan_times,
+        plans=plans,
+        plan_compute_seconds=compute_times,
+    )

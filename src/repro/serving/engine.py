@@ -1,0 +1,179 @@
+"""Real-execution multi-tenant engine (Section IV plumbing).
+
+Executes actual JAX computations: a single global TPU-worker thread drains
+an FCFS queue of prefix executions, forwarding intermediate activations to
+per-model CPU thread pools that run the suffixes.  On this CPU-only
+container the "TPU" worker is simply the jitted XLA path; the value of this
+module is proving the runtime plumbing (queues, pools, plan switches,
+backpressure) end-to-end with real tensors -- latency *validation* is done
+against the discrete-event simulator, which models the paper's testbed
+timing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core.planner import Plan
+
+# A partitioned executable model: segment i maps activations -> activations.
+SegmentFn = Callable[[Any], Any]
+
+
+@dataclasses.dataclass
+class ExecutableModel:
+    """A chain of jitted segment functions + an input synthesizer."""
+
+    name: str
+    segments: tuple[SegmentFn, ...]
+    make_input: Callable[[int], Any]   # seed -> model input
+
+    @property
+    def num_partition_points(self) -> int:
+        return len(self.segments)
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    model_idx: int
+    submit_time: float
+    done_time: float
+    output: Any
+
+    @property
+    def latency(self) -> float:
+        return self.done_time - self.submit_time
+
+
+class _TpuWorker(threading.Thread):
+    """Single global FCFS worker executing TPU prefixes."""
+
+    def __init__(self, engine: "ServingEngine"):
+        super().__init__(daemon=True, name="tpu-worker")
+        self.engine = engine
+        self.inbox: "queue.Queue" = queue.Queue()
+
+    def run(self) -> None:
+        while True:
+            item = self.inbox.get()
+            if item is None:
+                return
+            self.engine._run_prefix(*item)
+
+
+class ServingEngine:
+    """Multi-tenant collaborative-inference engine over executable models."""
+
+    def __init__(
+        self,
+        models: Sequence[ExecutableModel],
+        plan: Plan,
+        k_max: int,
+    ):
+        self.models = list(models)
+        self.k_max = k_max
+        self._plan_lock = threading.Lock()
+        self._tpu = _TpuWorker(self)
+        self._pools: list[ThreadPoolExecutor | None] = [None] * len(models)
+        self._completed: "queue.Queue[CompletedRequest]" = queue.Queue()
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._drained = threading.Event()
+        self._drained.set()
+        self.set_plan(plan)
+        self._tpu.start()
+
+    # -- configuration -------------------------------------------------------
+    def set_plan(self, plan: Plan) -> None:
+        if len(plan.partition) != len(self.models):
+            raise ValueError("plan size mismatch")
+        if sum(plan.cores) > self.k_max:
+            raise ValueError("plan exceeds K_max")
+        with self._plan_lock:
+            self.plan = plan
+            for i, k in enumerate(plan.cores):
+                old = self._pools[i]
+                if old is not None:
+                    old.shutdown(wait=False)
+                self._pools[i] = (
+                    ThreadPoolExecutor(max_workers=k, thread_name_prefix=f"cpu-{i}")
+                    if k > 0
+                    else None
+                )
+
+    # -- request path ----------------------------------------------------------
+    def submit(self, model_idx: int, x: Any) -> None:
+        with self._inflight_lock:
+            self._inflight += 1
+            self._drained.clear()
+        submit_t = time.perf_counter()
+        with self._plan_lock:
+            p = self.plan.partition[model_idx]
+        if p > 0:
+            self._tpu.inbox.put((model_idx, x, p, submit_t))
+        else:
+            self._dispatch_suffix(model_idx, x, 0, submit_t)
+
+    def _run_prefix(self, model_idx: int, x: Any, p: int, submit_t: float) -> None:
+        m = self.models[model_idx]
+        for seg in m.segments[:p]:
+            x = seg(x)
+        x = jax.block_until_ready(x)
+        if p < m.num_partition_points:
+            self._dispatch_suffix(model_idx, x, p, submit_t)
+        else:
+            self._finish(model_idx, x, submit_t)
+
+    def _dispatch_suffix(self, model_idx: int, x: Any, p: int, submit_t: float) -> None:
+        pool = self._pools[model_idx]
+        if pool is None:
+            raise RuntimeError(
+                f"model {model_idx} has a CPU suffix but zero cores allocated"
+            )
+
+        def work() -> None:
+            y = x
+            m = self.models[model_idx]
+            for seg in m.segments[p:]:
+                y = seg(y)
+            y = jax.block_until_ready(y)
+            self._finish(model_idx, y, submit_t)
+
+        pool.submit(work)
+
+    def _finish(self, model_idx: int, out: Any, submit_t: float) -> None:
+        self._completed.put(
+            CompletedRequest(
+                model_idx=model_idx,
+                submit_time=submit_t,
+                done_time=time.perf_counter(),
+                output=out,
+            )
+        )
+        with self._inflight_lock:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._drained.set()
+
+    # -- collection ------------------------------------------------------------
+    def drain(self, timeout: float = 60.0) -> list[CompletedRequest]:
+        if not self._drained.wait(timeout):
+            raise TimeoutError("engine did not drain in time")
+        out = []
+        while True:
+            try:
+                out.append(self._completed.get_nowait())
+            except queue.Empty:
+                return out
+
+    def shutdown(self) -> None:
+        self._tpu.inbox.put(None)
+        for pool in self._pools:
+            if pool is not None:
+                pool.shutdown(wait=True)

@@ -1,0 +1,200 @@
+"""Discrete-event simulator of the SwapLess runtime.
+
+Plays the role of the physical testbed in the paper's evaluation: the
+analytic model *predicts* latency, the DES *observes* it.  The simulated
+system matches Section IV's runtime:
+
+* a single global TPU worker with an FCFS queue (M/G/1 discipline),
+* per-model CPU pools with ``k_i`` single-request workers (M/D/k),
+* an explicit SRAM cache with model-granularity LRU eviction
+  (ground truth for the paper's conservative alpha approximation),
+* intra-model swap streaming folded into TPU service time,
+* input/boundary transfer latencies that do not occupy either server
+  (matching the additive d/B terms of Eq. 4).
+
+``RuntimeSimulator`` is steppable and supports live plan switches, which is
+what the online controller uses for dynamic workloads (Fig. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+from repro.core.planner import (
+    ModelProfile,
+    Plan,
+    load_time,
+    prefix_service_time,
+    TenantSpec,
+)
+from repro.hw.specs import Platform
+from repro.serving.cache import SramCache
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class SimResult:
+    latencies: list[list[float]]               # per model, per request (s)
+    arrivals: list[list[float]]                # arrival stamps (for timelines)
+    tpu_busy: float
+    duration: float
+    misses: list[int]
+    tpu_requests: list[int]
+
+    def mean_latency(self, model_idx: int) -> float:
+        ls = self.latencies[model_idx]
+        return sum(ls) / len(ls) if ls else 0.0
+
+    def overall_mean(self) -> float:
+        alll = [l for ls in self.latencies for l in ls]
+        return sum(alll) / len(alll) if alll else 0.0
+
+    def request_weighted_mean(self) -> float:
+        return self.overall_mean()
+
+    def p99(self, model_idx: int) -> float:
+        ls = sorted(self.latencies[model_idx])
+        if not ls:
+            return 0.0
+        return ls[min(len(ls) - 1, int(0.99 * len(ls)))]
+
+    def observed_miss_rate(self, model_idx: int) -> float:
+        n = self.tpu_requests[model_idx]
+        return self.misses[model_idx] / n if n else 0.0
+
+    @property
+    def tpu_utilization(self) -> float:
+        return self.tpu_busy / self.duration if self.duration > 0 else 0.0
+
+
+class RuntimeSimulator:
+    """Steppable two-stage (TPU -> CPU) FCFS system over profiled tenants."""
+
+    def __init__(
+        self,
+        profiles: Sequence[ModelProfile],
+        plan: Plan,
+        platform: Platform,
+    ):
+        self.profiles = list(profiles)
+        self.platform = platform
+        self.n = len(self.profiles)
+        self.cache = SramCache(platform.sram_bytes)
+        self.tpu_free = 0.0
+        self.tpu_busy = 0.0
+        self.latencies: list[list[float]] = [[] for _ in range(self.n)]
+        self.arrivals: list[list[float]] = [[] for _ in range(self.n)]
+        self.misses = [0] * self.n
+        self.tpu_requests = [0] * self.n
+        self._plan: Plan | None = None
+        self._cpu_pools: list[list[float]] = [[0.0] for _ in range(self.n)]
+        self.set_plan(plan, now=0.0)
+
+    # -- plan management ----------------------------------------------------
+    def set_plan(self, plan: Plan, now: float) -> None:
+        """Switch to a new (P, K) configuration at time ``now``.
+
+        CPU pools are resized preserving the most-loaded workers' busy
+        horizons (a worker mid-request finishes its request).  The paper
+        preloads candidate partitions so switching cost is negligible; we
+        model it as free.
+        """
+        if len(plan.partition) != self.n:
+            raise ValueError("plan size mismatch")
+        old = self._plan
+        self._plan = plan
+        self._derive(plan)
+        new_pools: list[list[float]] = []
+        for i, k in enumerate(plan.cores):
+            size = max(k, 1)
+            prev = self._cpu_pools[i] if old is not None else [now]
+            busy = sorted(prev, reverse=True)[:size]
+            while len(busy) < size:
+                busy.append(now)
+            heapq.heapify(busy)
+            new_pools.append(busy)
+        self._cpu_pools = new_pools
+
+    def _derive(self, plan: Plan) -> None:
+        pf, pl = self.profiles, self.platform
+        p = plan.partition
+        self._prefix_bytes = [f.prefix_weight_bytes(q) for f, q in zip(pf, p)]
+        self._s_tpu = [prefix_service_time(f, q, pl) for f, q in zip(pf, p)]
+        self._t_load = [load_time(f, q, pl) for f, q in zip(pf, p)]
+        self._s_cpu = [
+            f.suffix_cpu_time(q, 1) if q < f.num_partition_points else 0.0
+            for f, q in zip(pf, p)
+        ]
+        self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
+        self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+
+    @property
+    def plan(self) -> Plan:
+        assert self._plan is not None
+        return self._plan
+
+    # -- event processing ---------------------------------------------------
+    def step(self, req: Request, *, record: bool = True) -> float:
+        """Process one request; returns its end-to-end latency (s)."""
+        i = req.model_idx
+        p = self.plan.partition[i]
+        P_i = self.profiles[i].num_partition_points
+        t = req.arrival
+        if p > 0:
+            t += self._in_xfer[i]
+            start = max(t, self.tpu_free)
+            miss = self.cache.access(i, self._prefix_bytes[i], start)
+            service = self._s_tpu[i] + (self._t_load[i] if miss else 0.0)
+            self.tpu_free = start + service
+            self.tpu_busy += service
+            t = self.tpu_free
+            if record:
+                self.tpu_requests[i] += 1
+                if miss:
+                    self.misses[i] += 1
+            if p < P_i:
+                t += self._out_xfer[i]
+        if p < P_i:
+            pool = self._cpu_pools[i]
+            free = heapq.heappop(pool)
+            start = max(t, free)
+            end = start + self._s_cpu[i]
+            heapq.heappush(pool, end)
+            t = end
+        lat = t - req.arrival
+        if record:
+            self.latencies[i].append(lat)
+            self.arrivals[i].append(req.arrival)
+        return lat
+
+    def result(self, duration: float) -> SimResult:
+        return SimResult(
+            latencies=self.latencies,
+            arrivals=self.arrivals,
+            tpu_busy=self.tpu_busy,
+            duration=duration,
+            misses=self.misses,
+            tpu_requests=self.tpu_requests,
+        )
+
+
+def simulate(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    requests: Sequence[Request],
+    *,
+    warmup_frac: float = 0.05,
+) -> SimResult:
+    """Run a static-plan simulation over a request trace.
+
+    ``warmup_frac``: leading fraction of the trace excluded from statistics
+    (cold-start cache fills; the paper measures steady state).
+    """
+    sim = RuntimeSimulator([t.profile for t in tenants], plan, platform)
+    duration = max((r.arrival for r in requests), default=0.0)
+    warmup_t = duration * warmup_frac
+    for req in sorted(requests, key=lambda r: r.arrival):
+        sim.step(req, record=req.arrival >= warmup_t)
+    return sim.result(duration)

@@ -1,0 +1,52 @@
+"""Workload generation: Poisson request traces and dynamic-rate scenarios."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    model_idx: int
+    arrival: float
+
+
+def poisson_trace(
+    rates: list[float],
+    duration: float,
+    seed: int = 0,
+) -> list[Request]:
+    """Independent Poisson arrival streams, merged and time-sorted."""
+    rng = np.random.default_rng(seed)
+    reqs: list[Request] = []
+    for idx, lam in enumerate(rates):
+        if lam <= 0:
+            continue
+        # Draw slightly more than needed, then trim.
+        n_est = int(lam * duration * 1.5) + 20
+        gaps = rng.exponential(1.0 / lam, size=n_est)
+        times = np.cumsum(gaps)
+        for t in times[times < duration]:
+            reqs.append(Request(idx, float(t)))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+@dataclasses.dataclass(frozen=True)
+class RatePhase:
+    """One phase of a dynamic workload: ``rates`` holding on [start, end)."""
+
+    start: float
+    end: float
+    rates: tuple[float, ...]
+
+
+def dynamic_trace(phases: list[RatePhase], seed: int = 0) -> list[Request]:
+    """Piecewise-constant-rate Poisson arrivals (the paper's Fig. 8 setup)."""
+    reqs: list[Request] = []
+    for j, ph in enumerate(phases):
+        sub = poisson_trace(list(ph.rates), ph.end - ph.start, seed=seed + 7919 * j)
+        reqs.extend(Request(r.model_idx, r.arrival + ph.start) for r in sub)
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs

@@ -1,0 +1,69 @@
+"""AdamW optimizer (from scratch -- no optax dependency).
+
+Moments can be kept in bf16 for very large models (llama4/grok at 256 chips
+would not fit f32 moments in HBM; DESIGN.md Sec. 7) -- the update math still
+runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moments_dtype: Any = jnp.float32
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moments_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(
+    grads: Any,
+    state: dict[str, Any],
+    params: Any,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> tuple[Any, dict[str, Any]]:
+    """Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(cfg.moments_dtype), v32.astype(cfg.moments_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_params, {"step": step, "m": new_m, "v": new_v}

@@ -1,0 +1,39 @@
+"""Learning-rate schedules, including MiniCPM's WSD (warmup-stable-decay,
+arXiv:2404.06395) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(
+    step,
+    *,
+    total_steps: int,
+    warmup_frac: float = 0.01,
+    decay_frac: float = 0.1,
+    final_scale: float = 0.1,
+):
+    """MiniCPM WSD: linear warmup -> flat -> sharp exponential-style decay.
+
+    Returns a multiplicative scale in (0, 1]."""
+    t = jnp.asarray(step, jnp.float32)
+    warm = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+    warm_scale = t / warm
+    decay_t = (t - decay_start) / max(total_steps - decay_start, 1)
+    decay_scale = final_scale ** jnp.clip(decay_t, 0.0, 1.0)
+    return jnp.where(
+        t < warm, warm_scale, jnp.where(t < decay_start, 1.0, decay_scale)
+    )
+
+
+def cosine_schedule(
+    step, *, total_steps: int, warmup_frac: float = 0.01, final_scale: float = 0.1
+):
+    t = jnp.asarray(step, jnp.float32)
+    warm = max(int(total_steps * warmup_frac), 1)
+    prog = jnp.clip((t - warm) / max(total_steps - warm, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(
+        t < warm, t / warm, final_scale + (1.0 - final_scale) * cos
+    )

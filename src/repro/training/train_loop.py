@@ -1,0 +1,89 @@
+"""Training step with gradient-accumulation microbatching.
+
+The global batch is split into ``n_microbatches`` slices scanned
+sequentially; per-slice gradients accumulate in param dtype (bf16 for the
+very large models -- documented memory trade-off).  This is also what keeps
+train_4k's logits (global_batch x seq x vocab) from ever materializing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    n_microbatches: int = 1
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (save matmul outputs:
+                                    # avoids re-running fwd all-reduces in bwd)
+    aux_weight: float = 0.01
+
+
+def _split_micro(batch: dict[str, jax.Array], n: int) -> dict[str, jax.Array]:
+    def reshape(a):
+        return a.reshape(n, a.shape[0] // n, *a.shape[1:])
+
+    return jax.tree.map(reshape, batch)
+
+
+def make_train_step(
+    cfg: ArchConfig, tcfg: TrainConfig
+) -> Callable[..., tuple[Any, Any, dict[str, jax.Array]]]:
+    """Returns train_step(params, opt_state, batch, lr_scale)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = forward_loss(
+            cfg, params, mb, remat=tcfg.remat, aux_weight=tcfg.aux_weight,
+            remat_policy=tcfg.remat_policy,
+        )
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, lr_scale=1.0):
+        n = tcfg.n_microbatches
+        if n > 1:
+            micro = _split_micro(batch, n)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), metrics["ce"]
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+        new_params, new_opt = adamw_update(
+            grads, opt_state, params, tcfg.optimizer, lr_scale
+        )
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(
+    cfg: ArchConfig, tcfg: TrainConfig, params: Any
+) -> dict[str, Any]:
+    return adamw_init(params, tcfg.optimizer)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make src/ importable regardless of how pytest is invoked.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep XLA single-device and quiet for tests (the dry-run sets its own flags
+# in a subprocess; see tests/test_dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,175 @@
+"""Tests for PropAlloc, Algorithm 1 hill-climbing, baselines, and the NLIP
+constraints -- including optimality checks against a brute-force oracle."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import latency
+from repro.core.allocator import (
+    brute_force_oracle,
+    edge_tpu_compiler_plan,
+    hill_climb,
+    prop_alloc,
+    threshold_plan,
+)
+from repro.core.planner import Plan, TenantSpec, validate_plan
+from repro.configs.paper_models import paper_profile
+from repro.hw.specs import EDGE_TPU_PLATFORM
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+# --------------------------------------------------------------------------
+# PropAlloc
+# --------------------------------------------------------------------------
+class TestPropAlloc:
+    def test_full_tpu_gets_zero_cores(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 1.0))
+        partition = [t.profile.num_partition_points for t in ts]
+        assert prop_alloc(ts, partition, K_MAX) == (0, 0)
+
+    def test_suffix_models_get_at_least_one_core(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 1.0))
+        cores = prop_alloc(ts, [5, 3], K_MAX)
+        assert all(c >= 1 for c in cores)
+        assert sum(cores) <= K_MAX
+
+    def test_proportionality(self):
+        # Two identical models, one with 3x the rate -> more cores.
+        ts = tenants_for(("inceptionv4", 3.0), ("inceptionv4", 1.0))
+        cores = prop_alloc(ts, [5, 5], 8)
+        assert cores[0] > cores[1]
+
+    def test_overflow_raises(self):
+        ts = tenants_for(("mnasnet", 1.0), ("mnasnet", 1.0), ("mnasnet", 1.0))
+        with pytest.raises(ValueError):
+            prop_alloc(ts, [0, 0, 0], 2)
+
+    @given(
+        rates=st.lists(st.floats(0.1, 5.0), min_size=1, max_size=4),
+        k_max=st.integers(4, 16),
+        data=st.data(),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_never_exceeds_kmax_and_uses_all_when_needed(self, rates, k_max, data):
+        names = ["inceptionv4", "xception", "densenet201", "mnasnet"]
+        ts = tenants_for(*[(names[i % 4], r) for i, r in enumerate(rates)])
+        partition = [
+            data.draw(st.integers(0, t.profile.num_partition_points)) for t in ts
+        ]
+        cores = prop_alloc(ts, partition, k_max)
+        assert sum(cores) <= k_max
+        for t, p, c in zip(ts, partition, cores):
+            if p < t.profile.num_partition_points:
+                assert c >= 1
+            else:
+                assert c == 0
+        # If anything needs CPU and there is spare capacity + load, all cores
+        # are handed out (work-conserving).
+        needs = [p < t.profile.num_partition_points for t, p in zip(ts, partition)]
+        loads = [
+            t.rate * t.profile.suffix_cpu_time_1core(p)
+            for t, p in zip(ts, partition)
+        ]
+        if any(needs) and sum(loads) > 0:
+            assert sum(cores) == k_max
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1
+# --------------------------------------------------------------------------
+class TestHillClimb:
+    def test_single_tenant_improves_over_full_tpu(self):
+        # InceptionV4 exceeds SRAM: collaborative partitioning must beat
+        # full-TPU execution (the paper's central claim).
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        validate_plan(plan, ts, K_MAX)
+        full = edge_tpu_compiler_plan(ts)
+        obj_full = latency.objective(ts, full, HW)
+        assert obj < obj_full
+        # And it should keep a TPU prefix (not dump everything to 4 ARM cores).
+        assert plan.partition[0] > 0
+
+    def test_small_model_stays_on_tpu(self):
+        # MobileNetV2 fits in SRAM and the TPU is much faster everywhere
+        # except the tail; at trivial load, full-TPU should be (near) optimal.
+        ts = tenants_for(("mobilenetv2", 0.5))
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        oracle_plan, oracle_obj = brute_force_oracle(ts, HW, K_MAX)
+        assert obj <= oracle_obj * 1.05
+
+    def test_matches_oracle_single_tenant(self):
+        for name, rate in [("inceptionv4", 2.0), ("xception", 3.0), ("gpunet", 5.0)]:
+            ts = tenants_for((name, rate))
+            plan, obj = hill_climb(ts, HW, K_MAX)
+            _, oracle_obj = brute_force_oracle(ts, HW, K_MAX)
+            assert obj <= oracle_obj * 1.10, (name, obj, oracle_obj)
+
+    def test_two_tenant_near_oracle(self):
+        ts = tenants_for(("gpunet", 2.0), ("efficientnet", 2.0))
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        _, oracle_obj = brute_force_oracle(ts, HW, K_MAX)
+        assert obj <= oracle_obj * 1.15
+
+    def test_terminates_and_valid_on_many_tenants(self):
+        ts = tenants_for(
+            ("inceptionv4", 1.0),
+            ("xception", 1.0),
+            ("densenet201", 1.0),
+            ("mnasnet", 2.0),
+        )
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        validate_plan(plan, ts, K_MAX)
+        assert math.isfinite(obj)
+
+    @given(
+        rate=st.floats(0.5, 6.0),
+        name=st.sampled_from(
+            ["inceptionv4", "xception", "resnet50v2", "densenet201", "gpunet"]
+        ),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_never_worse_than_all_cpu_or_all_tpu(self, rate, name):
+        ts = tenants_for((name, rate))
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        P = ts[0].profile.num_partition_points
+        all_cpu = latency.objective(
+            ts, Plan((0,), (prop_alloc(ts, [0], K_MAX)[0],)), HW
+        )
+        all_tpu = latency.objective(ts, Plan((P,), (0,)), HW)
+        assert obj <= min(all_cpu, all_tpu) + 1e-12
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+class TestBaselines:
+    def test_edge_tpu_compiler_full_tpu(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 1.0))
+        plan = edge_tpu_compiler_plan(ts)
+        assert plan.partition == (11, 7)
+        assert plan.cores == (0, 0)
+
+    def test_threshold_offloads_tail(self):
+        ts = tenants_for(("inceptionv4", 1.0))
+        plan = threshold_plan(ts, HW, K_MAX)
+        P = ts[0].profile.num_partition_points
+        # inceptionv4's tail speedup is ~4x, i.e. CPU not within 10% of TPU:
+        # threshold keeps everything on TPU here -- exactly the failure mode
+        # the paper describes (threshold ignores swap + queueing).
+        validate_plan(plan, ts, K_MAX)
+        assert 0 <= plan.partition[0] <= P
+
+    def test_threshold_offloads_when_tail_comparable(self):
+        ts = tenants_for(("mobilenetv2", 1.0))
+        # mobilenetv2 tail speedups: last segment CPU/TPU = 1.5 > 1.1 -> stays.
+        plan = threshold_plan(ts, HW, K_MAX, threshold=0.6)
+        assert plan.partition[0] < ts[0].profile.num_partition_points

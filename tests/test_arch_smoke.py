@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned arch
+(2 layers, d_model <= 512, <= 4 experts) runs one forward/loss and one
+decode step on CPU; asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.frontend import make_decode_token, make_train_batch
+from repro.models.transformer import (
+    count_params,
+    decode_step,
+    forward_loss,
+    init_decode_caches,
+    init_params,
+)
+
+ARCH_NAMES = sorted(ARCHS)
+SEQ = 32
+BATCH = 2
+
+
+@pytest.fixture(scope="module")
+def reduced_setups():
+    out = {}
+    for name in ARCH_NAMES:
+        cfg = ARCHS[name].reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        out[name] = (cfg, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_config_bounds(name):
+    cfg = ARCHS[name].reduced()
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.vocab_size <= 1024
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_loss_finite(name, reduced_setups):
+    cfg, params = reduced_setups[name]
+    batch = make_train_batch(cfg, BATCH, SEQ, seed=1)
+    loss, metrics = forward_loss(cfg, params, batch, remat=False)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{name}: loss={loss}"
+    assert float(metrics["ce"]) > 0.0
+    # Random init => CE should be near log(vocab).
+    assert float(metrics["ce"]) < 2.0 * np.log(cfg.vocab_size) + 1.0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_grads_finite(name, reduced_setups):
+    cfg, params = reduced_setups[name]
+    batch = make_train_batch(cfg, BATCH, SEQ, seed=2)
+
+    def loss_fn(p):
+        return forward_loss(cfg, p, batch, remat=True)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for leaf in leaves:
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step_shapes(name, reduced_setups):
+    cfg, params = reduced_setups[name]
+    max_len = 64
+    caches = init_decode_caches(cfg, BATCH, max_len, dtype=jnp.float32)
+    tok = make_decode_token(cfg, BATCH, seed=3)
+    if cfg.frontend == "audio":
+        tok = tok.astype(jnp.float32)
+    logits, new_caches = decode_step(cfg, params, caches, tok, jnp.int32(0))
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert len(new_caches) == cfg.n_layers
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_multiple_steps_stable(name, reduced_setups):
+    cfg, params = reduced_setups[name]
+    max_len = 64
+    caches = init_decode_caches(cfg, 1, max_len, dtype=jnp.float32)
+    step = jax.jit(lambda c, t, l: decode_step(cfg, params, c, t, l))
+    for i in range(4):
+        tok = make_decode_token(cfg, 1, seed=10 + i)
+        if cfg.frontend == "audio":
+            tok = tok.astype(jnp.float32)
+        logits, caches = step(caches, tok, jnp.int32(i))
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_positive_and_moe_active_smaller(name):
+    cfg = ARCHS[name]
+    total = count_params(cfg)
+    active = count_params(cfg, active_only=True)
+    assert total > 0
+    if cfg.is_moe:
+        assert active < total
+    else:
+        assert active == total
+
+
+def test_decode_prefix_consistency_dense():
+    """Decoding token-by-token must match the full forward pass logits."""
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    T = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, T), 0, cfg.vocab_size)
+    # Full forward.
+    from repro.models.transformer import backbone, embed_inputs, unembed
+
+    h, _ = embed_inputs(cfg, params, {"tokens": tokens})
+    h, _ = backbone(cfg, params, h, remat=False)
+    full_logits = unembed(cfg, params, h)  # (1, T, V)
+    # Token-by-token decode.
+    caches = init_decode_caches(cfg, 1, T, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        logits, caches = decode_step(
+            cfg, params, caches, tokens[:, t : t + 1], jnp.int32(t)
+        )
+        outs.append(np.asarray(logits[0, 0]))
+    dec_logits = np.stack(outs)
+    np.testing.assert_allclose(
+        dec_logits, np.asarray(full_logits[0]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_decode_prefix_consistency_rwkv():
+    """RWKV recurrent decode must match the scan forward pass."""
+    cfg = ARCHS["rwkv6-7b"].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+    T = 6
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (1, T), 0, cfg.vocab_size)
+    from repro.models.transformer import backbone, embed_inputs, unembed
+
+    h, _ = embed_inputs(cfg, params, {"tokens": tokens})
+    h, _ = backbone(cfg, params, h, remat=False)
+    full_logits = unembed(cfg, params, h)
+    caches = init_decode_caches(cfg, 1, T, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        logits, caches = decode_step(
+            cfg, params, caches, tokens[:, t : t + 1], jnp.int32(t)
+        )
+        outs.append(np.asarray(logits[0, 0]))
+    np.testing.assert_allclose(
+        np.stack(outs), np.asarray(full_logits[0]), rtol=2e-3, atol=2e-3
+    )

@@ -1,0 +1,110 @@
+"""Equality of the chunked closed-form recurrences (§Perf optimizations)
+against their sequential-scan references, at kernel and model level."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.models.frontend import make_train_batch
+from repro.models.rwkv import wkv_chunked, wkv_scan
+from repro.models.ssm import selective_scan, selective_scan_chunked
+from repro.models.transformer import forward_loss, init_params
+
+
+class TestWKVChunked:
+    @given(
+        t_pow=st.integers(4, 8),
+        chunk=st.sampled_from([8, 16, 32, 64]),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_scan(self, t_pow, chunk, seed):
+        B, T, H, hd = 2, 2**t_pow, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        r = jax.random.normal(ks[0], (B, T, H, hd))
+        k = jax.random.normal(ks[1], (B, T, H, hd))
+        v = jax.random.normal(ks[2], (B, T, H, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.3 + 0.69
+        u = jax.random.normal(ks[4], (H, hd)) * 0.1
+        s0 = jnp.zeros((B, H, hd, hd))
+        out1, st1 = wkv_scan(r, k, v, w, u, s0)
+        out2, st2 = wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+        np.testing.assert_allclose(
+            np.asarray(out1), np.asarray(out2), rtol=3e-3, atol=3e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(st1), np.asarray(st2), rtol=3e-3, atol=3e-3
+        )
+
+    def test_nonzero_initial_state(self):
+        B, T, H, hd = 1, 32, 1, 8
+        ks = jax.random.split(jax.random.PRNGKey(7), 6)
+        r = jax.random.normal(ks[0], (B, T, H, hd))
+        k = jax.random.normal(ks[1], (B, T, H, hd))
+        v = jax.random.normal(ks[2], (B, T, H, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.3 + 0.69
+        u = jax.random.normal(ks[4], (H, hd)) * 0.1
+        s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.3
+        out1, st1 = wkv_scan(r, k, v, w, u, s0)
+        out2, st2 = wkv_chunked(r, k, v, w, u, s0, chunk=8)
+        np.testing.assert_allclose(
+            np.asarray(out1), np.asarray(out2), rtol=3e-3, atol=3e-3
+        )
+
+
+class TestSSDChunked:
+    @given(
+        t_pow=st.integers(4, 7),
+        chunk=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_scan(self, t_pow, chunk, seed):
+        B, S, d, N = 2, 2**t_pow, 12, 8
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = jax.random.normal(ks[0], (B, S, d))
+        Bt = jax.random.normal(ks[1], (B, S, N)) * 0.5
+        Ct = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        dt = jax.random.normal(ks[3], (B, S, d)) * 0.5
+        A = jnp.exp(jax.random.normal(ks[4], (d,)) * 0.2)
+        h0 = jnp.zeros((B, d, N))
+        y1, h1 = selective_scan(x, Bt, Ct, dt, A, h0)
+        y2, h2 = selective_scan_chunked(x, Bt, Ct, dt, A, h0, chunk=chunk)
+        np.testing.assert_allclose(
+            np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(h1), np.asarray(h2), rtol=1e-3, atol=1e-3
+        )
+
+    def test_nonzero_initial_state(self):
+        B, S, d, N = 1, 16, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        x = jax.random.normal(ks[0], (B, S, d))
+        Bt = jax.random.normal(ks[1], (B, S, N)) * 0.5
+        Ct = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        dt = jax.random.normal(ks[3], (B, S, d)) * 0.5
+        A = jnp.exp(jax.random.normal(ks[4], (d,)) * 0.2)
+        h0 = jax.random.normal(ks[5], (B, d, N)) * 0.5
+        y1, h1 = selective_scan(x, Bt, Ct, dt, A, h0)
+        y2, h2 = selective_scan_chunked(x, Bt, Ct, dt, A, h0, chunk=8)
+        np.testing.assert_allclose(
+            np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3
+        )
+
+
+class TestModelLevelEquivalence:
+    @pytest.mark.parametrize("name", ["rwkv6-7b", "hymba-1.5b"])
+    def test_chunked_flag_preserves_loss(self, name):
+        cfg = ARCHS[name].reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        batch = make_train_batch(cfg, 2, 64)
+        l1, _ = forward_loss(cfg, params, batch, remat=False)
+        cfg2 = dataclasses.replace(cfg, use_chunked_scan=True)
+        l2, _ = forward_loss(cfg2, params, batch, remat=False)
+        assert float(l1) == pytest.approx(float(l2), rel=1e-3)

@@ -1,0 +1,72 @@
+"""Tests for the partitionable CNN families (paper Table II) and their
+integration with the real-execution serving engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.planner import Plan
+from repro.models.cnn import PAPER_CNN_SPECS, build_executable
+from repro.serving.engine import ServingEngine
+
+
+def test_specs_match_table_ii_partition_points():
+    expected = {
+        "squeezenet": 2,
+        "mobilenetv2": 5,
+        "efficientnet": 6,
+        "mnasnet": 7,
+        "gpunet": 5,
+        "densenet201": 7,
+        "resnet50v2": 8,
+        "xception": 11,
+        "inceptionv4": 11,
+    }
+    for name, pp in expected.items():
+        assert len(PAPER_CNN_SPECS[name].stage_channels) == pp, name
+
+
+@pytest.mark.parametrize("name", ["mobilenetv2", "squeezenet"])
+def test_cnn_forward_shapes(name):
+    model = build_executable(PAPER_CNN_SPECS[name], seed=0)
+    x = model.make_input(0)
+    for seg in model.segments:
+        x = seg(x)
+    x = np.asarray(x)
+    assert np.all(np.isfinite(x))
+    assert x.shape[-1] == PAPER_CNN_SPECS[name].stage_channels[-1]
+
+
+def test_partitioned_equals_unpartitioned():
+    model = build_executable(PAPER_CNN_SPECS["mobilenetv2"], seed=1)
+    x0 = model.make_input(7)
+    full = x0
+    for seg in model.segments:
+        full = seg(full)
+    for p in range(len(model.segments) + 1):
+        y = x0
+        for seg in model.segments[:p]:
+            y = seg(y)
+        for seg in model.segments[p:]:
+            y = seg(y)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(full), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_engine_runs_cnn_mix():
+    models = [
+        build_executable(PAPER_CNN_SPECS["mobilenetv2"], seed=0),
+        build_executable(PAPER_CNN_SPECS["squeezenet"], seed=1),
+    ]
+    plan = Plan((3, 1), (1, 1))
+    eng = ServingEngine(models, plan, k_max=4)
+    try:
+        for i in range(2):
+            for s in range(3):
+                eng.submit(i, models[i].make_input(s))
+        done = eng.drain(timeout=60.0)
+        assert len(done) == 6
+        for c in done:
+            assert np.all(np.isfinite(np.asarray(c.output)))
+    finally:
+        eng.shutdown()

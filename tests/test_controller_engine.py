@@ -1,0 +1,150 @@
+"""Tests for the online controller (adaptive re-planning) and the
+real-execution serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocator import edge_tpu_compiler_plan
+from repro.core.planner import Plan, TenantSpec
+from repro.configs.paper_models import paper_profile
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import SlidingRateEstimator, run_adaptive
+from repro.serving.engine import ExecutableModel, ServingEngine
+from repro.serving.simulator import simulate
+from repro.serving.workload import RatePhase, dynamic_trace
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+class TestRateEstimator:
+    def test_basic_rate(self):
+        est = SlidingRateEstimator(1, window=10.0)
+        for t in np.arange(0.0, 10.0, 0.5):
+            est.observe(0, float(t))
+        assert est.rates(10.0)[0] == pytest.approx(2.0)
+
+    def test_window_expiry(self):
+        est = SlidingRateEstimator(1, window=5.0)
+        est.observe(0, 0.0)
+        est.observe(0, 8.0)
+        assert est.rates(10.0)[0] == pytest.approx(1 / 5.0)
+
+
+class TestAdaptiveController:
+    def test_adapts_and_beats_static_full_tpu(self):
+        # MnasNet + InceptionV4 with rate step-ups, as in Fig. 8.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        phases = [
+            RatePhase(0.0, 300.0, (5.0, 1.0)),
+            RatePhase(300.0, 600.0, (5.0, 3.0)),
+            RatePhase(600.0, 900.0, (5.0, 5.0)),
+        ]
+        trace = dynamic_trace(phases, seed=0)
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            window=30.0,
+            initial_rates=(5.0, 1.0),
+        )
+        assert len(res.plans) > 1
+        # Planner stays cheap (paper: <2ms; allow slack for CI noise).
+        assert max(res.plan_compute_seconds) < 0.05
+        # Compare with the static default-compiler plan on the same trace.
+        tenants = [TenantSpec(p, 3.0) for p in profiles]
+        static = simulate(tenants, edge_tpu_compiler_plan(tenants), HW, trace)
+        assert res.sim.overall_mean() < static.overall_mean()
+
+    def test_replans_on_schedule(self):
+        profiles = [paper_profile("mnasnet")]
+        phases = [RatePhase(0.0, 120.0, (2.0,))]
+        trace = dynamic_trace(phases, seed=1)
+        res = run_adaptive(
+            profiles, trace, HW, K_MAX, replan_period=30.0, initial_rates=(2.0,)
+        )
+        assert len(res.replan_times) >= 3
+
+
+def _make_mlp_model(name: str, n_segments: int, dim: int, seed: int) -> ExecutableModel:
+    key = jax.random.PRNGKey(seed)
+    weights = []
+    for i in range(n_segments):
+        key, sub = jax.random.split(key)
+        weights.append(jax.random.normal(sub, (dim, dim), jnp.float32) / jnp.sqrt(dim))
+
+    def make_seg(w):
+        @jax.jit
+        def seg(x):
+            return jnp.tanh(x @ w)
+        return seg
+
+    return ExecutableModel(
+        name=name,
+        segments=tuple(make_seg(w) for w in weights),
+        make_input=lambda s: jax.random.normal(jax.random.PRNGKey(s), (1, dim)),
+    )
+
+
+class TestServingEngine:
+    def test_end_to_end_execution_matches_sequential(self):
+        models = [_make_mlp_model("a", 4, 32, 0), _make_mlp_model("b", 3, 32, 1)]
+        plan = Plan((2, 1), (1, 1))
+        eng = ServingEngine(models, plan, k_max=4)
+        try:
+            inputs = []
+            for i, m in enumerate(models):
+                for s in range(5):
+                    x = m.make_input(s)
+                    inputs.append((i, x))
+                    eng.submit(i, x)
+            done = eng.drain(timeout=30.0)
+            assert len(done) == len(inputs)
+            # Outputs must equal the plain sequential forward pass.
+            by_model = {}
+            for c in done:
+                by_model.setdefault(c.model_idx, []).append(c)
+            for i, m in enumerate(models):
+                outs = {np.asarray(c.output).tobytes() for c in by_model[i]}
+                expect = set()
+                for s in range(5):
+                    x = m.make_input(s)
+                    for seg in m.segments:
+                        x = seg(x)
+                    expect.add(np.asarray(x).tobytes())
+                assert outs == expect
+        finally:
+            eng.shutdown()
+
+    def test_full_cpu_and_full_tpu_paths(self):
+        models = [_make_mlp_model("a", 3, 16, 0), _make_mlp_model("b", 3, 16, 1)]
+        plan = Plan((0, 3), (2, 0))  # model 0 all-CPU, model 1 all-TPU
+        eng = ServingEngine(models, plan, k_max=4)
+        try:
+            for i in range(2):
+                eng.submit(i, models[i].make_input(0))
+            done = eng.drain(timeout=30.0)
+            assert len(done) == 2
+        finally:
+            eng.shutdown()
+
+    def test_plan_switch_live(self):
+        models = [_make_mlp_model("a", 4, 16, 0)]
+        eng = ServingEngine(models, Plan((4,), (0,)), k_max=4)
+        try:
+            eng.submit(0, models[0].make_input(0))
+            eng.drain(timeout=30.0)
+            eng.set_plan(Plan((2,), (2,)))
+            eng.submit(0, models[0].make_input(1))
+            done = eng.drain(timeout=30.0)
+            assert len(done) == 1
+        finally:
+            eng.shutdown()
+
+    def test_rejects_bad_plan(self):
+        models = [_make_mlp_model("a", 2, 8, 0)]
+        with pytest.raises(ValueError):
+            ServingEngine(models, Plan((1, 1), (1, 1)), k_max=4)

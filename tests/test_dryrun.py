@@ -1,0 +1,54 @@
+"""Dry-run smoke test: one (arch x shape) pair lowered + compiled on the
+512-device production mesh, in a subprocess (the XLA flag must be set before
+jax initializes, so it cannot run in the main pytest process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_one
+rec = run_one("{arch}", "{shape}", multi_pod={multi_pod}, out_dir="{out}", verbose=False)
+print("RESULT:" + json.dumps({{"status": rec["status"],
+                               "bottleneck": rec.get("roofline", {{}}).get("bottleneck"),
+                               "peak": rec.get("memory", {{}}).get("peak_bytes")}}))
+"""
+
+
+def _run(arch, shape, multi_pod, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = SCRIPT.format(arch=arch, shape=shape, multi_pod=multi_pod, out=tmp_path)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.slow
+def test_single_pod_gemma_train(tmp_path):
+    rec = _run("gemma3-1b", "train_4k", False, tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["peak"] is not None
+
+
+@pytest.mark.slow
+def test_multi_pod_gemma_decode(tmp_path):
+    rec = _run("gemma3-1b", "decode_32k", True, tmp_path)
+    assert rec["status"] == "ok"
+
+
+@pytest.mark.slow
+def test_long_context_skip_is_recorded(tmp_path):
+    rec = _run("qwen1.5-0.5b", "long_500k", False, tmp_path)
+    assert rec["status"] == "skipped"

@@ -1,0 +1,224 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles in repro/kernels/ref.py (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# block_matmul
+# --------------------------------------------------------------------------
+class TestMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "shape", [(128, 128, 128), (256, 128, 64), (64, 256, 128), (512, 64, 256)]
+    )
+    def test_aligned_shapes(self, shape, dtype):
+        M, K, N = shape
+        x = _rand(jax.random.PRNGKey(0), (M, K), dtype)
+        y = _rand(jax.random.PRNGKey(1), (K, N), dtype)
+        out = ops.matmul(x, y, block_m=64, block_n=64, block_k=64)
+        expect = ref.matmul_ref(x, y)
+        tol = 1e-3 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 200),
+        n=st.integers(1, 200),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_unaligned_shapes_padded(self, m, k, n):
+        x = _rand(jax.random.PRNGKey(2), (m, k), jnp.float32)
+        y = _rand(jax.random.PRNGKey(3), (k, n), jnp.float32)
+        out = ops.matmul(x, y, block_m=32, block_n=32, block_k=32)
+        expect = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=1e-3, atol=1e-3
+        )
+
+    def test_identity(self):
+        x = _rand(jax.random.PRNGKey(4), (96, 96), jnp.float32)
+        eye = jnp.eye(96)
+        out = ops.matmul(x, eye, block_m=32, block_n=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+def _attn_expect(q, k, v, scale, window):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = kk.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = vv.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = ref.attention_ref(qf, kf, vf, scale=scale, window=window)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("window", [0, 64, 17])
+    def test_causal_and_window(self, window, dtype):
+        B, S, H, KV, hd = 2, 128, 4, 2, 32
+        q = _rand(jax.random.PRNGKey(0), (B, S, H, hd), dtype)
+        k = _rand(jax.random.PRNGKey(1), (B, S, KV, hd), dtype)
+        v = _rand(jax.random.PRNGKey(2), (B, S, KV, hd), dtype)
+        scale = 1.0 / np.sqrt(hd)
+        out = ops.causal_attention(
+            q, k, v, scale=scale, window=window, block_q=32, block_k=32
+        )
+        expect = _attn_expect(q, k, v, scale, window)
+        tol = 5e-4 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+    @given(
+        s_pow=st.integers(5, 8),
+        h=st.sampled_from([1, 2, 4]),
+        kv_div=st.sampled_from([1, 2]),
+        hd=st.sampled_from([16, 32, 64]),
+        window=st.sampled_from([0, 16, 100]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_sweep(self, s_pow, h, kv_div, hd, window):
+        if h % kv_div:
+            return
+        S = 2**s_pow
+        kv = h // kv_div
+        q = _rand(jax.random.PRNGKey(10), (1, S, h, hd), jnp.float32)
+        k = _rand(jax.random.PRNGKey(11), (1, S, kv, hd), jnp.float32)
+        v = _rand(jax.random.PRNGKey(12), (1, S, kv, hd), jnp.float32)
+        scale = 1.0 / np.sqrt(hd)
+        out = ops.causal_attention(
+            q, k, v, scale=scale, window=window, block_q=64, block_k=64
+        )
+        expect = _attn_expect(q, k, v, scale, window)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=1e-3, atol=1e-3
+        )
+
+    def test_first_token_attends_to_itself_only(self):
+        B, S, H, hd = 1, 64, 2, 16
+        q = _rand(jax.random.PRNGKey(20), (B, S, H, hd), jnp.float32)
+        k = _rand(jax.random.PRNGKey(21), (B, S, H, hd), jnp.float32)
+        v = _rand(jax.random.PRNGKey(22), (B, S, H, hd), jnp.float32)
+        out = ops.causal_attention(
+            q, k, v, scale=0.25, window=0, block_q=32, block_k=32
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-4, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# WKV6
+# --------------------------------------------------------------------------
+def _wkv_expect(r, k, v, w, u):
+    B, T, H, hd = r.shape
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    out = ref.wkv6_ref(flat(r), flat(k), flat(v), flat(w), uf)
+    return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+    def test_chunk_invariance(self, chunk):
+        B, T, H, hd = 1, 64, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        r = _rand(ks[0], (B, T, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, T, H, hd), jnp.float32)
+        v = _rand(ks[2], (B, T, H, hd), jnp.float32)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.3 + 0.69
+        u = _rand(ks[4], (H, hd), jnp.float32) * 0.1
+        out = ops.wkv6(r, k, v, w, u, chunk=chunk)
+        expect = _wkv_expect(r, k, v, w, u)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=2e-3, atol=2e-3
+        )
+
+    @given(
+        t_pow=st.integers(4, 7),
+        h=st.sampled_from([1, 2, 4]),
+        hd=st.sampled_from([8, 16, 32]),
+        w_lo=st.floats(0.55, 0.9),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_sweep(self, t_pow, h, hd, w_lo, seed):
+        T = 2**t_pow
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        r = _rand(ks[0], (1, T, h, hd), jnp.float32)
+        k = _rand(ks[1], (1, T, h, hd), jnp.float32)
+        v = _rand(ks[2], (1, T, h, hd), jnp.float32)
+        w = (
+            jax.nn.sigmoid(jax.random.normal(ks[3], (1, T, h, hd)))
+            * (0.98 - w_lo)
+            + w_lo
+        )
+        u = _rand(ks[4], (h, hd), jnp.float32) * 0.1
+        out = ops.wkv6(r, k, v, w, u, chunk=16)
+        expect = _wkv_expect(r, k, v, w, u)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=3e-3, atol=3e-3
+        )
+
+    def test_matches_model_reference(self):
+        """Kernel agrees with the model-layer wkv_scan (repro.models.rwkv)."""
+        from repro.models.rwkv import wkv_scan
+
+        B, T, H, hd = 2, 32, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(9), 5)
+        r = _rand(ks[0], (B, T, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, T, H, hd), jnp.float32)
+        v = _rand(ks[2], (B, T, H, hd), jnp.float32)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.3 + 0.69
+        u = _rand(ks[4], (H, hd), jnp.float32) * 0.1
+        out = ops.wkv6(r, k, v, w, u, chunk=8)
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        expect, _ = wkv_scan(r, k, v, w, u, state0)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=2e-3, atol=2e-3
+        )
+
+    def test_decay_zero_input_isolation(self):
+        """With w ~ 1 and k = 0 everywhere except t0, out_t = (r_t . k0) v0."""
+        B, T, H, hd = 1, 16, 1, 8
+        r = _rand(jax.random.PRNGKey(30), (B, T, H, hd), jnp.float32)
+        k = jnp.zeros((B, T, H, hd)).at[:, 0].set(1.0)
+        v = jnp.zeros((B, T, H, hd)).at[:, 0].set(2.0)
+        w = jnp.ones((B, T, H, hd)) * 0.9999
+        u = jnp.zeros((H, hd))
+        out = np.asarray(ops.wkv6(r, k, v, w, u, chunk=8))
+        for t in range(1, T):
+            expect = float(r[0, t, 0].sum()) * 2.0 * (0.9999 ** t)
+            np.testing.assert_allclose(out[0, t, 0], expect, rtol=2e-2)

@@ -1,0 +1,165 @@
+"""Tests for the end-to-end latency model (Eq. 2, 4, 10)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import latency, swap
+from repro.core.planner import (
+    Plan,
+    TenantSpec,
+    intra_swap_bytes,
+    load_time,
+    prefix_service_time,
+)
+from repro.configs.paper_models import paper_profile
+from repro.hw.specs import EDGE_TPU_PLATFORM
+
+HW = EDGE_TPU_PLATFORM
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+class TestAlpha:
+    def test_fits_in_sram_alpha_zero(self):
+        # MobileNetV2 (4.1 MB) + SqueezeNet (1.4 MB) fit in 8 MB -> alpha = 0
+        # (the paper's Fig. 6a first scenario).
+        ts = tenants_for(("mobilenetv2", 1.0), ("squeezenet", 1.0))
+        partition = [t.profile.num_partition_points for t in ts]
+        assert swap.weight_miss_probs(ts, partition, HW) == [0.0, 0.0]
+
+    def test_single_tenant_alpha_zero(self):
+        # Driver keeps weights persistent for a single model of any size.
+        ts = tenants_for(("inceptionv4", 1.0))
+        partition = [ts[0].profile.num_partition_points]
+        assert swap.weight_miss_probs(ts, partition, HW) == [0.0]
+
+    def test_5050_mix_alpha_half(self):
+        # EfficientNet + GPUNet exceed 8 MB; 50:50 mix -> alpha = 0.5 each
+        # (the paper's Fig. 6a second scenario).
+        ts = tenants_for(("efficientnet", 2.0), ("gpunet", 2.0))
+        partition = [t.profile.num_partition_points for t in ts]
+        alphas = swap.weight_miss_probs(ts, partition, HW)
+        assert alphas == pytest.approx([0.5, 0.5])
+
+    def test_9010_skew(self):
+        # 90:10 skew -> infrequent model suffers alpha = 0.9
+        # (the paper's Fig. 6a third scenario).
+        ts = tenants_for(("efficientnet", 9.0), ("gpunet", 1.0))
+        partition = [t.profile.num_partition_points for t in ts]
+        alphas = swap.weight_miss_probs(ts, partition, HW)
+        assert alphas == pytest.approx([0.1, 0.9])
+
+    def test_cpu_only_model_alpha_zero(self):
+        ts = tenants_for(("efficientnet", 1.0), ("gpunet", 1.0))
+        alphas = swap.weight_miss_probs(
+            ts, [0, ts[1].profile.num_partition_points], HW
+        )
+        assert alphas[0] == 0.0
+        # Only one model left on TPU -> single-tenant regime, alpha = 0.
+        assert alphas[1] == 0.0
+
+    @given(
+        r1=st.floats(0.1, 10.0),
+        r2=st.floats(0.1, 10.0),
+        p1=st.integers(1, 6),
+        p2=st.integers(1, 5),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_alpha_bounds_and_complement(self, r1, r2, p1, p2):
+        ts = tenants_for(("densenet201", r1), ("gpunet", r2))
+        alphas = swap.weight_miss_probs(ts, [p1, p2], HW)
+        for a in alphas:
+            assert 0.0 <= a <= 1.0
+        if (
+            swap.aggregate_footprint(ts, [p1, p2]) > HW.sram_bytes
+        ):
+            # alpha_i = 1 - lambda_i/lambda_tpu => alphas sum to n-1.
+            assert sum(alphas) == pytest.approx(len(ts) - 1)
+
+
+class TestServiceTimes:
+    def test_prefix_service_includes_intra_swap(self):
+        prof = paper_profile("inceptionv4")
+        P = prof.num_partition_points
+        t_no_swap = prof.prefix_tpu_time(P)
+        t_with = prefix_service_time(prof, P, HW)
+        assert t_with > t_no_swap
+        overflow = prof.total_weight_bytes - HW.sram_bytes
+        assert t_with - t_no_swap == pytest.approx(overflow / HW.swap_bw)
+
+    def test_small_prefix_no_intra_swap(self):
+        prof = paper_profile("inceptionv4")
+        for p in range(1, prof.num_partition_points + 1):
+            if prof.prefix_weight_bytes(p) <= HW.sram_bytes:
+                assert intra_swap_bytes(prof, p, HW) == 0
+
+    def test_load_time_caps_at_sram(self):
+        prof = paper_profile("inceptionv4")
+        P = prof.num_partition_points
+        assert load_time(prof, P, HW) == pytest.approx(
+            HW.sram_bytes / HW.swap_bw
+        )
+
+
+class TestEndToEnd:
+    def test_full_cpu_has_no_tpu_terms(self):
+        ts = tenants_for(("mnasnet", 1.0))
+        pred = latency.predict(ts, Plan((0,), (4,)), HW)
+        b = pred.per_model[0]
+        assert b.input_xfer == 0 and b.tpu_wait == 0 and b.tpu_service == 0
+        assert b.cpu_service > 0
+
+    def test_full_tpu_has_no_cpu_terms(self):
+        ts = tenants_for(("mnasnet", 1.0))
+        P = ts[0].profile.num_partition_points
+        pred = latency.predict(ts, Plan((P,), (0,)), HW)
+        b = pred.per_model[0]
+        assert b.cpu_wait == 0 and b.cpu_service == 0
+        assert b.tpu_service > 0
+
+    def test_alpha0_variant_predicts_lower_latency_when_swapping(self):
+        ts = tenants_for(("efficientnet", 2.0), ("gpunet", 2.0))
+        plan = Plan(
+            tuple(t.profile.num_partition_points for t in ts), (0, 0)
+        )
+        full = latency.predict(ts, plan, HW)
+        a0 = latency.predict(ts, plan, HW, force_alpha_zero=True)
+        assert a0.mean_latency(ts) < full.mean_latency(ts)
+
+    def test_unstable_overload_inf(self):
+        ts = tenants_for(("inceptionv4", 100.0))
+        P = ts[0].profile.num_partition_points
+        assert latency.objective(ts, Plan((P,), (0,)), HW) == math.inf
+
+    @given(rate=st.floats(0.2, 4.0), p=st.integers(0, 11))
+    @settings(max_examples=40, deadline=None)
+    def test_breakdown_components_nonnegative(self, rate, p):
+        ts = tenants_for(("inceptionv4", rate))
+        k = 4 if p < 11 else 0
+        pred = latency.predict(ts, Plan((p,), (k,)), HW)
+        b = pred.per_model[0]
+        for field in (
+            b.input_xfer,
+            b.tpu_wait,
+            b.tpu_swap,
+            b.tpu_service,
+            b.boundary_xfer,
+            b.cpu_wait,
+            b.cpu_service,
+        ):
+            assert field >= 0.0
+
+    @given(r=st.floats(0.2, 2.0))
+    @settings(max_examples=20, deadline=None)
+    def test_latency_increases_with_load(self, r):
+        ts_lo = tenants_for(("inceptionv4", r))
+        ts_hi = tenants_for(("inceptionv4", r * 1.5))
+        P = 11
+        plan = Plan((P,), (0,))
+        lo = latency.predict(ts_lo, plan, HW).latencies[0]
+        hi = latency.predict(ts_hi, plan, HW).latencies[0]
+        assert hi >= lo

@@ -1,0 +1,87 @@
+"""Prefill -> decode continuation: prefilling a prompt and then decoding
+token-by-token must produce the same logits as running the full sequence
+through the forward pass (the serving path's core correctness invariant,
+including ring-buffer cache seeding for sliding-window layers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.transformer import (
+    backbone,
+    decode_step,
+    embed_inputs,
+    init_params,
+    prefill_step,
+    unembed,
+)
+
+# rwkv6 prefill returns exact recurrent state; transformer archs rebuild KV
+# caches; hymba has both plus SSM state; gemma3 exercises the ring buffer.
+CONT_ARCHS = ["qwen1.5-0.5b", "gemma3-1b", "rwkv6-7b", "hymba-1.5b", "grok-1-314b"]
+
+
+def _full_logits(cfg, params, tokens):
+    h, _ = embed_inputs(cfg, params, {"tokens": tokens})
+    h, _ = backbone(cfg, params, h, remat=False)
+    return unembed(cfg, params, h)
+
+
+@pytest.mark.parametrize("name", CONT_ARCHS)
+def test_prefill_then_decode_matches_full_forward(name):
+    import dataclasses
+
+    cfg = ARCHS[name].reduced()
+    if cfg.is_moe:
+        # GShard capacity can drop tokens in batched (prefill/train) groups
+        # but never at single-token decode; raise capacity so the invariant
+        # is exact (the capacity-drop semantics are tested in moe tests).
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    P, T = 8, 12   # prefill 8 tokens, decode 4 more
+    max_len = 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0, cfg.vocab_size)
+
+    full = np.asarray(_full_logits(cfg, params, tokens))         # (1, T, V)
+
+    logits, caches = prefill_step(
+        cfg, params, {"tokens": tokens[:, :P]}, max_len=max_len
+    )
+    # But prefill caches are sized to max_len for global layers only when
+    # built through init-time paths; prefill_step sizes them itself.
+    np.testing.assert_allclose(
+        np.asarray(logits)[0, 0], full[0, P - 1], rtol=2e-3, atol=2e-3,
+        err_msg=f"{name}: prefill last-token logits mismatch",
+    )
+    for t in range(P, T):
+        logits, caches = decode_step(
+            cfg, params, caches, tokens[:, t : t + 1], jnp.int32(t)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits)[0, 0], full[0, t], rtol=5e-3, atol=5e-3,
+            err_msg=f"{name}: decode logits mismatch at position {t}",
+        )
+
+
+def test_ring_buffer_prefill_longer_than_window():
+    """Sliding-window arch with prompt > window: ring seeding must hold."""
+    cfg = ARCHS["gemma3-1b"].reduced()   # window 16 after reduction
+    assert cfg.window == 16
+    params = init_params(cfg, jax.random.PRNGKey(2), dtype=jnp.float32)
+    P, T = 24, 28                        # prompt exceeds the window
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, T), 0, cfg.vocab_size)
+    full = np.asarray(_full_logits(cfg, params, tokens))
+    logits, caches = prefill_step(
+        cfg, params, {"tokens": tokens[:, :P]}, max_len=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits)[0, 0], full[0, P - 1], rtol=2e-3, atol=2e-3
+    )
+    for t in range(P, T):
+        logits, caches = decode_step(
+            cfg, params, caches, tokens[:, t : t + 1], jnp.int32(t)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits)[0, 0], full[0, t], rtol=5e-3, atol=5e-3
+        )

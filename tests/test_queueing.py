@@ -1,0 +1,114 @@
+"""Unit + property tests for the queueing primitives (Eq. 1, 3)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.queueing import mdk_wait, mg1_wait, mixture_moments
+
+
+class TestMG1:
+    def test_zero_arrivals(self):
+        assert mg1_wait(0.0, 1.0, 1.0) == 0.0
+
+    def test_md1_closed_form(self):
+        # Deterministic service: E[S^2] = E[S]^2; P-K reduces to
+        # rho*E[S] / (2(1-rho)).
+        lam, s = 0.5, 1.0
+        rho = lam * s
+        expected = rho * s / (2 * (1 - rho))
+        assert mg1_wait(lam, s, s * s) == pytest.approx(expected)
+
+    def test_mm1_closed_form(self):
+        # Exponential service: E[S^2] = 2 E[S]^2; P-K gives rho/(mu - lam).
+        lam, mu = 0.3, 1.0
+        es = 1.0 / mu
+        es2 = 2.0 / mu**2
+        expected = (lam / mu) / (mu - lam)
+        assert mg1_wait(lam, es, es2) == pytest.approx(expected)
+
+    def test_unstable_queue(self):
+        assert mg1_wait(2.0, 1.0, 1.0) == math.inf
+        assert mg1_wait(1.0, 1.0, 1.0) == math.inf
+
+    @given(
+        lam=st.floats(0.01, 0.99),
+        es=st.floats(0.01, 1.0),
+        cv2=st.floats(0.0, 4.0),
+    )
+    def test_wait_nonnegative_and_monotone_in_variance(self, lam, es, cv2):
+        lam = min(lam, 0.95 / es)  # keep stable
+        es2_det = es * es
+        es2_var = es * es * (1.0 + cv2)
+        w_det = mg1_wait(lam, es, es2_det)
+        w_var = mg1_wait(lam, es, es2_var)
+        assert w_det >= 0.0
+        assert w_var >= w_det  # variance only hurts
+
+    @given(lam1=st.floats(0.01, 0.4), lam2=st.floats(0.01, 0.4))
+    def test_wait_monotone_in_load(self, lam1, lam2):
+        es, es2 = 1.0, 1.0
+        lo, hi = sorted([lam1, lam2])
+        assert mg1_wait(lo, es, es2) <= mg1_wait(hi, es, es2)
+
+
+class TestMDk:
+    def test_zero_arrivals(self):
+        assert mdk_wait(0.0, 1.0, 1) == 0.0
+
+    def test_formula(self):
+        lam, mu, k = 1.0, 1.0, 2
+        expected = 0.5 * (1.0 / (k * mu - lam) - 1.0 / (k * mu))
+        assert mdk_wait(lam, mu, k) == pytest.approx(expected)
+
+    def test_unstable(self):
+        assert mdk_wait(2.0, 1.0, 2) == math.inf
+        assert mdk_wait(1.0, 1.0, 0) == math.inf
+
+    @given(
+        lam=st.floats(0.05, 0.95),
+        mu=st.floats(0.5, 5.0),
+        k=st.integers(1, 8),
+    )
+    def test_more_cores_never_hurt(self, lam, mu, k):
+        lam = min(lam, 0.9 * k * mu)
+        assert mdk_wait(lam, mu, k + 1) <= mdk_wait(lam, mu, k) + 1e-12
+
+    @given(lam=st.floats(0.01, 0.9), mu=st.floats(1.0, 5.0))
+    def test_half_of_mm1_style_wait(self, lam, mu):
+        # Deterministic service halves the wait of the pooled M/M/1 analogue.
+        k = 1
+        if lam >= k * mu:
+            return
+        w = mdk_wait(lam, mu, k)
+        mm1_style = 1.0 / (k * mu - lam) - 1.0 / (k * mu)
+        assert w == pytest.approx(0.5 * mm1_style)
+
+
+class TestMixture:
+    def test_single_atom(self):
+        m1, m2 = mixture_moments([2.0], [3.0])
+        assert m1 == 3.0 and m2 == 9.0
+
+    def test_two_atoms(self):
+        m1, m2 = mixture_moments([1.0, 1.0], [2.0, 4.0])
+        assert m1 == pytest.approx(3.0)
+        assert m2 == pytest.approx((4.0 + 16.0) / 2)
+
+    def test_empty(self):
+        assert mixture_moments([], []) == (0.0, 0.0)
+
+    @given(
+        st.lists(
+            st.tuples(st.floats(0.01, 10.0), st.floats(0.0, 10.0)),
+            min_size=1,
+            max_size=8,
+        )
+    )
+    def test_jensen(self, pairs):
+        ws = [p[0] for p in pairs]
+        vs = [p[1] for p in pairs]
+        m1, m2 = mixture_moments(ws, vs)
+        assert m2 >= m1 * m1 - 1e-9  # E[X^2] >= E[X]^2
+        assert min(vs) - 1e-9 <= m1 <= max(vs) + 1e-9

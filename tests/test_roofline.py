@@ -1,0 +1,103 @@
+"""Tests for the roofline machinery: HLO cost parser (loop-aware flops,
+bytes, collectives) and model-flops accounting."""
+import textwrap
+
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.roofline.analysis import model_flops
+from repro.roofline.hlo_parse import parse_hlo_costs
+
+SIMPLE_HLO = textwrap.dedent(
+    """
+    HloModule test
+
+    %body (param: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+      %param = (s32[], f32[128,128]) parameter(0)
+      %gte0 = s32[] get-tuple-element(%param), index=0
+      %gte1 = f32[128,128]{1,0} get-tuple-element(%param), index=1
+      %dot.1 = f32[128,128]{1,0} dot(%gte1, %gte1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,128]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+      ROOT %tuple.1 = (s32[], f32[128,128]) tuple(%gte0, %ar)
+    }
+
+    %cond (param.1: (s32[], f32[128,128])) -> pred[] {
+      %param.1 = (s32[], f32[128,128]) parameter(0)
+      %gtec = s32[] get-tuple-element(%param.1), index=0
+      %c = s32[] constant(10)
+      ROOT %lt = pred[] compare(%gtec, %c), direction=LT
+    }
+
+    ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+      %x = f32[128,128]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %t = (s32[], f32[128,128]) tuple(%c0, %x)
+      %w = (s32[], f32[128,128]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[128,128]{1,0} get-tuple-element(%w), index=1
+    }
+    """
+)
+
+
+class TestHloParser:
+    def test_loop_aware_dot_flops(self):
+        c = parse_hlo_costs(SIMPLE_HLO)
+        # one 128x128x128 dot per iteration, 10 iterations
+        assert c.flops == pytest.approx(2 * 128**3 * 10)
+
+    def test_loop_aware_collectives(self):
+        c = parse_hlo_costs(SIMPLE_HLO)
+        assert c.collective_bytes["all-reduce"] == pytest.approx(
+            128 * 128 * 4 * 10
+        )
+        assert c.collective_ops["all-reduce"] == 1
+
+    def test_no_loop(self):
+        hlo = textwrap.dedent(
+            """
+            HloModule t
+            ENTRY %main (a: f32[64,32], b: f32[32,16]) -> f32[64,16] {
+              %a = f32[64,32]{1,0} parameter(0)
+              %b = f32[32,16]{1,0} parameter(1)
+              ROOT %dot.0 = f32[64,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+            }
+            """
+        )
+        c = parse_hlo_costs(hlo)
+        assert c.flops == pytest.approx(2 * 64 * 32 * 16)
+        assert c.collective_bytes["total"] == 0.0
+
+
+class TestModelFlops:
+    def test_train_6nd(self):
+        cfg = ARCHS["qwen1.5-0.5b"]
+        shape = INPUT_SHAPES["train_4k"]
+        expect = 6.0 * cfg.active_param_count() * 256 * 4096
+        assert model_flops(cfg, shape) == pytest.approx(expect)
+
+    def test_decode_2nd_per_token(self):
+        cfg = ARCHS["gemma3-1b"]
+        shape = INPUT_SHAPES["decode_32k"]
+        expect = 2.0 * cfg.active_param_count() * 128
+        assert model_flops(cfg, shape) == pytest.approx(expect)
+
+    def test_moe_uses_active_params(self):
+        cfg = ARCHS["llama4-maverick-400b-a17b"]
+        dense_equiv = 6.0 * cfg.param_count() * 256 * 4096
+        assert model_flops(cfg, INPUT_SHAPES["train_4k"]) < 0.1 * dense_equiv
+
+
+class TestShapeSupport:
+    def test_long_context_gate(self):
+        assert ARCHS["rwkv6-7b"].supports_shape("long_500k")
+        assert ARCHS["gemma3-1b"].supports_shape("long_500k")
+        assert ARCHS["hymba-1.5b"].supports_shape("long_500k")
+        assert ARCHS["llama4-maverick-400b-a17b"].supports_shape("long_500k")
+        assert not ARCHS["qwen1.5-0.5b"].supports_shape("long_500k")
+        assert not ARCHS["grok-1-314b"].supports_shape("long_500k")
+        assert not ARCHS["nemotron-4-15b"].supports_shape("long_500k")
+
+    def test_all_support_other_shapes(self):
+        for cfg in ARCHS.values():
+            for s in ("train_4k", "prefill_32k", "decode_32k"):
+                assert cfg.supports_shape(s)

@@ -1,0 +1,186 @@
+"""Tests for the discrete-event simulator, SRAM cache, and workloads --
+including cross-validation of the analytic model against the DES (the
+in-silico analogue of the paper's Figs. 5-6 validation)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import latency
+from repro.core.allocator import prop_alloc
+from repro.core.planner import Plan, TenantSpec
+from repro.configs.paper_models import paper_profile
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.cache import SramCache
+from repro.serving.simulator import simulate
+from repro.serving.workload import RatePhase, dynamic_trace, poisson_trace
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+class TestWorkload:
+    def test_poisson_rate(self):
+        reqs = poisson_trace([5.0], duration=2000.0, seed=1)
+        rate = len(reqs) / 2000.0
+        assert rate == pytest.approx(5.0, rel=0.05)
+
+    def test_merged_sorted(self):
+        reqs = poisson_trace([2.0, 3.0], duration=100.0, seed=2)
+        times = [r.arrival for r in reqs]
+        assert times == sorted(times)
+        assert {r.model_idx for r in reqs} == {0, 1}
+
+    def test_dynamic_phases(self):
+        phases = [
+            RatePhase(0.0, 100.0, (1.0, 0.0)),
+            RatePhase(100.0, 200.0, (0.0, 5.0)),
+        ]
+        reqs = dynamic_trace(phases, seed=3)
+        for r in reqs:
+            if r.model_idx == 0:
+                assert r.arrival < 100.0
+            else:
+                assert r.arrival >= 100.0
+
+
+class TestCache:
+    def test_cold_miss_then_hit(self):
+        c = SramCache(100)
+        assert c.access(0, 50, 0.0) is True
+        assert c.access(0, 50, 1.0) is False
+
+    def test_lru_eviction(self):
+        c = SramCache(100)
+        c.access(0, 60, 0.0)
+        c.access(1, 60, 1.0)     # evicts 0
+        assert not c.resident(0)
+        assert c.access(0, 60, 2.0) is True  # miss again
+
+    def test_both_fit_no_eviction(self):
+        c = SramCache(100)
+        c.access(0, 40, 0.0)
+        c.access(1, 40, 1.0)
+        assert c.access(0, 40, 2.0) is False
+        assert c.access(1, 40, 3.0) is False
+
+    def test_oversized_capped(self):
+        c = SramCache(100)
+        assert c.access(0, 500, 0.0) is True
+        assert c.access(0, 500, 1.0) is False  # resident share = capacity
+
+    @given(
+        caps=st.integers(10, 200),
+        ops=st.lists(
+            st.tuples(st.integers(0, 3), st.integers(1, 120)),
+            min_size=1,
+            max_size=40,
+        ),
+    )
+    def test_used_never_exceeds_capacity(self, caps, ops):
+        c = SramCache(caps)
+        for t, (m, b) in enumerate(ops):
+            c.access(m, b, float(t))
+            assert c.used <= caps
+
+
+class TestSimulatorVsAnalytic:
+    """The heart of the reproduction: DES observations vs Eq. 1-4 predictions."""
+
+    def _compare(self, tenants, plan, duration=4000.0, tol=0.12, seed=0):
+        reqs = poisson_trace([t.rate for t in tenants], duration, seed=seed)
+        sim = simulate(tenants, plan, HW, reqs)
+        pred = latency.predict(tenants, plan, HW)
+        for i, t in enumerate(tenants):
+            obs = sim.mean_latency(i)
+            exp = pred.latencies[i]
+            assert obs == pytest.approx(exp, rel=tol), (
+                t.profile.name,
+                obs,
+                exp,
+            )
+        return sim, pred
+
+    def test_single_tenant_full_tpu_low_load(self):
+        ts = tenants_for(("inceptionv4", 1.0))
+        plan = Plan((11,), (0,))
+        self._compare(ts, plan)
+
+    def test_single_tenant_full_tpu_moderate_load(self):
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan = Plan((11,), (0,))
+        self._compare(ts, plan)
+
+    def test_single_tenant_partitioned(self):
+        ts = tenants_for(("inceptionv4", 2.0))
+        plan = Plan((9,), (4,))
+        self._compare(ts, plan)
+
+    def test_single_tenant_full_cpu(self):
+        ts = tenants_for(("mnasnet", 2.0))
+        plan = Plan((0,), (4,))
+        self._compare(ts, plan)
+
+    def test_multi_tenant_fits_no_misses(self):
+        ts = tenants_for(("mobilenetv2", 3.0), ("squeezenet", 3.0))
+        plan = Plan((5, 2), (0, 0))
+        sim, pred = self._compare(ts, plan)
+        assert sim.observed_miss_rate(0) == 0.0
+        assert sim.observed_miss_rate(1) == 0.0
+        assert pred.alphas == (0.0, 0.0)
+
+    def test_multi_tenant_5050_alpha_validation(self):
+        # EfficientNet+GPUNet exceed SRAM; 50:50 mix -> alpha ~ 0.5 (Fig. 6a).
+        ts = tenants_for(("efficientnet", 2.0), ("gpunet", 2.0))
+        plan = Plan((6, 5), (0, 0))
+        reqs = poisson_trace([2.0, 2.0], 4000.0, seed=11)
+        sim = simulate(ts, plan, HW, reqs)
+        pred = latency.predict(ts, plan, HW)
+        assert pred.alphas == pytest.approx((0.5, 0.5))
+        # Observed miss rate should be <= the conservative alpha and within
+        # a sane band of it (alpha is an upper bound by construction).
+        for i in range(2):
+            obs = sim.observed_miss_rate(i)
+            assert obs <= pred.alphas[i] + 0.05
+            assert obs >= 0.25
+
+    def test_multi_tenant_9010_skew(self):
+        ts = tenants_for(("efficientnet", 3.6), ("gpunet", 0.4))
+        plan = Plan((6, 5), (0, 0))
+        reqs = poisson_trace([3.6, 0.4], 4000.0, seed=12)
+        sim = simulate(ts, plan, HW, reqs)
+        pred = latency.predict(ts, plan, HW)
+        assert pred.alphas == pytest.approx((0.1, 0.9))
+        # The rare model's weights are almost always evicted.
+        assert sim.observed_miss_rate(1) > 0.6
+        # The frequent model mostly hits.
+        assert sim.observed_miss_rate(0) < 0.25
+
+    def test_mixed_collaborative_multi_tenant(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 2.0))
+        cores = prop_alloc(ts, [9, 7], K_MAX)
+        plan = Plan((9, 7), cores)
+        self._compare(ts, plan, tol=0.15)
+
+    def test_utilization_matches(self):
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([3.0], 4000.0, seed=4)
+        sim = simulate(ts, plan, HW, reqs)
+        pred = latency.predict(ts, plan, HW)
+        assert sim.tpu_utilization == pytest.approx(pred.tpu_utilization, rel=0.08)
+
+    @given(seed=st.integers(0, 5))
+    @settings(max_examples=6, deadline=None)
+    def test_seed_robustness(self, seed):
+        ts = tenants_for(("xception", 2.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([2.0], 3000.0, seed=seed)
+        sim = simulate(ts, plan, HW, reqs)
+        pred = latency.predict(ts, plan, HW)
+        assert sim.mean_latency(0) == pytest.approx(pred.latencies[0], rel=0.2)

@@ -1,0 +1,154 @@
+"""Tests for the training substrate: optimizer, schedules, microbatching,
+checkpointing, data pipeline, and loss-goes-down end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticTokens, batches_for_arch
+from repro.models.transformer import init_params
+from repro.training.checkpoint import restore, save
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.schedule import cosine_schedule, wsd_schedule
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+class TestAdamW:
+    def test_minimizes_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params, cfg)
+        for _ in range(200):
+            grads = {"w": 2.0 * params["w"]}
+            params, state = adamw_update(grads, state, params, cfg)
+        assert np.abs(np.asarray(params["w"])).max() < 0.1
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=1.0)
+        params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((2,))}
+        state = adamw_init(params, cfg)
+        grads = jax.tree.map(jnp.zeros_like, params)
+        new, _ = adamw_update(grads, state, params, cfg)
+        assert float(jnp.abs(new["mat"]).sum()) < float(jnp.abs(params["mat"]).sum())
+        np.testing.assert_allclose(np.asarray(new["vec"]), 1.0)
+
+    def test_bf16_moments(self):
+        cfg = AdamWConfig(moments_dtype=jnp.bfloat16)
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = adamw_init(params, cfg)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        _, state = adamw_update({"w": jnp.ones((4,))}, state, params, cfg)
+        assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+class TestSchedules:
+    @given(step=st.integers(0, 999))
+    @settings(max_examples=30, deadline=None)
+    def test_wsd_bounds(self, step):
+        s = float(wsd_schedule(step, total_steps=1000))
+        assert 0.0 <= s <= 1.0 + 1e-6
+
+    def test_wsd_phases(self):
+        total = 1000
+        assert float(wsd_schedule(5, total_steps=total)) < 1.0       # warmup
+        assert float(wsd_schedule(500, total_steps=total)) == 1.0    # stable
+        assert float(wsd_schedule(999, total_steps=total)) < 0.2     # decay
+
+    def test_cosine_monotone_after_warmup(self):
+        total = 100
+        vals = [float(cosine_schedule(s, total_steps=total)) for s in range(5, 100)]
+        assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+class TestTrainLoop:
+    def test_loss_decreases_qwen_reduced(self):
+        cfg = get_arch("qwen1.5-0.5b").reduced()
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=3e-3))
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        opt = adamw_init(params, tcfg.optimizer)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        losses = []
+        for i, batch in zip(range(25), batches_for_arch(cfg, 8, 64)):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_microbatching_matches_full_batch(self):
+        cfg = get_arch("qwen1.5-0.5b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+        batch = next(iter(batches_for_arch(cfg, 8, 32)))
+        batch = jax.tree.map(jnp.asarray, batch)
+
+        outs = {}
+        for n_micro in (1, 4):
+            tcfg = TrainConfig(
+                optimizer=AdamWConfig(lr=1e-3), n_microbatches=n_micro
+            )
+            opt = adamw_init(params, tcfg.optimizer)
+            step = make_train_step(cfg, tcfg)
+            new_params, _, m = step(params, opt, batch)
+            outs[n_micro] = (new_params, float(m["loss"]))
+        # Same data => same loss and (numerically) same update.
+        assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-4)
+        for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=2e-3, atol=2e-4,
+            )
+
+    def test_moe_trains(self):
+        cfg = get_arch("grok-1-314b").reduced()
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=3e-3))
+        params = init_params(cfg, jax.random.PRNGKey(2), dtype=jnp.float32)
+        opt = adamw_init(params, tcfg.optimizer)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        losses = []
+        for i, batch in zip(range(15), batches_for_arch(cfg, 4, 32)):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+            assert np.isfinite(losses[-1])
+        assert losses[-1] < losses[0]
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = get_arch("gemma3-1b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(3), dtype=jnp.float32)
+        path = str(tmp_path / "ckpt")
+        save(path, params, {"arch": cfg.name})
+        restored = restore(path, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_metadata(self, tmp_path):
+        from repro.training.checkpoint import load_metadata
+
+        path = str(tmp_path / "ckpt")
+        save(path, {"x": jnp.ones(3)}, {"k": "v"})
+        assert load_metadata(path) == {"k": "v"}
+
+
+class TestDataPipeline:
+    def test_shapes_and_determinism(self):
+        dcfg = DataConfig(batch_size=4, seq_len=16, vocab_size=100, seed=7)
+        b1 = next(iter(SyntheticTokens(dcfg)))
+        b2 = next(iter(SyntheticTokens(dcfg)))
+        assert b1["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert b1["tokens"].max() < 100
+        assert b1["tokens"].min() >= 0
+
+    def test_labels_are_shifted_stream(self):
+        dcfg = DataConfig(batch_size=2, seq_len=8, vocab_size=50, seed=0)
+        b = next(iter(SyntheticTokens(dcfg)))
+        # labels[t] == tokens[t+1] by construction
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_vlm_batches(self):
+        cfg = get_arch("phi-3-vision-4.2b").reduced()
+        b = next(iter(batches_for_arch(cfg, 2, 32)))
+        assert "patch_embeds" in b
+        assert b["patch_embeds"].shape == (2, cfg.n_patches, cfg.frontend_dim)
