@@ -1,0 +1,18 @@
+# Developer entry points wrapping the tier-1 verify command (see ROADMAP.md).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: test test-fast bench-smoke
+
+# Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Everything except tests marked `slow` -- the CI gate.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# Fast benchmark sanity: allocator overhead + plan-space engine scaling.
+bench-smoke:
+	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling

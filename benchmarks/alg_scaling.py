@@ -1,0 +1,87 @@
+"""Plan-space engine scaling: batched vs seed scalar Algorithm 1, 2-16 tenants.
+
+The vectorized evaluation engine (``latency.penalized_objective_batch`` over
+``EvalTables``) scores every (m, h) move of a hill-climb iteration in one
+NumPy pass, which turns the allocator's per-candidate Python cost into a
+gather + row-sum.  This sweep measures both implementations on growing
+tenant mixes and verifies they return identical plans.
+
+Mixes beyond the paper's 4-model testbed model a beefier host
+(K_max = max(4, n) cores); the paper platform's 4 cores cannot seat more
+than 4 CPU suffixes, which is exactly the regime the batched engine opens.
+
+Headline checks (CI-asserted by tests/test_batch_eval.py on small mixes):
+  * identical plans at every size,
+  * >= 5x speedup at 8 tenants,
+  * < 100 ms per 16-tenant invocation.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import HW, Row, full_tpu_rates_for_utilization, tenants
+from repro.configs.paper_models import PAPER_MODEL_NAMES, paper_profile
+from repro.core.allocator import _hill_climb_scalar, hill_climb
+from repro.core.plan_tables import PlanTables
+
+SIZES = (2, 4, 8, 12, 16)
+# Scalar cost grows ~quadratically in tenants; cap its reps to keep the
+# sweep short while the batched side gets enough reps for stable numbers.
+BATCH_REPS = 15
+SCALAR_REPS = 4
+ROUNDS = 3
+
+
+def _mix(n: int):
+    names = [PAPER_MODEL_NAMES[i % len(PAPER_MODEL_NAMES)] for i in range(n)]
+    profs = [paper_profile(name) for name in names]
+    rates = full_tpu_rates_for_utilization(profs, 0.5)
+    return tenants(profs, rates)
+
+
+def _best_of(fn, reps: int, rounds: int = ROUNDS) -> float:
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for n in SIZES:
+        ts = _mix(n)
+        k_max = max(HW.cpu.n_cores, n)
+        # Identity first: the speedup claim only counts if plans agree.
+        plan_b, obj_b = hill_climb(ts, HW, k_max, batch=True)
+        plan_s, obj_s = _hill_climb_scalar(ts, HW, k_max)
+        identical = plan_b == plan_s
+
+        # Serving-loop conditions: the controller holds the rate-free tables
+        # across re-plans, so the batched timing includes only the rate-aware
+        # rebuild + climb.  The scalar path has no reusable state.
+        tables = PlanTables.for_tenants(ts, HW, k_max)
+        t_batch = _best_of(
+            lambda: hill_climb(ts, HW, k_max, batch=True, tables=tables), BATCH_REPS
+        )
+        t_batch_cold = _best_of(lambda: hill_climb(ts, HW, k_max, batch=True), BATCH_REPS)
+        t_scalar = _best_of(lambda: _hill_climb_scalar(ts, HW, k_max), SCALAR_REPS)
+        rows.append(
+            Row(
+                f"alg_scaling/n{n}",
+                t_batch * 1e6,
+                f"speedup={t_scalar / t_batch:.1f}x "
+                f"cold={t_scalar / t_batch_cold:.1f}x "
+                f"scalar_ms={t_scalar * 1e3:.2f} "
+                f"batch_ms={t_batch * 1e3:.2f} "
+                f"identical_plans={identical}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

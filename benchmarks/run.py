@@ -12,6 +12,7 @@ import time
 
 from benchmarks import (
     alg_overhead,
+    alg_scaling,
     alpha_ablation,
     fig1_intra_swap,
     fig2_inter_swap,
@@ -31,6 +32,7 @@ MODULES = {
     "fig7": fig7_baselines,
     "fig8": fig8_dynamic,
     "alg_overhead": alg_overhead,
+    "alg_scaling": alg_scaling,
     "alpha_ablation": alpha_ablation,
 }
 

@@ -1,14 +1,24 @@
 """Greedy hill-climbing joint partitioning + core allocation (Algorithm 1),
 the PropAlloc fair-share routine, baseline policies, and a brute-force NLIP
 oracle used by tests on small instances.
+
+Both search routines score candidates through the vectorized plan-space
+engine (``latency.penalized_objective_batch`` / ``objective_batch``): all
+moves of a hill-climb iteration, and chunks of the oracle's exhaustive
+enumeration, are priced in a single NumPy pass.  The seed scalar
+implementations are kept (``batch=False``) as the reference the batched
+paths are tested byte-identical against.
 """
 from __future__ import annotations
 
 import itertools
 import math
-from typing import Sequence
+from typing import Iterator, Sequence
+
+import numpy as np
 
 from repro.core import latency
+from repro.core.plan_tables import EvalTables, PlanTables
 from repro.core.planner import Plan, TenantSpec, validate_plan
 from repro.hw.specs import Platform
 
@@ -60,6 +70,79 @@ def prop_alloc(
     return tuple(cores)
 
 
+def prop_alloc_batch(
+    tenants: Sequence[TenantSpec],
+    partitions: np.ndarray,
+    k_max: int,
+    *,
+    tables: PlanTables | None = None,
+    rates: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized PropAlloc over B candidate partitionings at once.
+
+    Returns ``(cores[B, n], feasible[B])``.  Feasible rows reproduce
+    ``prop_alloc`` exactly -- same largest-remainder rounding, same stable
+    index tie-break, same redirect of leftovers landing on a no-suffix
+    tenant; infeasible rows (more suffix models than K_max, where the scalar
+    version raises ValueError) come back flagged with unspecified cores.
+    """
+    P = np.asarray(partitions, dtype=np.intp)
+    B, n = P.shape
+    if tables is not None and (rates is not None or tables.matches(tenants)):
+        num_points, suffix1, ti = tables.num_points, tables.suffix1, tables.tenant_idx
+    else:
+        # Only the platform-independent tables are needed here.
+        num_points = np.array([t.profile.num_partition_points for t in tenants])
+        width = int(num_points.max()) + 1
+        suffix1 = np.full((n, width), np.nan)
+        for i, t in enumerate(tenants):
+            suffix1[i, : num_points[i] + 1] = t.profile._suffix_cpu1
+        ti = np.arange(n)
+    if rates is None:
+        rates = np.array([t.rate for t in tenants], dtype=np.float64)[None, :]
+    needs = P < num_points[None, :]                             # [B, n]
+    n_need = needs.sum(axis=1)
+    feasible = n_need <= k_max
+    cores = needs.astype(np.int64)  # constraint floor: 1 core per suffix
+    loads = rates * suffix1[ti, P] * needs
+    spare = k_max - n_need                                      # [B]
+    total_load = loads.sum(axis=1)
+    dist = feasible & (spare > 0) & (total_load > 0)
+    if not dist.any():
+        return cores, feasible
+    shares = np.divide(
+        spare[:, None] * loads,
+        total_load[:, None],
+        out=np.zeros_like(loads),
+        where=dist[:, None],
+    )
+    floors = np.floor(shares)
+    cores += floors.astype(np.int64)
+    leftover = (spare - floors.sum(axis=1).astype(np.int64)) * dist
+    # Largest remainder first, stable index tie-break: argsort(-rem) with a
+    # stable kind is exactly sorted(key=(-(rem), i)).
+    order = np.argsort(floors - shares, axis=1, kind="stable")  # [B, n]
+    rank = np.argsort(order, axis=1, kind="stable")             # inverse perm
+    chosen = rank < leftover[:, None]
+    cores += (chosen & needs).astype(np.int64)
+    # Leftovers landing on a no-suffix tenant are redirected to the first
+    # suffix-bearing tenant in remainder order (seed fallback branch).
+    misdirected = (chosen & ~needs).sum(axis=1)
+    if misdirected.any():
+        needy_rank = np.where(needs, rank, n + 1)
+        fallback = np.argmin(needy_rank, axis=1)                # [B]
+        cores[np.arange(B), fallback] += np.where(
+            needs.any(axis=1), misdirected, 0
+        )
+    return cores, feasible
+
+
+# Crossover where the batched engine's fixed NumPy dispatch cost beats the
+# scalar loop's per-candidate Python cost (measured on the dev box; the
+# scalar side grows ~quadratically in tenants, so the exact value is soft).
+_BATCH_MIN_TENANTS = 5
+
+
 def hill_climb(
     tenants: Sequence[TenantSpec],
     platform: Platform,
@@ -67,6 +150,8 @@ def hill_climb(
     *,
     force_alpha_zero: bool = False,
     max_iters: int = 10_000,
+    batch: bool | None = None,
+    tables: PlanTables | None = None,
 ) -> tuple[Plan, float]:
     """Algorithm 1: greedy hill-climbing resource allocation.
 
@@ -75,8 +160,94 @@ def hill_climb(
     commits the best strictly-improving move.  The 2-step lookahead lets the
     search hop over single-point latency spikes (local optima).
 
+    With ``batch=True`` all (m, h) moves of an iteration are scored in one
+    ``penalized_objective_batch`` call against precomputed rate-aware
+    ``EvalTables`` (pass rate-free ``tables`` to reuse the platform-dependent
+    half across re-plans); ``batch=False`` runs the seed scalar loop; the
+    default ``None`` picks by mix size (NumPy dispatch overhead beats the
+    scalar loop only from ~_BATCH_MIN_TENANTS tenants up).  All paths return
+    the same plans.
+
     Returns the final (Plan, predicted objective).
     """
+    if batch is None:
+        batch = len(tenants) >= _BATCH_MIN_TENANTS
+    if not batch:
+        return _hill_climb_scalar(
+            tenants,
+            platform,
+            k_max,
+            force_alpha_zero=force_alpha_zero,
+            max_iters=max_iters,
+        )
+    n = len(tenants)
+    etab = EvalTables.build(tenants, platform, k_max, base=tables)
+    n_points = etab.num_points
+    rates = etab.rates[None, :]
+
+    partition = np.zeros(n, dtype=np.intp)
+    cores = np.array(prop_alloc(tenants, partition, k_max), dtype=np.int64)
+    l_curr = float(
+        latency.penalized_objective_batch(
+            tenants,
+            partition[None, :],
+            cores[None, :],
+            platform,
+            force_alpha_zero=force_alpha_zero,
+            tables=etab,
+        )[0]
+    )
+
+    # Fixed move set in the scalar iteration order (m ascending, h in (1, 2))
+    # so first-minimum argmin tie-breaks identically to the scalar scan.
+    move_m = np.repeat(np.arange(n), 2)
+    move_h = np.tile(np.array([1, 2]), n)
+    deltas = np.zeros((2 * n, n), dtype=np.intp)
+    deltas[np.arange(2 * n), move_m] = move_h
+    move_cap = n_points[move_m] - move_h   # max current p for each move
+
+    for _ in range(max_iters):
+        valid = partition[move_m] <= move_cap
+        if not valid.any():
+            break
+        cand = partition[None, :] + deltas                     # [2n, n]
+        parts = cand if valid.all() else cand[valid]
+        k_cand, feasible = prop_alloc_batch(
+            tenants, parts, k_max, tables=etab.base, rates=rates
+        )
+        if not feasible.all():
+            parts, k_cand = parts[feasible], k_cand[feasible]
+            if parts.shape[0] == 0:
+                break
+        objs = latency.penalized_objective_batch(
+            tenants,
+            parts,
+            k_cand,
+            platform,
+            force_alpha_zero=force_alpha_zero,
+            tables=etab,
+        )
+        j = int(np.argmin(objs))  # first minimum, like the scalar scan
+        if not objs[j] < l_curr:
+            break
+        partition = parts[j]
+        cores = k_cand[j]
+        l_curr = float(objs[j])
+
+    plan = Plan(tuple(int(p) for p in partition), tuple(int(k) for k in cores))
+    validate_plan(plan, tenants, k_max)
+    return plan, l_curr
+
+
+def _hill_climb_scalar(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+    *,
+    force_alpha_zero: bool = False,
+    max_iters: int = 10_000,
+) -> tuple[Plan, float]:
+    """Seed scalar Algorithm 1; reference for the batched path."""
     n = len(tenants)
     partition = [0] * n
     cores = prop_alloc(tenants, partition, k_max)
@@ -171,21 +342,15 @@ def swapless_alpha0_plan(
     return plan
 
 
-def brute_force_oracle(
-    tenants: Sequence[TenantSpec],
-    platform: Platform,
-    k_max: int,
-) -> tuple[Plan, float]:
-    """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
-    only for tests/validation on small instances."""
-    n = len(tenants)
-    best_plan: Plan | None = None
-    best_obj = math.inf
+def _feasible_plans(
+    tenants: Sequence[TenantSpec], k_max: int
+) -> Iterator[tuple[tuple[int, ...], tuple[int, ...]]]:
+    """Every (partition, cores) satisfying constraints (6)-(9), in the seed
+    oracle's deterministic enumeration order."""
     part_ranges = [range(t.profile.num_partition_points + 1) for t in tenants]
     for partition in itertools.product(*part_ranges):
         needs = [p < t.profile.num_partition_points for t, p in zip(tenants, partition)]
-        n_need = sum(needs)
-        if n_need > k_max:
+        if sum(needs) > k_max:
             continue
         core_ranges = [
             range(1, k_max + 1) if need else range(0, 1) for need in needs
@@ -193,10 +358,67 @@ def brute_force_oracle(
         for cores in itertools.product(*core_ranges):
             if sum(cores) > k_max:
                 continue
-            plan = Plan(tuple(partition), tuple(cores))
-            obj = latency.objective(tenants, plan, platform)
-            if obj < best_obj:
-                best_obj = obj
-                best_plan = plan
+            yield partition, cores
+
+
+def brute_force_oracle(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+    *,
+    batch: bool = True,
+    chunk_size: int = 4096,
+) -> tuple[Plan, float]:
+    """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
+    only for tests/validation on small instances.
+
+    The feasible set is streamed through ``objective_batch`` in chunks of
+    ``chunk_size`` plans (``batch=False`` restores the seed scalar loop);
+    strict ``<`` tracking over the same enumeration order keeps the returned
+    plan identical between the two paths, except when two *distinct* plans
+    tie to within float round-off (~1 ulp) -- the decomposed batch objective
+    rounds differently from the scalar one, so either of the tied optima may
+    win.  The objectives themselves always agree to ~1e-12.
+    """
+    if not batch:
+        return _brute_force_scalar(tenants, platform, k_max)
+    tables = EvalTables.build(tenants, platform, k_max)
+    best_plan: Plan | None = None
+    best_obj = math.inf
+    it = _feasible_plans(tenants, k_max)
+    while True:
+        chunk = list(itertools.islice(it, chunk_size))
+        if not chunk:
+            break
+        parts = np.array([c[0] for c in chunk])
+        cores = np.array([c[1] for c in chunk])
+        objs = latency.objective_batch(
+            tenants, parts, cores, platform, tables=tables
+        )
+        # NaN (zero-rate tenant on an unstable queue) never beats ``best`` in
+        # the scalar loop; map to inf so argmin skips it the same way.
+        objs = np.where(np.isnan(objs), np.inf, objs)
+        j = int(np.argmin(objs))
+        if objs[j] < best_obj:
+            best_obj = float(objs[j])
+            best_plan = Plan(chunk[j][0], chunk[j][1])
+    assert best_plan is not None
+    return best_plan, best_obj
+
+
+def _brute_force_scalar(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+) -> tuple[Plan, float]:
+    """Seed scalar oracle; reference for the chunked batch path."""
+    best_plan: Plan | None = None
+    best_obj = math.inf
+    for partition, cores in _feasible_plans(tenants, k_max):
+        plan = Plan(tuple(partition), tuple(cores))
+        obj = latency.objective(tenants, plan, platform)
+        if obj < best_obj:
+            best_obj = obj
+            best_plan = plan
     assert best_plan is not None
     return best_plan, best_obj

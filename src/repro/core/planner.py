@@ -77,6 +77,35 @@ class ModelProfile:
             [[0.0], np.cumsum([s.cpu_time_1core for s in self.segments])]
         )
 
+    @functools.cached_property
+    def _suffix_cpu1(self) -> np.ndarray:
+        """1-core suffix time for every partition point: t1[p] = sum cpu_time
+        of ``segments[p:]`` (length P+1, last entry 0)."""
+        return self._cum_cpu1[-1] - self._cum_cpu1
+
+    @functools.lru_cache(maxsize=8)
+    def suffix_cpu_matrix(self, k_max: int) -> np.ndarray:
+        """Amdahl-scaled suffix CPU time for every ``(p, k)`` pair.
+
+        Shape ``[P+1, k_max+1]``; entry ``[p, k]`` equals
+        ``suffix_cpu_time(p, k)``.  Column 0 is ``inf`` wherever a suffix
+        exists (no cores cannot serve it) and 0 on the full-TPU row ``p=P``.
+        The matrix is the vectorized engine's lookup table -- one gather
+        replaces a Python call per candidate plan.
+        """
+        t1 = self._suffix_cpu1  # [P+1]
+        f = self.segments[-1].cpu_parallel_frac if self.segments else 0.0
+        k = np.arange(k_max + 1, dtype=np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            scale = (1.0 - f) + f / k  # scale[0] = inf (or 1-f if f==0)
+            mat = t1[:, None] * scale[None, :]
+        # k=0 can serve no suffix (matches suffix_cpu_time's k<=0 -> inf),
+        # except on the full-TPU row p=P where there is nothing to serve.
+        mat[:-1, 0] = np.inf
+        mat[-1, 0] = 0.0
+        mat.setflags(write=False)
+        return mat
+
     # --- block aggregates -----------------------------------------------
     def prefix_weight_bytes(self, p: int) -> int:
         return int(self._cum_weight[p])

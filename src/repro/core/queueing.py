@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 
 def mg1_wait(lam: float, es: float, es2: float) -> float:
     """Pollaczek-Khinchine expected queueing delay for an M/G/1/FCFS queue.
@@ -45,6 +47,37 @@ def mdk_wait(lam: float, mu: float, k: int) -> float:
     return 0.5 * (1.0 / (cap - lam) - 1.0 / cap)
 
 
+def mg1_wait_batch(lam: np.ndarray, es: np.ndarray, es2: np.ndarray) -> np.ndarray:
+    """Broadcasting Pollaczek-Khinchine wait; element-wise ``mg1_wait``.
+
+    Any shape; unstable entries (rho >= 1) come back ``inf``, empty queues
+    (lam <= 0) come back 0, mirroring the scalar branch structure exactly.
+    """
+    lam = np.asarray(lam, dtype=np.float64)
+    rho = lam * es
+    with np.errstate(divide="ignore", invalid="ignore"):
+        wait = lam * es2 / (2.0 * (1.0 - rho))
+    wait = np.where(rho >= 1.0, np.inf, wait)
+    return np.where(lam <= 0.0, 0.0, wait)
+
+
+def mdk_wait_batch(lam: np.ndarray, mu: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Broadcasting M/D/k wait approximation; element-wise ``mdk_wait``.
+
+    ``mu`` may be ``inf`` (zero service time): the pooled capacity is then
+    infinite and the wait collapses to 0, as in the scalar version.
+    """
+    lam = np.asarray(lam, dtype=np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        cap = k * mu  # k=0 with mu=inf -> nan; masked by the k<=0 branch below
+        wait = 0.5 * (1.0 / (cap - lam) - 1.0 / cap)
+    wait = np.where(lam >= cap, np.inf, wait)
+    wait = np.where((k <= 0) | (mu <= 0), np.inf, wait)
+    return np.where(lam <= 0.0, 0.0, wait)
+
+
 def mixture_moments(weights: list[float], values: list[float]) -> tuple[float, float]:
     """First and second moments of a discrete mixture distribution.
 
@@ -58,3 +91,21 @@ def mixture_moments(weights: list[float], values: list[float]) -> tuple[float, f
     m1 = sum(w * v for w, v in zip(weights, values)) / tot
     m2 = sum(w * v * v for w, v in zip(weights, values)) / tot
     return m1, m2
+
+
+def mixture_moments_batch(
+    weights: np.ndarray, values: np.ndarray, axis: int = -1
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched ``mixture_moments``: reduce the atom axis of stacked mixtures.
+
+    ``weights`` and ``values`` broadcast against each other; mixtures whose
+    total weight is <= 0 get (0, 0), matching the scalar guard.
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    values = np.asarray(values, dtype=np.float64)
+    tot = weights.sum(axis=axis)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        m1 = (weights * values).sum(axis=axis) / tot
+        m2 = (weights * values * values).sum(axis=axis) / tot
+    ok = tot > 0.0
+    return np.where(ok, m1, 0.0), np.where(ok, m2, 0.0)

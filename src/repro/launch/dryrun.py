@@ -112,6 +112,17 @@ def run_one(
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         }
+        if record["memory"]["peak_bytes"] is None:
+            # The CPU backend's memory analysis reports component sizes but
+            # no peak; approximate it as args + outputs + temps (an upper
+            # bound on simultaneously-live buffers) and say so.
+            parts = [
+                record["memory"][key]
+                for key in ("argument_bytes", "output_bytes", "temp_bytes")
+            ]
+            if all(p is not None for p in parts):
+                record["memory"]["peak_bytes"] = sum(parts)
+                record["memory"]["peak_is_estimate"] = True
         record.update(analyze_compiled(cfg, shape, mesh, compiled))
         if verbose:
             gb = (record["memory"]["peak_bytes"] or 0) / 2**30

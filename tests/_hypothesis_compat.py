@@ -1,0 +1,172 @@
+"""Offline-friendly stand-in for ``hypothesis``.
+
+The real ``hypothesis`` package is used whenever it is importable.  When it
+is not (air-gapped CI, minimal containers), this module degrades ``given``/
+``settings``/``st`` to a deterministic example-based runner: each decorated
+test runs against a fixed pseudo-random set of drawn examples (seeded from
+the test's qualified name, so runs are reproducible and failures stable),
+with range endpoints always included in the first draws.
+
+Only the strategy surface the suite uses is implemented: ``floats``,
+``integers``, ``sampled_from``, ``lists``, ``tuples``, and ``data``.
+
+Usage in test modules::
+
+    from tests._hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """Base: a strategy draws one example from an RNG."""
+
+        def draw(self, rng: random.Random):
+            raise NotImplementedError
+
+        def edge_examples(self) -> list:
+            """Deterministic boundary examples tried before random draws."""
+            return []
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_ignored):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def draw(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+        def edge_examples(self):
+            return [self.lo, self.hi]
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=100, **_ignored):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def draw(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+        def edge_examples(self):
+            return [self.lo, self.hi]
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rng):
+            return rng.choice(self.elements)
+
+        def edge_examples(self):
+            return self.elements[:1]
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, *, min_size=0, max_size=10, **_ignored):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def draw(self, rng):
+            size = rng.randint(self.min_size, self.max_size)
+            return [self.elements.draw(rng) for _ in range(size)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elements):
+            self.elements = elements
+
+        def draw(self, rng):
+            return tuple(e.draw(rng) for e in self.elements)
+
+    class _DataObject:
+        """Interactive draws inside a test body (st.data())."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def draw(self, rng):
+            return _DataObject(rng)
+
+    class _St:
+        floats = staticmethod(_Floats)
+        integers = staticmethod(_Integers)
+        sampled_from = staticmethod(_SampledFrom)
+        lists = staticmethod(_Lists)
+        tuples = staticmethod(_Tuples)
+        data = staticmethod(_DataStrategy)
+
+    st = _St()
+
+    def settings(**kwargs):
+        """Record max_examples on the function; everything else is ignored."""
+
+        def decorate(fn):
+            if "max_examples" in kwargs:
+                fn._compat_max_examples = kwargs["max_examples"]
+            return fn
+
+        return decorate
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*call_args, **call_kwargs):
+                max_examples = getattr(
+                    wrapper,
+                    "_compat_max_examples",
+                    getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                # Boundary pass: hold every strategy at one of its edge
+                # examples simultaneously (hypothesis shrinks toward these).
+                edge_sets = [s.edge_examples() for s in arg_strategies] + [
+                    s.edge_examples() for s in kw_strategies.values()
+                ]
+                n_edge_rounds = max((len(e) for e in edge_sets), default=0)
+                for i in range(n_edge_rounds + max_examples):
+                    drawn_args, drawn_kwargs = [], {}
+                    for j, s in enumerate(arg_strategies):
+                        edges = edge_sets[j]
+                        if i < n_edge_rounds and edges:
+                            drawn_args.append(edges[min(i, len(edges) - 1)])
+                        else:
+                            drawn_args.append(s.draw(rng))
+                    for j, (name, s) in enumerate(kw_strategies.items()):
+                        edges = edge_sets[len(arg_strategies) + j]
+                        if i < n_edge_rounds and edges:
+                            drawn_kwargs[name] = edges[min(i, len(edges) - 1)]
+                        else:
+                            drawn_kwargs[name] = s.draw(rng)
+                    try:
+                        fn(*call_args, *drawn_args, **drawn_kwargs)
+                    except Exception as e:
+                        shown = {f"arg{j}": v for j, v in enumerate(drawn_args)}
+                        shown.update(drawn_kwargs)
+                        raise AssertionError(
+                            f"falsifying example ({fn.__qualname__}, "
+                            f"round {i}): {shown!r}"
+                        ) from e
+
+            # Hide the strategy-provided parameters from pytest, which would
+            # otherwise treat them as fixtures (hypothesis does the same).
+            # Positional strategies fill the rightmost parameters.
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+            if arg_strategies:
+                params = params[: -len(arg_strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return decorate

@@ -3,8 +3,7 @@ constraints -- including optimality checks against a brute-force oracle."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import latency
 from repro.core.allocator import (
@@ -74,6 +73,98 @@ class TestPropAlloc:
         # If anything needs CPU and there is spare capacity + load, all cores
         # are handed out (work-conserving).
         needs = [p < t.profile.num_partition_points for t, p in zip(ts, partition)]
+        loads = [
+            t.rate * t.profile.suffix_cpu_time_1core(p)
+            for t, p in zip(ts, partition)
+        ]
+        if any(needs) and sum(loads) > 0:
+            assert sum(cores) == k_max
+
+
+class TestPropAllocEdgeCases:
+    """Largest-remainder corner cases around allocator's fallback branch."""
+
+    def test_n_need_equals_k_max(self):
+        # Exactly one core per suffix model: the floor allocation IS the
+        # final allocation, no spare to distribute.
+        ts = tenants_for(("inceptionv4", 3.0), ("xception", 1.0), ("mnasnet", 0.5))
+        cores = prop_alloc(ts, [5, 4, 3], 3)
+        assert cores == (1, 1, 1)
+
+    def test_n_need_exceeding_k_max_raises(self):
+        ts = tenants_for(("inceptionv4", 3.0), ("xception", 1.0), ("mnasnet", 0.5))
+        with pytest.raises(ValueError):
+            prop_alloc(ts, [5, 4, 3], 2)
+
+    def test_zero_total_load_keeps_floor_allocation(self):
+        # Suffix models whose CPU suffix costs exactly 0 (or zero-rate
+        # tenants): no load signal to divide by, so the spare cores stay
+        # unassigned and every suffix model keeps its constraint floor of 1.
+        from repro.core.planner import ModelProfile, Segment
+
+        seg = Segment(
+            name="free",
+            flops=0.0,
+            weight_bytes=1024,
+            out_bytes=64,
+            tpu_time=1e-3,
+            cpu_time_1core=0.0,
+            cpu_parallel_frac=0.9,
+        )
+        prof = ModelProfile(name="zero-cpu", segments=(seg, seg), input_bytes=64)
+        ts = [TenantSpec(prof, 1.0), TenantSpec(prof, 2.0)]
+        cores = prop_alloc(ts, [0, 1], K_MAX)
+        assert cores == (1, 1)
+
+    def test_zero_rate_tenants_zero_total_load(self):
+        ts = tenants_for(("inceptionv4", 0.0), ("xception", 0.0))
+        cores = prop_alloc(ts, [5, 4], K_MAX)
+        assert cores == (1, 1)
+
+    def test_full_tpu_tenant_never_receives_leftover(self):
+        # The largest-remainder walk must hand every spare core to a
+        # suffix-bearing tenant even when a no-suffix tenant ties at zero
+        # remainder with a lower index (the fallback branch's concern).
+        for k_max in range(2, 12):
+            ts = tenants_for(
+                ("mnasnet", 1.0),       # full TPU below -> no suffix
+                ("inceptionv4", 1.0),
+                ("xception", 1.0),
+            )
+            partition = [ts[0].profile.num_partition_points, 5, 4]
+            cores = prop_alloc(ts, partition, k_max)
+            assert cores[0] == 0
+            assert sum(cores) == k_max  # work-conserving
+            assert all(c >= 1 for c in cores[1:])
+
+    @given(
+        rates=st.lists(st.floats(0.01, 10.0), min_size=2, max_size=5),
+        k_max=st.integers(2, 16),
+        data=st.data(),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_leftover_always_lands_on_needy(self, rates, k_max, data):
+        # Invariant behind allocator's fallback branch: remainders sum to the
+        # leftover and each is < 1, so at least `leftover` suffix-bearing
+        # tenants have a positive remainder and the no-suffix fallback can
+        # only fire on float pathologies.  Whatever path is taken, no-suffix
+        # tenants end with 0 cores and the result is work-conserving.
+        names = ["inceptionv4", "xception", "densenet201", "mnasnet", "gpunet"]
+        ts = tenants_for(*[(names[i % 5], r) for i, r in enumerate(rates)])
+        partition = [
+            data.draw(st.integers(0, t.profile.num_partition_points)) for t in ts
+        ]
+        needs = [p < t.profile.num_partition_points for t, p in zip(ts, partition)]
+        if sum(needs) > k_max:
+            with pytest.raises(ValueError):
+                prop_alloc(ts, partition, k_max)
+            return
+        cores = prop_alloc(ts, partition, k_max)
+        for need, c in zip(needs, cores):
+            if need:
+                assert c >= 1
+            else:
+                assert c == 0
         loads = [
             t.rate * t.profile.suffix_cpu_time_1core(p)
             for t, p in zip(ts, partition)

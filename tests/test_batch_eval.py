@@ -1,0 +1,370 @@
+"""Vectorized plan-space engine: scalar-equivalence and search-identity tests.
+
+The invariant these tests enforce (recorded in ROADMAP.md): for every plan,
+``penalized_objective_batch`` / ``objective_batch`` match the scalar
+``penalized_objective`` / ``objective`` to float round-off, and the batched
+``hill_climb`` / ``brute_force_oracle`` return byte-identical plans to the
+seed scalar implementations.  Any change to the analytic model must preserve
+this or update both paths together.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.paper_models import PAPER_MODEL_NAMES, paper_profile
+from repro.core import latency, queueing
+from repro.core.allocator import (
+    _brute_force_scalar,
+    _hill_climb_scalar,
+    brute_force_oracle,
+    hill_climb,
+    prop_alloc,
+    prop_alloc_batch,
+)
+from repro.core.plan_tables import EvalTables, PlanTables
+from repro.core.planner import Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+REL_TOL = 1e-12
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def assert_close_or_same_special(scalar: float, batched: float, ctx):
+    """Equal-to-round-off for finite values; exact for inf; NaN matches NaN."""
+    if math.isnan(scalar) or math.isnan(batched):
+        assert math.isnan(scalar) and math.isnan(batched), ctx
+    elif math.isinf(scalar) or math.isinf(batched):
+        assert scalar == batched, ctx
+    else:
+        assert batched == pytest.approx(scalar, rel=REL_TOL, abs=1e-300), ctx
+
+
+def check_plans(ts, plans, *, force_alpha_zero=False):
+    parts = np.array([p.partition for p in plans])
+    cores = np.array([p.cores for p in plans])
+    pen = latency.penalized_objective_batch(
+        ts, parts, cores, HW, force_alpha_zero=force_alpha_zero
+    )
+    obj = latency.objective_batch(
+        ts, parts, cores, HW, force_alpha_zero=force_alpha_zero
+    )
+    for row, plan in enumerate(plans):
+        s_pen = latency.penalized_objective(
+            ts, plan, HW, force_alpha_zero=force_alpha_zero
+        )
+        s_obj = latency.objective(ts, plan, HW, force_alpha_zero=force_alpha_zero)
+        assert_close_or_same_special(s_pen, float(pen[row]), (plan, "penalized"))
+        assert_close_or_same_special(s_obj, float(obj[row]), (plan, "objective"))
+
+
+# --------------------------------------------------------------------------
+# Objective equivalence
+# --------------------------------------------------------------------------
+class TestObjectiveEquivalence:
+    NAMES = ["inceptionv4", "xception", "densenet201", "mnasnet", "mobilenetv2"]
+
+    @given(
+        rates=st.lists(st.floats(0.1, 8.0), min_size=1, max_size=4),
+        k_max=st.integers(2, 12),
+        faz=st.sampled_from([False, True]),
+        data=st.data(),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_random_plans_match_scalar(self, rates, k_max, faz, data):
+        ts = tenants_for(*[(self.NAMES[i % 5], r) for i, r in enumerate(rates)])
+        plans = []
+        for _ in range(6):
+            part = tuple(
+                data.draw(st.integers(0, t.profile.num_partition_points))
+                for t in ts
+            )
+            cores = tuple(
+                data.draw(st.integers(0, k_max)) if p < t.profile.num_partition_points
+                else 0
+                for t, p in zip(ts, part)
+            )
+            plans.append(Plan(part, cores))
+        check_plans(ts, plans, force_alpha_zero=faz)
+
+    def test_full_tpu_k0_rows(self):
+        # k = 0 on full-TPU rows is the valid-plan shape (constraint 7).
+        ts = tenants_for(("mobilenetv2", 1.0), ("mnasnet", 2.0))
+        plans = [
+            Plan((ts[0].profile.num_partition_points,
+                  ts[1].profile.num_partition_points), (0, 0)),
+            Plan((ts[0].profile.num_partition_points, 3), (0, 2)),
+        ]
+        check_plans(ts, plans)
+
+    def test_k0_with_suffix_matches_scalar_penalty(self):
+        # Invalid allocation (suffix but no core): scalar predicts inf
+        # latency; the batch path must agree rather than crash or diverge.
+        ts = tenants_for(("inceptionv4", 1.0))
+        plans = [Plan((3,), (0,))]
+        check_plans(ts, plans)
+
+    def test_unstable_queue_inf_cases(self):
+        # Absurd rates overload both the TPU M/G/1 and the CPU M/D/k.
+        ts = tenants_for(("inceptionv4", 500.0), ("xception", 500.0))
+        P0 = ts[0].profile.num_partition_points
+        P1 = ts[1].profile.num_partition_points
+        plans = [
+            Plan((P0, P1), (0, 0)),     # all-TPU, rho_tpu >> 1
+            Plan((0, 0), (2, 2)),       # all-CPU, both pools overloaded
+            Plan((P0 // 2, P1 // 2), (2, 2)),
+        ]
+        check_plans(ts, plans)
+
+    def test_zero_rate_tenant(self):
+        ts = tenants_for(("inceptionv4", 0.0), ("mnasnet", 1.0))
+        plans = [
+            Plan((5, 3), (2, 2)),
+            Plan((0, ts[1].profile.num_partition_points), (1, 0)),
+        ]
+        check_plans(ts, plans)
+
+    def test_single_all_cpu_and_empty_tpu(self):
+        ts = tenants_for(("gpunet", 2.0))
+        plans = [Plan((0,), (4,)), Plan((0,), (1,))]
+        check_plans(ts, plans)
+
+    def test_zero_rate_tenant_on_unstable_tpu_is_nan_like_scalar(self):
+        # 0 * inf: the scalar objective yields NaN when a zero-rate tenant
+        # sits on an overloaded TPU queue; the batch path must agree.
+        ts = tenants_for(("inceptionv4", 500.0), ("mnasnet", 0.0))
+        P0 = ts[0].profile.num_partition_points
+        P1 = ts[1].profile.num_partition_points
+        check_plans(ts, [Plan((P0, P1), (0, 0))])
+
+    def test_platform_mismatch_rebuilds_tables(self):
+        # Tables carry baked-in hardware constants; passing them with a
+        # different platform must re-price, not silently reuse.
+        from repro.hw.specs import TPU_V5E_SERVING_PLATFORM as DC
+
+        ts = tenants_for(("inceptionv4", 2.0))
+        tabs = PlanTables.for_tenants(ts, HW, K_MAX)
+        parts, cores = np.array([[5]]), np.array([[2]])
+        got = float(latency.objective_batch(ts, parts, cores, DC, tables=tabs)[0])
+        want = latency.objective(ts, Plan((5,), (2,)), DC)
+        assert got == pytest.approx(want, rel=REL_TOL)
+
+    def test_stale_rate_eval_tables_reuse_base(self):
+        ts = tenants_for(("inceptionv4", 2.0), ("mnasnet", 1.0))
+        etab = EvalTables.build(ts, HW, K_MAX)
+        drifted = [TenantSpec(t.profile, t.rate * 1.7) for t in ts]
+        rebuilt = EvalTables.build(drifted, HW, K_MAX, base=etab.base)
+        assert rebuilt.base is etab.base
+        parts, cores = np.array([[5, 3]]), np.array([[2, 2]])
+        got = float(
+            latency.penalized_objective_batch(drifted, parts, cores, HW, tables=etab)[0]
+        )
+        want = latency.penalized_objective(drifted, Plan((5, 3), (2, 2)), HW)
+        assert got == pytest.approx(want, rel=REL_TOL)
+
+    def test_tables_reuse_matches_fresh(self):
+        ts = tenants_for(("inceptionv4", 2.0), ("mnasnet", 1.0))
+        parts = np.array([[5, 3], [11, 0]])
+        cores = np.array([[2, 2], [0, 4]])
+        base = PlanTables.for_tenants(ts, HW, K_MAX)
+        etab = EvalTables.build(ts, HW, K_MAX, base=base)
+        fresh = latency.penalized_objective_batch(ts, parts, cores, HW)
+        via_base = latency.penalized_objective_batch(ts, parts, cores, HW, tables=base)
+        via_eval = latency.penalized_objective_batch(ts, parts, cores, HW, tables=etab)
+        np.testing.assert_array_equal(fresh, via_base)
+        np.testing.assert_array_equal(fresh, via_eval)
+
+
+# --------------------------------------------------------------------------
+# Batched queueing primitives
+# --------------------------------------------------------------------------
+class TestQueueingBatch:
+    @given(
+        lam=st.floats(0.0, 2.0),
+        es=st.floats(0.0, 2.0),
+        cv=st.floats(0.0, 3.0),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_mg1_matches_scalar(self, lam, es, cv):
+        es2 = es * es * (1.0 + cv)
+        batched = float(queueing.mg1_wait_batch(np.array([lam]), np.array([es]),
+                                                np.array([es2]))[0])
+        assert_close_or_same_special(queueing.mg1_wait(lam, es, es2), batched,
+                                     (lam, es, es2))
+
+    @given(
+        lam=st.floats(0.0, 5.0),
+        mu=st.floats(0.0, 5.0),
+        k=st.integers(0, 6),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_mdk_matches_scalar(self, lam, mu, k):
+        batched = float(queueing.mdk_wait_batch(np.array([lam]), np.array([mu]),
+                                                np.array([k]))[0])
+        assert_close_or_same_special(queueing.mdk_wait(lam, mu, k), batched,
+                                     (lam, mu, k))
+
+    def test_mdk_infinite_mu_empty_suffix(self):
+        # mu = inf (zero service time) must give zero wait, not NaN.
+        assert queueing.mdk_wait_batch(np.array([1.0]), np.array([np.inf]),
+                                       np.array([2]))[0] == 0.0
+
+    @given(data=st.data(), n=st.integers(1, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_mixture_moments_match_scalar(self, data, n):
+        w = [data.draw(st.floats(0.0, 3.0)) for _ in range(n)]
+        v = [data.draw(st.floats(0.0, 3.0)) for _ in range(n)]
+        m1, m2 = queueing.mixture_moments(w, v)
+        bm1, bm2 = queueing.mixture_moments_batch(np.array([w]), np.array([v]))
+        assert float(bm1[0]) == pytest.approx(m1, rel=REL_TOL, abs=1e-300)
+        assert float(bm2[0]) == pytest.approx(m2, rel=REL_TOL, abs=1e-300)
+
+
+# --------------------------------------------------------------------------
+# Search identity: batched == seed scalar implementations
+# --------------------------------------------------------------------------
+class TestSearchIdentity:
+    @given(
+        rates=st.lists(st.floats(0.2, 6.0), min_size=1, max_size=4),
+        k_max=st.integers(4, 12),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hill_climb_plans_identical(self, rates, k_max):
+        names = ["inceptionv4", "xception", "gpunet", "efficientnet"]
+        ts = tenants_for(*[(names[i % 4], r) for i, r in enumerate(rates)])
+        plan_b, obj_b = hill_climb(ts, HW, k_max, batch=True)
+        plan_s, obj_s = _hill_climb_scalar(ts, HW, k_max)
+        assert plan_b == plan_s
+        assert obj_b == pytest.approx(obj_s, rel=1e-9)
+
+    def test_hill_climb_auto_mode_identical(self):
+        # The size-based auto dispatch must not change results either side
+        # of the crossover.
+        for n in (2, 6):
+            ts = tenants_for(
+                *[(TestObjectiveEquivalence.NAMES[i % 5], 0.4 + 0.3 * i)
+                  for i in range(n)]
+            )
+            k_max = max(K_MAX, n)
+            assert hill_climb(ts, HW, k_max)[0] == _hill_climb_scalar(ts, HW, k_max)[0]
+
+    def test_hill_climb_force_alpha_zero_identical(self):
+        ts = tenants_for(("inceptionv4", 2.0), ("xception", 1.5), ("mnasnet", 1.0))
+        plan_b, _ = hill_climb(ts, HW, K_MAX, batch=True, force_alpha_zero=True)
+        plan_s, _ = _hill_climb_scalar(ts, HW, K_MAX, force_alpha_zero=True)
+        assert plan_b == plan_s
+
+    @pytest.mark.parametrize(
+        "mix",
+        [
+            [("mobilenetv2", 0.5)],
+            [("inceptionv4", 2.0)],
+            [("gpunet", 2.0), ("efficientnet", 2.0)],
+            [("mnasnet", 3.0), ("mobilenetv2", 1.0)],
+        ],
+    )
+    def test_brute_force_identical(self, mix):
+        ts = tenants_for(*mix)
+        plan_b, obj_b = brute_force_oracle(ts, HW, K_MAX)
+        plan_s, obj_s = _brute_force_scalar(ts, HW, K_MAX)
+        assert plan_b == plan_s
+        assert obj_b == pytest.approx(obj_s, rel=1e-9)
+
+    def test_brute_force_chunk_boundary(self):
+        # A chunk size smaller than the feasible set exercises the
+        # cross-chunk argmin tracking.
+        ts = tenants_for(("mnasnet", 3.0), ("mobilenetv2", 1.0))
+        plan_small, obj_small = brute_force_oracle(ts, HW, K_MAX, chunk_size=7)
+        plan_ref, obj_ref = _brute_force_scalar(ts, HW, K_MAX)
+        assert plan_small == plan_ref
+        assert obj_small == pytest.approx(obj_ref, rel=1e-12)
+
+    @given(
+        rates=st.lists(st.floats(0.05, 6.0), min_size=1, max_size=5),
+        k_max=st.integers(1, 14),
+        data=st.data(),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_prop_alloc_batch_identical(self, rates, k_max, data):
+        names = ["inceptionv4", "xception", "densenet201", "mnasnet", "squeezenet"]
+        ts = tenants_for(*[(names[i % 5], r) for i, r in enumerate(rates)])
+        parts = np.array(
+            [
+                [
+                    data.draw(st.integers(0, t.profile.num_partition_points))
+                    for t in ts
+                ]
+                for _ in range(5)
+            ]
+        )
+        cores_b, feasible = prop_alloc_batch(ts, parts, k_max)
+        for row in range(parts.shape[0]):
+            try:
+                cores_s = prop_alloc(ts, list(parts[row]), k_max)
+            except ValueError:
+                assert not feasible[row]
+            else:
+                assert feasible[row]
+                assert tuple(cores_b[row]) == cores_s
+
+
+# --------------------------------------------------------------------------
+# Table construction details
+# --------------------------------------------------------------------------
+class TestTables:
+    def test_suffix_cpu_matrix_matches_scalar(self):
+        prof = paper_profile("inceptionv4")
+        mat = prof.suffix_cpu_matrix(6)
+        for p in range(prof.num_partition_points + 1):
+            for k in range(7):
+                assert_close_or_same_special(
+                    prof.suffix_cpu_time(p, k), float(mat[p, k]), (p, k)
+                )
+
+    def test_plan_tables_match_profile_accessors(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 2.0))
+        tab = PlanTables.for_tenants(ts, HW, K_MAX)
+        from repro.core.planner import load_time, prefix_service_time
+
+        for i, t in enumerate(ts):
+            prof = t.profile
+            for p in range(prof.num_partition_points + 1):
+                assert tab.prefix_service[i, p] == pytest.approx(
+                    prefix_service_time(prof, p, HW), rel=REL_TOL
+                )
+                assert tab.load[i, p] == pytest.approx(
+                    load_time(prof, p, HW), rel=REL_TOL
+                )
+                assert tab.suffix1[i, p] == pytest.approx(
+                    prof.suffix_cpu_time_1core(p), rel=REL_TOL
+                )
+                assert tab.prefix_weight[i, p] == prof.prefix_weight_bytes(p)
+                assert tab.boundary[i, p] == pytest.approx(
+                    prof.boundary_bytes(p) / HW.swap_bw, rel=REL_TOL
+                )
+
+    def test_padding_is_nan_poisoned(self):
+        # Tenants of different depths: the shorter tenant's padded cells
+        # must be NaN so out-of-range gathers cannot go unnoticed.
+        ts = tenants_for(("inceptionv4", 1.0), ("squeezenet", 1.0))
+        tab = PlanTables.for_tenants(ts, HW, K_MAX)
+        P_short = ts[1].profile.num_partition_points
+        P_long = ts[0].profile.num_partition_points
+        if P_short < P_long:
+            assert np.isnan(tab.prefix_service[1, P_short + 1 :]).all()
+
+    def test_eval_tables_matches_guard(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 2.0))
+        etab = EvalTables.build(ts, HW, K_MAX)
+        assert etab.matches(ts)
+        other_rate = [TenantSpec(t.profile, t.rate + 1.0) for t in ts]
+        assert not etab.matches(other_rate)
+        other_prof = tenants_for(("xception", 1.0), ("mnasnet", 2.0))
+        assert not etab.matches(other_prof)

@@ -2,8 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.queueing import mdk_wait, mg1_wait, mixture_moments
 

@@ -4,8 +4,7 @@ in-silico analogue of the paper's Figs. 5-6 validation)."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import latency
 from repro.core.allocator import prop_alloc
