@@ -13,6 +13,8 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
-# Fast benchmark sanity: allocator overhead + plan-space engine scaling.
+# Fast benchmark sanity: allocator overhead + plan-space engine scaling,
+# including the incremental re-planner on the large 32/64-tenant mixes.
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
+	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64

@@ -1,22 +1,32 @@
-"""Plan-space engine scaling: batched vs seed scalar Algorithm 1, 2-16 tenants.
+"""Plan-space engine scaling: batched vs seed scalar Algorithm 1, plus the
+incremental re-planning engine (warm start + delta evaluation), 2-64 tenants.
 
 The vectorized evaluation engine (``latency.penalized_objective_batch`` over
 ``EvalTables``) scores every (m, h) move of a hill-climb iteration in one
-NumPy pass, which turns the allocator's per-candidate Python cost into a
-gather + row-sum.  This sweep measures both implementations on growing
-tenant mixes and verifies they return identical plans.
+NumPy pass; the incremental engine on top of it prices each neighbor move as
+a delta against the current plan and warm-starts each re-plan from the
+incumbent (``hill_climb(init_plan=...)``), which is the serving controller's
+steady-state path.
 
 Mixes beyond the paper's 4-model testbed model a beefier host
 (K_max = max(4, n) cores); the paper platform's 4 cores cannot seat more
 than 4 CPU suffixes, which is exactly the regime the batched engine opens.
 
-Headline checks (CI-asserted by tests/test_batch_eval.py on small mixes):
-  * identical plans at every size,
-  * >= 5x speedup at 8 tenants,
-  * < 100 ms per 16-tenant invocation.
+Headline checks (CI-asserted by tests/test_batch_eval.py and
+tests/test_replan.py on small mixes):
+  * batched plans identical to the seed scalar reference at every size the
+    scalar path can afford (n <= SCALAR_MAX_N),
+  * >= 5x batch speedup at 8 tenants,
+  * < 100 ms per re-plan at 32 tenants (cold and warm),
+  * >= 3x warm-start speedup over the cold climb at 16+ tenants, with the
+    warm plan tying or beating the cold objective (the warm search is a
+    bidirectional local descent from the incumbent -- see allocator.py).
+
+Usage: ``python -m benchmarks.alg_scaling [--tenants 32,64]``.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks.common import HW, Row, full_tpu_rates_for_utilization, tenants
@@ -26,10 +36,15 @@ from repro.core.plan_tables import PlanTables
 
 SIZES = (2, 4, 8, 12, 16)
 # Scalar cost grows ~quadratically in tenants; cap its reps to keep the
-# sweep short while the batched side gets enough reps for stable numbers.
+# sweep short while the batched side gets enough reps for stable numbers,
+# and skip the scalar reference entirely on the huge mixes.
 BATCH_REPS = 15
 SCALAR_REPS = 4
+SCALAR_MAX_N = 16
 ROUNDS = 3
+# Rate drift applied between the incumbent plan and the re-planned mix:
+# alternating +20% / -15%, the magnitude one 30 s controller period sees.
+DRIFT = (1.20, 0.85)
 
 
 def _mix(n: int):
@@ -37,6 +52,13 @@ def _mix(n: int):
     profs = [paper_profile(name) for name in names]
     rates = full_tpu_rates_for_utilization(profs, 0.5)
     return tenants(profs, rates)
+
+
+def _drifted(ts):
+    return tenants(
+        [t.profile for t in ts],
+        [t.rate * DRIFT[i % len(DRIFT)] for i, t in enumerate(ts)],
+    )
 
 
 def _best_of(fn, reps: int, rounds: int = ROUNDS) -> float:
@@ -49,39 +71,78 @@ def _best_of(fn, reps: int, rounds: int = ROUNDS) -> float:
     return best
 
 
-def run() -> list[Row]:
+def run(sizes=SIZES) -> list[Row]:
     rows: list[Row] = []
-    for n in SIZES:
+    for n in sizes:
         ts = _mix(n)
         k_max = max(HW.cpu.n_cores, n)
+        tables = PlanTables.for_tenants(ts, HW, k_max)
         # Identity first: the speedup claim only counts if plans agree.
-        plan_b, obj_b = hill_climb(ts, HW, k_max, batch=True)
-        plan_s, obj_s = _hill_climb_scalar(ts, HW, k_max)
-        identical = plan_b == plan_s
+        plan_b, obj_b = hill_climb(ts, HW, k_max, batch=True, tables=tables)
+        if n <= SCALAR_MAX_N:
+            plan_s, _ = _hill_climb_scalar(ts, HW, k_max)
+            identical = plan_b == plan_s
+            t_scalar = _best_of(lambda: _hill_climb_scalar(ts, HW, k_max), SCALAR_REPS)
+        else:
+            identical, t_scalar = None, None
 
         # Serving-loop conditions: the controller holds the rate-free tables
         # across re-plans, so the batched timing includes only the rate-aware
         # rebuild + climb.  The scalar path has no reusable state.
-        tables = PlanTables.for_tenants(ts, HW, k_max)
         t_batch = _best_of(
             lambda: hill_climb(ts, HW, k_max, batch=True, tables=tables), BATCH_REPS
         )
-        t_batch_cold = _best_of(lambda: hill_climb(ts, HW, k_max, batch=True), BATCH_REPS)
-        t_scalar = _best_of(lambda: _hill_climb_scalar(ts, HW, k_max), SCALAR_REPS)
-        rows.append(
-            Row(
-                f"alg_scaling/n{n}",
-                t_batch * 1e6,
-                f"speedup={t_scalar / t_batch:.1f}x "
-                f"cold={t_scalar / t_batch_cold:.1f}x "
-                f"scalar_ms={t_scalar * 1e3:.2f} "
-                f"batch_ms={t_batch * 1e3:.2f} "
-                f"identical_plans={identical}",
+        parts = [f"batch_ms={t_batch * 1e3:.2f}"]
+        if t_scalar is not None:
+            t_batch_cold = _best_of(
+                lambda: hill_climb(ts, HW, k_max, batch=True), BATCH_REPS
             )
+            parts += [
+                f"speedup={t_scalar / t_batch:.1f}x",
+                f"cold={t_scalar / t_batch_cold:.1f}x",
+                f"scalar_ms={t_scalar * 1e3:.2f}",
+                f"identical_plans={identical}",
+            ]
+
+        # Incremental re-plan: rates drift one controller period, the climb
+        # warm-starts from the incumbent plan with delta evaluation.
+        ts2 = _drifted(ts)
+        plan_c, obj_c = hill_climb(ts2, HW, k_max, batch=True, tables=tables)
+        plan_w, obj_w = hill_climb(
+            ts2, HW, k_max, batch=True, tables=tables, init_plan=plan_b
         )
+        t_replan_cold = _best_of(
+            lambda: hill_climb(ts2, HW, k_max, batch=True, tables=tables), BATCH_REPS
+        )
+        t_replan_warm = _best_of(
+            lambda: hill_climb(
+                ts2, HW, k_max, batch=True, tables=tables, init_plan=plan_b
+            ),
+            BATCH_REPS,
+        )
+        warm_ok = plan_w == plan_c or obj_w <= obj_c * (1.0 + 1e-9)
+        parts += [
+            f"replan_cold_ms={t_replan_cold * 1e3:.2f}",
+            f"replan_warm_ms={t_replan_warm * 1e3:.2f}",
+            f"warm_speedup={t_replan_cold / t_replan_warm:.1f}x",
+            f"warm_ties_or_beats_cold={warm_ok}",
+        ]
+        rows.append(Row(f"alg_scaling/n{n}", t_batch * 1e6, " ".join(parts)))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--tenants",
+        type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=SIZES,
+        help="comma-separated mix sizes to sweep (default: %(default)s)",
+    )
+    args = ap.parse_args(argv)
+    for r in run(args.tenants):
         print(r.csv())
+
+
+if __name__ == "__main__":
+    main()

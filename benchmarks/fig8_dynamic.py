@@ -30,9 +30,12 @@ def run() -> list[Row]:
     profs = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
     trace = dynamic_trace(PHASES, seed=5)
 
+    # warmup_frac matches simulate()'s default so the adaptive and static
+    # rows below exclude the same cold-start cache fills.
     res = run_adaptive(
         profs, trace, HW, K_MAX,
         replan_period=30.0, window=30.0, initial_rates=(5.0, 1.0),
+        warmup_frac=0.05,
     )
     adaptive_lat = res.sim.overall_mean()
     max_plan_ms = max(res.plan_compute_seconds) * 1e3

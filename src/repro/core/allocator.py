@@ -152,6 +152,8 @@ def hill_climb(
     max_iters: int = 10_000,
     batch: bool | None = None,
     tables: PlanTables | None = None,
+    init_plan: Plan | None = None,
+    prune: bool = True,
 ) -> tuple[Plan, float]:
     """Algorithm 1: greedy hill-climbing resource allocation.
 
@@ -161,18 +163,38 @@ def hill_climb(
     search hop over single-point latency spikes (local optima).
 
     With ``batch=True`` all (m, h) moves of an iteration are scored in one
-    ``penalized_objective_batch`` call against precomputed rate-aware
-    ``EvalTables`` (pass rate-free ``tables`` to reuse the platform-dependent
-    half across re-plans); ``batch=False`` runs the seed scalar loop; the
-    default ``None`` picks by mix size (NumPy dispatch overhead beats the
-    scalar loop only from ~_BATCH_MIN_TENANTS tenants up).  All paths return
-    the same plans.
+    delta-evaluation call against precomputed rate-aware ``EvalTables``
+    (pass rate-free ``tables`` to reuse the platform-dependent half across
+    re-plans); ``batch=False`` runs the seed scalar loop; the default
+    ``None`` picks by mix size (NumPy dispatch overhead beats the scalar
+    loop only from ~_BATCH_MIN_TENANTS tenants up).  All paths return the
+    same plans for profiles whose Pareto frontier is full -- every synthetic
+    paper profile is (ROADMAP.md invariant; ties within ~1 ulp may resolve
+    to either tied plan).  On profiles with dominated points the pruned
+    batched walk may legitimately commit different moves than the scalar
+    scan; pass ``prune=False`` for a scalar-faithful batched search.
+
+    Incremental re-planning (batched path only):
+
+    * ``prune=True`` walks each tenant's Pareto frontier of partition points
+      (``ModelProfile.pareto_points``) instead of the raw 0..P_i axis, so a
+      move advances h *frontier positions*.  Dominated points can never be
+      the strictly-best committed move, so with smooth profiles (no
+      dominated points) the walk is bit-identical to the unpruned one.
+    * ``init_plan`` warm-starts the climb from an incumbent plan (the online
+      controller passes the previous re-plan's result) and enables the
+      h in {-1,-2} down-moves, making the search a bidirectional local
+      descent -- successive re-plans are near each other as rates drift, so
+      the warm climb converges in a handful of iterations instead of
+      re-walking up from all-CPU.
 
     Returns the final (Plan, predicted objective).
     """
     if batch is None:
-        batch = len(tenants) >= _BATCH_MIN_TENANTS
+        batch = init_plan is not None or len(tenants) >= _BATCH_MIN_TENANTS
     if not batch:
+        if init_plan is not None:
+            raise ValueError("init_plan warm start requires the batched path")
         return _hill_climb_scalar(
             tenants,
             platform,
@@ -182,10 +204,27 @@ def hill_climb(
         )
     n = len(tenants)
     etab = EvalTables.build(tenants, platform, k_max, base=tables)
-    n_points = etab.num_points
     rates = etab.rates[None, :]
+    if prune:
+        fronts = etab.base.frontiers
+    else:
+        fronts = tuple(np.arange(P_i + 1) for P_i in etab.num_points)
+    flen = np.array([len(f) for f in fronts])
+    fr = np.zeros((n, int(flen.max())), dtype=np.intp)
+    for i, f in enumerate(fronts):
+        fr[i, : len(f)] = f
 
-    partition = np.zeros(n, dtype=np.intp)
+    pos = np.zeros(n, dtype=np.intp)
+    if init_plan is not None:
+        if len(init_plan.partition) != n:
+            raise ValueError("init_plan size mismatch")
+        # Snap each incumbent point to the nearest frontier point below it
+        # (identity when the incumbent came from a pruned search; a snapped
+        # interior point stays interior, so PropAlloc feasibility carries
+        # over from the incumbent).
+        for i, f in enumerate(fronts):
+            pos[i] = np.searchsorted(f, init_plan.partition[i], side="right") - 1
+    partition = fr[np.arange(n), pos]
     cores = np.array(prop_alloc(tenants, partition, k_max), dtype=np.int64)
     l_curr = float(
         latency.penalized_objective_batch(
@@ -199,28 +238,33 @@ def hill_climb(
     )
 
     # Fixed move set in the scalar iteration order (m ascending, h in (1, 2))
-    # so first-minimum argmin tie-breaks identically to the scalar scan.
-    move_m = np.repeat(np.arange(n), 2)
-    move_h = np.tile(np.array([1, 2]), n)
-    deltas = np.zeros((2 * n, n), dtype=np.intp)
-    deltas[np.arange(2 * n), move_m] = move_h
-    move_cap = n_points[move_m] - move_h   # max current p for each move
+    # so first-minimum argmin tie-breaks identically to the scalar scan; a
+    # warm start appends the down-moves after the up-moves it may need to
+    # retreat from the incumbent as rates drift back.
+    hs = (1, 2, -1, -2) if init_plan is not None else (1, 2)
+    move_m = np.repeat(np.arange(n), len(hs))
+    move_h = np.tile(np.array(hs), n)
 
     for _ in range(max_iters):
-        valid = partition[move_m] <= move_cap
+        cpos = pos[move_m] + move_h
+        valid = (cpos >= 0) & (cpos < flen[move_m])
         if not valid.any():
             break
-        cand = partition[None, :] + deltas                     # [2n, n]
-        parts = cand if valid.all() else cand[valid]
+        vm, vpos = move_m[valid], cpos[valid]
+        parts = np.repeat(partition[None, :], len(vm), axis=0)
+        parts[np.arange(len(vm)), vm] = fr[vm, vpos]
         k_cand, feasible = prop_alloc_batch(
             tenants, parts, k_max, tables=etab.base, rates=rates
         )
         if not feasible.all():
             parts, k_cand = parts[feasible], k_cand[feasible]
+            vm, vpos = vm[feasible], vpos[feasible]
             if parts.shape[0] == 0:
                 break
-        objs = latency.penalized_objective_batch(
+        objs = latency.penalized_objective_delta_batch(
             tenants,
+            partition,
+            cores,
             parts,
             k_cand,
             platform,
@@ -232,6 +276,7 @@ def hill_climb(
             break
         partition = parts[j]
         cores = k_cand[j]
+        pos[vm[j]] = vpos[j]
         l_curr = float(objs[j])
 
     plan = Plan(tuple(int(p) for p in partition), tuple(int(k) for k in cores))
@@ -343,11 +388,21 @@ def swapless_alpha0_plan(
 
 
 def _feasible_plans(
-    tenants: Sequence[TenantSpec], k_max: int
+    tenants: Sequence[TenantSpec],
+    k_max: int,
+    frontiers: Sequence[Sequence[int]] | None = None,
 ) -> Iterator[tuple[tuple[int, ...], tuple[int, ...]]]:
     """Every (partition, cores) satisfying constraints (6)-(9), in the seed
-    oracle's deterministic enumeration order."""
-    part_ranges = [range(t.profile.num_partition_points + 1) for t in tenants]
+    oracle's deterministic enumeration order.  ``frontiers`` restricts each
+    tenant's partition axis to its non-dominated points -- a subsequence of
+    the full enumeration, so strict ``<`` tracking still returns the first
+    optimum in seed order among the surviving plans."""
+    if frontiers is None:
+        part_ranges: list[Sequence[int]] = [
+            range(t.profile.num_partition_points + 1) for t in tenants
+        ]
+    else:
+        part_ranges = [[int(p) for p in f] for f in frontiers]
     for partition in itertools.product(*part_ranges):
         needs = [p < t.profile.num_partition_points for t, p in zip(tenants, partition)]
         if sum(needs) > k_max:
@@ -368,6 +423,7 @@ def brute_force_oracle(
     *,
     batch: bool = True,
     chunk_size: int = 4096,
+    prune: bool = True,
 ) -> tuple[Plan, float]:
     """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
     only for tests/validation on small instances.
@@ -379,13 +435,21 @@ def brute_force_oracle(
     tie to within float round-off (~1 ulp) -- the decomposed batch objective
     rounds differently from the scalar one, so either of the tied optima may
     win.  The objectives themselves always agree to ~1e-12.
+
+    ``prune=True`` sweeps only each tenant's Pareto frontier of partition
+    points; dominated points never carry the unique optimum (proof in
+    ``ModelProfile.pareto_points``), so the pruned optimum equals the full
+    one -- modulo the same tied-plans caveat when a pruned point ties a
+    frontier point exactly.
     """
     if not batch:
         return _brute_force_scalar(tenants, platform, k_max)
     tables = EvalTables.build(tenants, platform, k_max)
     best_plan: Plan | None = None
     best_obj = math.inf
-    it = _feasible_plans(tenants, k_max)
+    it = _feasible_plans(
+        tenants, k_max, frontiers=tables.base.frontiers if prune else None
+    )
     while True:
         chunk = list(itertools.islice(it, chunk_size))
         if not chunk:

@@ -285,6 +285,33 @@ def penalized_objective(
 # objective up to float round-off (~1e-12 relative).  Any future change to
 # the analytic model must land in both paths.
 
+def _resolve_tables(
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    cores: np.ndarray,
+    tables: PlanTables | EvalTables | None,
+) -> EvalTables:
+    """Rate-aware tables for this mix, reusing whatever half of ``tables``
+    is still valid (EvalTables -> as-is; stale rates -> rebuild on the same
+    PlanTables; profile/platform mismatch -> full rebuild)."""
+    if isinstance(tables, EvalTables) and tables.matches(tenants, platform):
+        et = tables
+    else:
+        # Reuse the rate-free half when only the rates went stale; build
+        # discards it if the profiles or platform do not match.
+        base = tables.base if isinstance(tables, EvalTables) else tables
+        et = EvalTables.build(
+            tenants,
+            platform,
+            int(max(np.max(cores, initial=1), base.k_max if base else 1)),
+            base=base,
+        )
+    if cores.size and int(cores.max()) > et.k_max:
+        # Core counts beyond the prebuilt k-axis: extend once.
+        et = EvalTables.build(tenants, platform, int(cores.max()), base=et.base)
+    return et
+
+
 def _batch_eval(
     tenants: Sequence[TenantSpec],
     partitions: np.ndarray,
@@ -306,30 +333,28 @@ def _batch_eval(
     on [B]-shaped arrays -- the per-candidate cost no longer scales with the
     per-tenant Python loop of the scalar path.
     """
-    if isinstance(tables, EvalTables) and tables.matches(tenants, platform):
-        et = tables
-    else:
-        # Reuse the rate-free half when only the rates went stale; build
-        # discards it if the profiles or platform do not match.
-        base = tables.base if isinstance(tables, EvalTables) else tables
-        et = EvalTables.build(
-            tenants,
-            platform,
-            int(max(np.max(cores, initial=1), base.k_max if base else 1)),
-            base=base,
-        )
     P = np.asarray(partitions, dtype=np.intp)
     K = np.asarray(cores, dtype=np.intp)
     if P.ndim != 2 or P.shape != K.shape:
         raise ValueError(f"expected [B, n] partitions/cores, got {P.shape}/{K.shape}")
-    if K.size and int(K.max()) > et.k_max:
-        # Core counts beyond the prebuilt k-axis: extend once.
-        et = EvalTables.build(tenants, platform, int(K.max()), base=et.base)
+    et = _resolve_tables(tenants, platform, K, tables)
 
     ti = et.tenant_idx
     A = et.pstack[ti, P].sum(axis=1)       # [B, 9] per-tenant aggregates
     F = et.pkstack[ti, P, K].sum(axis=1)   # [B, 2] static latency + overload
+    return _aggregate_objective(et, A, F, P, force_alpha_zero=force_alpha_zero)
 
+
+def _aggregate_objective(
+    et: EvalTables,
+    A: np.ndarray,
+    F: np.ndarray,
+    P: np.ndarray,
+    *,
+    force_alpha_zero: bool,
+) -> tuple[np.ndarray, np.ndarray]:
+    """O(1)-per-plan tail of the decomposed objective: [B, 9] / [B, 2]
+    per-tenant aggregates -> (weighted_latency_total, overload)."""
     lam = A[:, PCOL_LAM]
     S1 = A[:, PCOL_S1]
     S2 = A[:, PCOL_S2]
@@ -421,6 +446,81 @@ def penalized_objective_batch(
         platform,
         force_alpha_zero=force_alpha_zero,
         tables=tables,
+    )
+    feasible = (overload == 0.0) & np.isfinite(total)
+    return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))
+
+
+def penalized_objective_delta_batch(
+    tenants: Sequence[TenantSpec],
+    base_partition: np.ndarray,
+    base_cores: np.ndarray,
+    partitions: np.ndarray,
+    cores: np.ndarray,
+    platform: Platform,
+    *,
+    force_alpha_zero: bool = False,
+    tables: PlanTables | EvalTables | None = None,
+) -> np.ndarray:
+    """``penalized_objective_batch`` for neighbors of one base plan.
+
+    Candidate b's per-tenant aggregates are recovered as
+    ``base_aggregate + (new - old)`` over only the (tenant, p/k) entries
+    where row b differs from ``(base_partition, base_cores)`` -- the
+    hill-climb's neighbor moves change one tenant's partition and a handful
+    of core counts, so each candidate costs O(changed) gathered table rows
+    instead of the full O(n) re-gather of ``penalized_objective_batch``.
+    The base aggregates themselves are re-summed fresh on every call (one
+    O(n) pass), so the delta rounding never compounds across hill-climb
+    iterations: each value differs from the full re-gather by at most the
+    one add/subtract round-off (~1 ulp), which is inside the plan-identity
+    tie tolerance recorded in ROADMAP.md.
+    """
+    P = np.asarray(partitions, dtype=np.intp)
+    K = np.asarray(cores, dtype=np.intp)
+    if P.ndim != 2 or P.shape != K.shape:
+        raise ValueError(f"expected [B, n] partitions/cores, got {P.shape}/{K.shape}")
+    P0 = np.asarray(base_partition, dtype=np.intp)
+    K0 = np.asarray(base_cores, dtype=np.intp)
+    if P0.shape != (P.shape[1],) or K0.shape != P0.shape:
+        raise ValueError(
+            f"expected [n] base partition/cores, got {P0.shape}/{K0.shape}"
+        )
+    et = _resolve_tables(
+        tenants, platform, np.concatenate([K.ravel(), K0]), tables
+    )
+    ti = et.tenant_idx
+    B = P.shape[0]
+    F0 = et.pkstack[ti, P0, K0].sum(axis=0)                  # [2]
+    if not np.isfinite(F0).all():
+        # An infeasible base (e.g. the unstable all-CPU start of Algorithm 1)
+        # has inf static latency, and inf-base deltas would turn genuinely
+        # feasible neighbors into NaN.  Every per-tenant summand is >= 0, so
+        # a finite row-sum certifies every old cell is finite and the deltas
+        # below are exact; otherwise score the neighbors from scratch.
+        return penalized_objective_batch(
+            tenants,
+            partitions,
+            cores,
+            platform,
+            force_alpha_zero=force_alpha_zero,
+            tables=et,
+        )
+    A = np.tile(et.pstack[ti, P0].sum(axis=0), (B, 1))       # [B, 9]
+    F = np.tile(F0, (B, 1))                                  # [B, 2]
+
+    b_idx, i_idx = np.nonzero((P != P0[None, :]) | (K != K0[None, :]))
+    if b_idx.size:
+        pi = ti[i_idx]
+        p_new, k_new = P[b_idx, i_idx], K[b_idx, i_idx]
+        np.add.at(A, b_idx, et.pstack[pi, p_new] - et.pstack[pi, P0[i_idx]])
+        np.add.at(
+            F,
+            b_idx,
+            et.pkstack[pi, p_new, k_new] - et.pkstack[pi, P0[i_idx], K0[i_idx]],
+        )
+    total, overload = _aggregate_objective(
+        et, A, F, P, force_alpha_zero=force_alpha_zero
     )
     feasible = (overload == 0.0) & np.isfinite(total)
     return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))

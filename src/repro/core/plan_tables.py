@@ -84,10 +84,24 @@ class PlanTables:
     prefix_weight: np.ndarray   # [n, P_max+1] TPU-resident bytes
     k_max: int
     tenant_idx: np.ndarray = dataclasses.field(repr=False, default=None)  # [n]
+    # Per-tenant sorted non-dominated partition points (see
+    # ``ModelProfile.pareto_points`` for the dominance relation and proof).
+    # Always contains 0 and P_i; the searchers' ``prune`` flag opts out.
+    frontiers: tuple[np.ndarray, ...] = dataclasses.field(
+        repr=False, default=None
+    )
 
     def __post_init__(self) -> None:
         if self.tenant_idx is None:
             object.__setattr__(self, "tenant_idx", np.arange(len(self.profiles)))
+        if self.frontiers is None:
+            object.__setattr__(
+                self, "frontiers", tuple(p.pareto_points for p in self.profiles)
+            )
+
+    @property
+    def frontier_sizes(self) -> np.ndarray:
+        return np.array([len(f) for f in self.frontiers])
 
     @property
     def n_tenants(self) -> int:

@@ -83,6 +83,72 @@ class ModelProfile:
         of ``segments[p:]`` (length P+1, last entry 0)."""
         return self._cum_cpu1[-1] - self._cum_cpu1
 
+    @functools.cached_property
+    def pareto_points(self) -> np.ndarray:
+        """Non-dominated partition points (the pruned search frontier).
+
+        A point ``p`` is *dominated* by ``q`` when ``q`` is no worse on every
+        cost dimension the objective (Eq. 1-5, Eq. 10) can see for this model:
+
+            w:  prefix weight bytes   (footprint, T_load, intra-swap overflow)
+            s:  cumulative TPU time   (prefix compute)
+            c:  1-core CPU suffix time
+            b:  boundary tensor bytes (charged only on split plans, so the
+                endpoints 0 and P dominate regardless of their b)
+
+        with at least one dimension strictly better (exact duplicates keep
+        the smallest ``p``).  The comparison is platform-free: every
+        platform-dependent term is monotone in (w, s, c, b) -- prefix service
+        is ``s + max(0, w - C)/B``, T_load is ``min(w, C)/B``, transfer times
+        scale b by ``1/B``, and Amdahl scaling multiplies c by a k-dependent
+        positive factor -- so one frontier is exact for all platforms.
+
+        Exactness: replacing a dominated ``p_i`` by its dominator ``q`` in any
+        feasible plan is feasible (``q = P`` frees model i's cores, ``q = 0``
+        keeps them) and never increases the objective: model i's own static
+        terms shrink termwise, and the coupled terms -- the M/G/1 moment
+        numerators, lambda_TPU, the aggregate footprint W(P) and the Eq. 10
+        swap sums -- are all nondecreasing in (w_i, s_i, 1{p_i>0}), as is the
+        infeasibility overload.  Hence the pruned plan space always retains an
+        optimum of the NLIP; for a single tenant (where Eq. 10 collapses to
+        alpha = 0) the argument is termwise immediate.  The greedy hill-climb
+        additionally never *commits* to a point dominated from below (the move
+        cannot strictly improve), so sweeping the frontier is how Algorithm 1
+        exploits this; ``prune=False`` on the search routines opts out.
+        """
+        P = self.num_partition_points
+        idx = np.arange(P + 1)
+        if P <= 1:
+            return idx
+        w = self._cum_weight.astype(np.float64)
+        s = self._cum_tpu
+        c = self._suffix_cpu1
+        b = np.array([self.boundary_bytes(p) for p in idx], dtype=np.float64)
+        b_dom = b.copy()
+        b_dom[0] = b_dom[P] = -np.inf  # endpoints never pay a boundary xfer
+        # le[p, q]: q weakly dominates p on every dimension.
+        le = (
+            (w[None, :] <= w[:, None])
+            & (s[None, :] <= s[:, None])
+            & (c[None, :] <= c[:, None])
+            & (b_dom[None, :] <= b[:, None])
+        )
+        lt = (
+            (w[None, :] < w[:, None])
+            | (s[None, :] < s[:, None])
+            | (c[None, :] < c[:, None])
+            | (b_dom[None, :] < b[:, None])
+        )
+        dom = le & (lt | (idx[None, :] < idx[:, None]))
+        np.fill_diagonal(dom, False)
+        dominated = dom.any(axis=1)
+        # The all-CPU start of Algorithm 1 and the full-TPU class (k = 0)
+        # are structural; never prune them.
+        dominated[0] = dominated[P] = False
+        out = idx[~dominated]
+        out.setflags(write=False)
+        return out
+
     @functools.lru_cache(maxsize=8)
     def suffix_cpu_matrix(self, k_max: int) -> np.ndarray:
         """Amdahl-scaled suffix CPU time for every ``(p, k)`` pair.

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Sequence
 
 from repro.core.planner import (
@@ -50,14 +51,42 @@ class SimResult:
         alll = [l for ls in self.latencies for l in ls]
         return sum(alll) / len(alll) if alll else 0.0
 
-    def request_weighted_mean(self) -> float:
-        return self.overall_mean()
+    def request_weighted_mean(self, rates: Sequence[float] | None = None) -> float:
+        """Per-model rate-weighted mean latency, Eq. 5's
+        ``sum_i lambda_i T_i / sum_i lambda_i``.
+
+        With ``rates`` given, the weights are the *offered* per-model rates
+        (what the objective optimizes); without them, the observed request
+        counts stand in, which recovers the plain overall mean.  Models with
+        no recorded samples (e.g. all arrivals inside the warmup window)
+        have an unknown mean and are excluded from both numerator and
+        denominator rather than counted as zero latency.
+        """
+        if rates is None:
+            weights: Sequence[float] = [len(ls) for ls in self.latencies]
+        else:
+            if len(rates) != len(self.latencies):
+                raise ValueError("rates length must match model count")
+            weights = rates
+        pairs = [
+            (w, self.mean_latency(i))
+            for i, (w, ls) in enumerate(zip(weights, self.latencies))
+            if ls
+        ]
+        tot = sum(w for w, _ in pairs)
+        if tot <= 0:
+            return 0.0
+        return sum(w * m for w, m in pairs) / tot
 
     def p99(self, model_idx: int) -> float:
+        """Nearest-rank 99th percentile: the smallest latency with at least
+        99% of samples at or below it (``ceil(0.99 n)``-th order statistic).
+        The previous ``int(0.99 n)`` index overshot by one rank for most n
+        (e.g. returned the max over all 100-sample traces)."""
         ls = sorted(self.latencies[model_idx])
         if not ls:
             return 0.0
-        return ls[min(len(ls) - 1, int(0.99 * len(ls)))]
+        return ls[math.ceil(0.99 * len(ls)) - 1]
 
     def observed_miss_rate(self, model_idx: int) -> float:
         n = self.tpu_requests[model_idx]
@@ -83,6 +112,7 @@ class RuntimeSimulator:
         self.cache = SramCache(platform.sram_bytes)
         self.tpu_free = 0.0
         self.tpu_busy = 0.0
+        self.last_completion = 0.0
         self.latencies: list[list[float]] = [[] for _ in range(self.n)]
         self.arrivals: list[list[float]] = [[] for _ in range(self.n)]
         self.misses = [0] * self.n
@@ -162,6 +192,7 @@ class RuntimeSimulator:
             end = start + self._s_cpu[i]
             heapq.heappush(pool, end)
             t = end
+        self.last_completion = max(self.last_completion, t)
         lat = t - req.arrival
         if record:
             self.latencies[i].append(lat)
@@ -193,8 +224,11 @@ def simulate(
     (cold-start cache fills; the paper measures steady state).
     """
     sim = RuntimeSimulator([t.profile for t in tenants], plan, platform)
-    duration = max((r.arrival for r in requests), default=0.0)
-    warmup_t = duration * warmup_frac
+    horizon = max((r.arrival for r in requests), default=0.0)
+    warmup_t = horizon * warmup_frac
     for req in sorted(requests, key=lambda r: r.arrival):
         sim.step(req, record=req.arrival >= warmup_t)
-    return sim.result(duration)
+    # Duration runs to the last completion, not the last arrival: under
+    # backlog the servers keep draining after arrivals stop, and clipping
+    # the horizon at the last arrival let tpu_utilization exceed 1.0.
+    return sim.result(max(horizon, sim.last_completion))

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.allocator import edge_tpu_compiler_plan
+from repro.core.allocator import edge_tpu_compiler_plan, hill_climb
 from repro.core.planner import Plan, TenantSpec
 from repro.configs.paper_models import paper_profile
 from repro.hw.specs import EDGE_TPU_PLATFORM
@@ -30,6 +30,26 @@ class TestRateEstimator:
         est.observe(0, 0.0)
         est.observe(0, 8.0)
         assert est.rates(10.0)[0] == pytest.approx(1 / 5.0)
+
+    def test_partial_window_divides_by_elapsed_time(self):
+        # 3 arrivals in the first second with a 30 s window: lambda-hat is
+        # 3/s, not 0.1/s (the pre-fix bug divided by the full window before
+        # one window had elapsed).
+        est = SlidingRateEstimator(1, window=30.0)
+        for t in (0.1, 0.5, 0.9):
+            est.observe(0, t)
+        assert est.rates(1.0)[0] == pytest.approx(3.0)
+
+    def test_full_window_unchanged(self):
+        est = SlidingRateEstimator(1, window=10.0)
+        for t in np.arange(0.0, 40.0, 0.5):
+            est.observe(0, float(t))
+        assert est.rates(40.0)[0] == pytest.approx(2.0)
+
+    def test_time_zero_no_division_by_zero(self):
+        est = SlidingRateEstimator(2, window=30.0)
+        est.observe(0, 0.0)
+        assert est.rates(0.0) == [0.0, 0.0]
 
 
 class TestAdaptiveController:
@@ -67,6 +87,62 @@ class TestAdaptiveController:
             profiles, trace, HW, K_MAX, replan_period=30.0, initial_rates=(2.0,)
         )
         assert len(res.replan_times) >= 3
+
+    def test_warmup_frac_excludes_leading_requests(self):
+        profiles = [paper_profile("mnasnet")]
+        phases = [RatePhase(0.0, 120.0, (2.0,))]
+        trace = dynamic_trace(phases, seed=2)
+        full = run_adaptive(
+            profiles, trace, HW, K_MAX, initial_rates=(2.0,), warmup_frac=0.0
+        )
+        trimmed = run_adaptive(
+            profiles, trace, HW, K_MAX, initial_rates=(2.0,), warmup_frac=0.5
+        )
+        n_full = len(full.sim.latencies[0])
+        n_trim = len(trimmed.sim.latencies[0])
+        assert n_full == len(trace)
+        assert 0 < n_trim < n_full
+        # Only requests arriving past the warmup horizon are recorded.
+        horizon = max(r.arrival for r in trace)
+        assert min(trimmed.sim.arrivals[0]) >= 0.5 * horizon
+
+    def test_adaptive_utilization_never_exceeds_one(self):
+        # Overload phase: the backlog drains past the last arrival; the
+        # duration fix keeps observed utilization physical.
+        profiles = [paper_profile("inceptionv4")]
+        phases = [RatePhase(0.0, 60.0, (60.0,))]
+        trace = dynamic_trace(phases, seed=3)
+        res = run_adaptive(profiles, trace, HW, K_MAX, initial_rates=(60.0,))
+        assert res.sim.tpu_utilization <= 1.0
+        assert res.sim.duration >= max(r.arrival for r in trace)
+
+    def test_replans_warm_start_from_incumbent(self):
+        # The controller passes the incumbent plan to warm-capable planners.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        seen: list[Plan | None] = []
+
+        def spy_planner(tenants, platform, k_max, *, tables=None, init_plan=None):
+            seen.append(init_plan)
+            return hill_climb(
+                tenants, platform, k_max, tables=tables, init_plan=init_plan
+            )
+
+        phases = [RatePhase(0.0, 120.0, (5.0, 1.0))]
+        trace = dynamic_trace(phases, seed=4)
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            initial_rates=(5.0, 1.0),
+            planner=spy_planner,
+        )
+        assert seen[0] is None                      # cold initial plan
+        assert len(seen) == len(res.plans)
+        assert all(p is not None for p in seen[1:])  # re-plans warm-started
+        for incumbent, prev in zip(seen[1:], res.plans):
+            assert incumbent == prev
 
 
 def _make_mlp_model(name: str, n_segments: int, dim: int, seed: int) -> ExecutableModel:

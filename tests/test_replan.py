@@ -1,0 +1,406 @@
+"""Incremental re-planning engine: dominance pruning, warm-started
+hill-climb, and delta evaluation.
+
+Invariants enforced here (recorded in ROADMAP.md):
+
+* Pruning exactness: the Pareto frontier of ``ModelProfile.pareto_points``
+  never removes every optimum of the NLIP, so the pruned brute-force oracle
+  returns the scalar oracle's objective exactly (plans may differ only when
+  an exact-tie duplicate was pruned).
+* Delta evaluation: ``penalized_objective_delta_batch`` equals
+  ``penalized_objective_batch`` to ~1 ulp for any valid base plan, including
+  the infeasible-base fallback.
+* Warm start: ``hill_climb(init_plan=...)`` is a monotone descent -- its
+  result never scores worse than the (snapped) incumbent under the new
+  rates -- and it terminates at a plan stable under every +-{1,2} frontier
+  move.  It is *not* guaranteed bit-identical to the cold climb (the greedy
+  endpoint is path-dependent); across random drifted mixes it ties or beats
+  the cold objective in the overwhelming majority of cases, which the
+  deterministic benchmark mixes assert.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.paper_models import PAPER_MODEL_NAMES, paper_profile
+from repro.core import latency
+from repro.core.allocator import (
+    _brute_force_scalar,
+    brute_force_oracle,
+    hill_climb,
+    prop_alloc,
+    prop_alloc_batch,
+)
+from repro.core.plan_tables import EvalTables, PlanTables
+from repro.core.planner import ModelProfile, Plan, Segment, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+REL_TOL = 1e-12
+# Delta evaluation re-bases aggregates with one add/subtract, so allow a few
+# ulps beyond the PR-1 scalar-vs-batch tolerance.
+DELTA_TOL = 1e-9
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def _seg(name, *, w, out, tpu, cpu, frac=0.8):
+    return Segment(
+        name=name,
+        flops=1e6,
+        weight_bytes=w,
+        out_bytes=out,
+        tpu_time=tpu,
+        cpu_time_1core=cpu,
+        cpu_parallel_frac=frac,
+    )
+
+
+def dominated_profile() -> ModelProfile:
+    """4-segment profile where the cut after the zero-CPU seg2 (p=3) is
+    dominated by p=2: equal CPU suffix, strictly less weight/TPU time, and a
+    no-larger boundary tensor."""
+    return ModelProfile(
+        name="crafted",
+        segments=(
+            _seg("s0", w=2_000_000, out=100_000, tpu=1e-3, cpu=10e-3),
+            _seg("s1", w=1_000_000, out=60_000, tpu=0.5e-3, cpu=8e-3),
+            _seg("s2", w=500_000, out=80_000, tpu=0.3e-3, cpu=0.0),
+            _seg("s3", w=3_000_000, out=4_000, tpu=0.8e-3, cpu=20e-3),
+        ),
+        input_bytes=150_000,
+    )
+
+
+class TestParetoFrontier:
+    def test_paper_profiles_frontier_is_valid(self):
+        for name in PAPER_MODEL_NAMES:
+            prof = paper_profile(name)
+            f = prof.pareto_points
+            P = prof.num_partition_points
+            assert f[0] == 0 and f[-1] == P
+            assert np.all(np.diff(f) > 0)
+            assert set(f.tolist()) <= set(range(P + 1))
+
+    def test_paper_profiles_are_smooth_no_pruning(self):
+        # The synthetic paper profiles have strictly positive per-segment
+        # costs, so no point is dominated and the pruned search is
+        # bit-identical to the unpruned one (covered below).
+        for name in PAPER_MODEL_NAMES:
+            prof = paper_profile(name)
+            assert len(prof.pareto_points) == prof.num_partition_points + 1
+
+    def test_crafted_dominated_point_is_pruned(self):
+        prof = dominated_profile()
+        f = prof.pareto_points.tolist()
+        assert 3 not in f          # dominated by p=2 (zero-CPU seg2)
+        assert {0, 1, 2, 4} <= set(f)
+
+    def test_plan_tables_carry_frontiers(self):
+        ts = [TenantSpec(dominated_profile(), 1.0)] + tenants_for(
+            ("mnasnet", 2.0)
+        )
+        tab = PlanTables.for_tenants(ts, HW, K_MAX)
+        assert len(tab.frontiers) == 2
+        np.testing.assert_array_equal(
+            tab.frontiers[0], ts[0].profile.pareto_points
+        )
+        assert tab.frontier_sizes.tolist() == [4, 8]
+
+    def test_endpoints_never_pruned_degenerate_profile(self):
+        # All-zero CPU suffix: everything ties; 0 and P must survive.
+        prof = ModelProfile(
+            name="zeros",
+            segments=tuple(
+                _seg(f"z{i}", w=1000, out=1000, tpu=1e-4, cpu=0.0)
+                for i in range(4)
+            ),
+            input_bytes=1000,
+        )
+        f = prof.pareto_points.tolist()
+        assert f[0] == 0 and f[-1] == 4
+
+
+class TestOraclePruning:
+    def test_single_tenant_exact(self):
+        # Exactness theorem, single-tenant case: the pruned optimum equals
+        # the full optimum exactly (alpha = 0 throughout, every objective
+        # term monotone in the dominance quadruple).
+        ts = [TenantSpec(dominated_profile(), 2.0)]
+        plan_p, obj_p = brute_force_oracle(ts, HW, K_MAX, prune=True)
+        plan_s, obj_s = _brute_force_scalar(ts, HW, K_MAX)
+        assert obj_p == pytest.approx(obj_s, rel=REL_TOL)
+        assert plan_p.partition[0] in ts[0].profile.pareto_points
+
+    def test_multi_tenant_pruned_optimum_matches(self):
+        ts = [TenantSpec(dominated_profile(), 1.5)] + tenants_for(
+            ("mobilenetv2", 1.0)
+        )
+        plan_p, obj_p = brute_force_oracle(ts, HW, K_MAX, prune=True)
+        plan_f, obj_f = brute_force_oracle(ts, HW, K_MAX, prune=False)
+        assert obj_p == pytest.approx(obj_f, rel=REL_TOL)
+
+    def test_paper_mix_pruning_noop(self):
+        ts = tenants_for(("mnasnet", 3.0), ("mobilenetv2", 1.0))
+        plan_p, obj_p = brute_force_oracle(ts, HW, K_MAX, prune=True)
+        plan_f, obj_f = brute_force_oracle(ts, HW, K_MAX, prune=False)
+        assert plan_p == plan_f
+        assert obj_p == obj_f
+
+
+class TestDeltaEval:
+    @given(
+        rates=st.lists(st.floats(0.2, 5.0), min_size=2, max_size=5),
+        k_max=st.integers(4, 12),
+        faz=st.sampled_from([False, True]),
+        data=st.data(),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_delta_matches_full_batch(self, rates, k_max, faz, data):
+        names = ["inceptionv4", "xception", "densenet201", "mnasnet", "gpunet"]
+        ts = tenants_for(*[(names[i % 5], r) for i, r in enumerate(rates)])
+        n = len(ts)
+        n_points = [t.profile.num_partition_points for t in ts]
+        base_p = np.array(
+            [data.draw(st.integers(0, P)) for P in n_points], dtype=np.intp
+        )
+        base_k = np.array(
+            [
+                data.draw(st.integers(1, k_max)) if p < P else 0
+                for p, P in zip(base_p, n_points)
+            ],
+            dtype=np.intp,
+        )
+        # Neighbor candidates: one partition entry changed, cores re-drawn
+        # for a couple of tenants (as PropAlloc reallocation would).
+        cands_p, cands_k = [], []
+        for _ in range(6):
+            p = base_p.copy()
+            k = base_k.copy()
+            m = data.draw(st.integers(0, n - 1))
+            p[m] = data.draw(st.integers(0, n_points[m]))
+            k[m] = (
+                data.draw(st.integers(1, k_max)) if p[m] < n_points[m] else 0
+            )
+            j = data.draw(st.integers(0, n - 1))
+            if base_p[j] < n_points[j]:
+                k[j] = data.draw(st.integers(1, k_max))
+            cands_p.append(p)
+            cands_k.append(k)
+        P = np.array(cands_p)
+        K = np.array(cands_k)
+        full = latency.penalized_objective_batch(
+            ts, P, K, HW, force_alpha_zero=faz
+        )
+        delta = latency.penalized_objective_delta_batch(
+            ts, base_p, base_k, P, K, HW, force_alpha_zero=faz
+        )
+        for b in range(P.shape[0]):
+            f, d = float(full[b]), float(delta[b])
+            if math.isnan(f) or math.isnan(d):
+                assert math.isnan(f) and math.isnan(d)
+            elif math.isinf(f) or math.isinf(d):
+                assert f == d
+            else:
+                assert d == pytest.approx(f, rel=DELTA_TOL, abs=1e-300)
+
+    def test_infeasible_base_falls_back_to_full(self):
+        # The unstable all-CPU start has inf static latency; the delta path
+        # must re-score neighbors from scratch, not propagate inf - inf.
+        ts = tenants_for(("inceptionv4", 50.0), ("xception", 50.0))
+        base_p = np.zeros(2, dtype=np.intp)
+        base_k = np.array(prop_alloc(ts, [0, 0], K_MAX), dtype=np.intp)
+        P = np.array([[2, 0], [0, 2], [5, 3]], dtype=np.intp)
+        K = np.array([[2, 2], [2, 2], [2, 2]], dtype=np.intp)
+        full = latency.penalized_objective_batch(ts, P, K, HW)
+        delta = latency.penalized_objective_delta_batch(
+            ts, base_p, base_k, P, K, HW
+        )
+        np.testing.assert_array_equal(full, delta)
+
+    def test_tables_reuse(self):
+        ts = tenants_for(("inceptionv4", 2.0), ("mnasnet", 1.0))
+        etab = EvalTables.build(ts, HW, K_MAX)
+        base_p = np.array([5, 3], dtype=np.intp)
+        base_k = np.array([2, 2], dtype=np.intp)
+        P = np.array([[6, 3], [5, 7]], dtype=np.intp)
+        K = np.array([[2, 2], [3, 0]], dtype=np.intp)
+        via_tables = latency.penalized_objective_delta_batch(
+            ts, base_p, base_k, P, K, HW, tables=etab
+        )
+        fresh = latency.penalized_objective_delta_batch(
+            ts, base_p, base_k, P, K, HW
+        )
+        np.testing.assert_array_equal(via_tables, fresh)
+
+
+def _stable_under_neighbor_moves(ts, plan, k_max, tol=DELTA_TOL):
+    """True when no single-tenant +-1/2 frontier move (with PropAlloc cores)
+    improves on ``plan`` beyond round-off: the warm climb's termination
+    criterion, re-checked from scratch."""
+    tabs = PlanTables.for_tenants(ts, HW, k_max)
+    base = np.array(plan.partition, dtype=np.intp)
+    l_curr = latency.penalized_objective(ts, plan, HW)
+    cands = []
+    for m, f in enumerate(tabs.frontiers):
+        pos = int(np.searchsorted(f, base[m]))
+        for h in (1, 2, -1, -2):
+            q = pos + h
+            if 0 <= q < len(f):
+                cand = base.copy()
+                cand[m] = f[q]
+                cands.append(cand)
+    parts = np.array(cands)
+    cores, feasible = prop_alloc_batch(ts, parts, k_max)
+    parts, cores = parts[feasible], cores[feasible]
+    objs = latency.penalized_objective_batch(ts, parts, cores, HW, tables=tabs)
+    return bool(np.all(objs >= l_curr * (1.0 - tol)))
+
+
+class TestWarmStart:
+    def _mix(self, n, rates):
+        names = [PAPER_MODEL_NAMES[i % len(PAPER_MODEL_NAMES)] for i in range(n)]
+        return tenants_for(*zip(names, rates))
+
+    @given(
+        rates=st.lists(st.floats(0.2, 3.0), min_size=2, max_size=6),
+        data=st.data(),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_warm_descends_from_incumbent_and_is_stable(self, rates, data):
+        n = len(rates)
+        ts = self._mix(n, rates)
+        k_max = max(K_MAX, n)
+        tabs = PlanTables.for_tenants(ts, HW, k_max)
+        incumbent, _ = hill_climb(ts, HW, k_max, batch=True, tables=tabs)
+        drift = [data.draw(st.floats(0.7, 1.4)) for _ in range(n)]
+        ts2 = self._mix(n, [r * d for r, d in zip(rates, drift)])
+        warm_plan, warm_obj = hill_climb(
+            ts2, HW, k_max, batch=True, tables=tabs, init_plan=incumbent
+        )
+        # Monotone descent: never worse than the incumbent re-priced at the
+        # new rates (the warm climb's starting point).
+        inc_cores = prop_alloc(ts2, list(incumbent.partition), k_max)
+        inc_obj = latency.penalized_objective(
+            ts2, Plan(incumbent.partition, inc_cores), HW
+        )
+        assert warm_obj <= inc_obj * (1.0 + DELTA_TOL)
+        # Returned objective is the true objective of the returned plan.
+        assert warm_obj == pytest.approx(
+            latency.penalized_objective(ts2, warm_plan, HW), rel=DELTA_TOL
+        )
+        assert _stable_under_neighbor_moves(ts2, warm_plan, k_max)
+
+    def test_zero_drift_warm_from_cold_never_worse(self):
+        for n in (2, 4, 6, 8):
+            rates = [0.4 + 0.3 * i for i in range(n)]
+            ts = self._mix(n, rates)
+            k_max = max(K_MAX, n)
+            cold_plan, cold_obj = hill_climb(ts, HW, k_max, batch=True)
+            warm_plan, warm_obj = hill_climb(
+                ts, HW, k_max, batch=True, init_plan=cold_plan
+            )
+            assert warm_obj <= cold_obj * (1.0 + DELTA_TOL)
+
+    def test_benchmark_drift_warm_ties_or_beats_cold(self):
+        # The deterministic alg_scaling drift scenario: one controller
+        # period of +-20% drift.  The warm bidirectional descent must tie or
+        # beat the cold up-only climb (it usually escapes the cold path's
+        # local traps; see the module docstring for why bit-identity is not
+        # guaranteed).
+        from benchmarks.common import full_tpu_rates_for_utilization
+
+        for n in (6, 10, 16):
+            profs = [
+                paper_profile(PAPER_MODEL_NAMES[i % len(PAPER_MODEL_NAMES)])
+                for i in range(n)
+            ]
+            rates = full_tpu_rates_for_utilization(profs, 0.5)
+            ts = [TenantSpec(p, r) for p, r in zip(profs, rates)]
+            k_max = max(K_MAX, n)
+            tabs = PlanTables.for_tenants(ts, HW, k_max)
+            incumbent, _ = hill_climb(ts, HW, k_max, batch=True, tables=tabs)
+            ts2 = [
+                TenantSpec(p, r * (1.2 if i % 2 else 0.85))
+                for i, (p, r) in enumerate(zip(profs, rates))
+            ]
+            cold_plan, cold_obj = hill_climb(
+                ts2, HW, k_max, batch=True, tables=tabs
+            )
+            warm_plan, warm_obj = hill_climb(
+                ts2, HW, k_max, batch=True, tables=tabs, init_plan=incumbent
+            )
+            assert (
+                warm_plan == cold_plan
+                or warm_obj <= cold_obj * (1.0 + DELTA_TOL)
+            )
+
+    def test_warm_start_snaps_off_frontier_incumbent(self):
+        # An incumbent holding a dominated point must snap down to the
+        # nearest frontier point and still return a valid plan.
+        ts = [TenantSpec(dominated_profile(), 1.0)] + tenants_for(
+            ("mnasnet", 2.0)
+        )
+        incumbent = Plan((3, 4), prop_alloc(ts, [3, 4], K_MAX))
+        plan, obj = hill_climb(
+            ts, HW, K_MAX, batch=True, init_plan=incumbent
+        )
+        assert plan.partition[0] in ts[0].profile.pareto_points
+        assert obj == pytest.approx(
+            latency.penalized_objective(ts, plan, HW), rel=DELTA_TOL
+        )
+
+    def test_init_plan_requires_batch(self):
+        ts = tenants_for(("mnasnet", 1.0))
+        incumbent = Plan((7,), (0,))
+        with pytest.raises(ValueError):
+            hill_climb(ts, HW, K_MAX, batch=False, init_plan=incumbent)
+
+    def test_init_plan_forces_batch_dispatch(self):
+        # Below the size crossover, init_plan must still route to the
+        # batched path (the scalar loop cannot warm-start) and return a
+        # valid plan.
+        ts = tenants_for(("mnasnet", 2.0), ("mobilenetv2", 1.0))
+        cold, _ = hill_climb(ts, HW, K_MAX)
+        plan, _ = hill_climb(ts, HW, K_MAX, init_plan=cold)
+        assert len(plan.partition) == 2
+
+
+class TestPrunedHillClimb:
+    def test_paper_mixes_prune_noop_identical(self):
+        # Paper profiles have full frontiers, so pruning must not change
+        # the batched climb at all.
+        for n in (2, 5, 8):
+            rates = [0.3 + 0.25 * i for i in range(n)]
+            names = [PAPER_MODEL_NAMES[i % len(PAPER_MODEL_NAMES)] for i in range(n)]
+            ts = tenants_for(*zip(names, rates))
+            k_max = max(K_MAX, n)
+            p1, o1 = hill_climb(ts, HW, k_max, batch=True, prune=True)
+            p2, o2 = hill_climb(ts, HW, k_max, batch=True, prune=False)
+            assert p1 == p2
+            assert o1 == o2
+
+    def test_crafted_mix_pruned_plan_on_frontier(self):
+        ts = [TenantSpec(dominated_profile(), 1.5)] + tenants_for(
+            ("mobilenetv2", 1.0)
+        )
+        plan, obj = hill_climb(ts, HW, K_MAX, batch=True, prune=True)
+        assert plan.partition[0] in ts[0].profile.pareto_points
+        assert obj == pytest.approx(
+            latency.penalized_objective(ts, plan, HW), rel=DELTA_TOL
+        )
+
+    def test_opt_out_spans_full_axis(self):
+        ts = [TenantSpec(dominated_profile(), 1.5)] + tenants_for(
+            ("mobilenetv2", 1.0)
+        )
+        plan, obj = hill_climb(ts, HW, K_MAX, batch=True, prune=False)
+        assert obj == pytest.approx(
+            latency.penalized_objective(ts, plan, HW), rel=DELTA_TOL
+        )

@@ -12,7 +12,7 @@ from repro.core.planner import Plan, TenantSpec
 from repro.configs.paper_models import paper_profile
 from repro.hw.specs import EDGE_TPU_PLATFORM
 from repro.serving.cache import SramCache
-from repro.serving.simulator import simulate
+from repro.serving.simulator import SimResult, simulate
 from repro.serving.workload import RatePhase, dynamic_trace, poisson_trace
 
 HW = EDGE_TPU_PLATFORM
@@ -86,6 +86,61 @@ class TestCache:
         for t, (m, b) in enumerate(ops):
             c.access(m, b, float(t))
             assert c.used <= caps
+
+
+def _result_with(latencies):
+    return SimResult(
+        latencies=latencies,
+        arrivals=[[0.0] * len(ls) for ls in latencies],
+        tpu_busy=0.0,
+        duration=1.0,
+        misses=[0] * len(latencies),
+        tpu_requests=[0] * len(latencies),
+    )
+
+
+class TestSimResultMetrics:
+    def test_p99_nearest_rank_100_samples(self):
+        # Nearest-rank p99 of 1..100 is the 99th order statistic, not the
+        # max (the pre-fix int(0.99n) index overshot by one rank).
+        res = _result_with([[float(i) for i in range(1, 101)]])
+        assert res.p99(0) == 99.0
+
+    def test_p99_nearest_rank_200_samples(self):
+        res = _result_with([[float(i) for i in range(1, 201)]])
+        assert res.p99(0) == 198.0
+
+    def test_p99_small_and_empty(self):
+        assert _result_with([[5.0]]).p99(0) == 5.0
+        assert _result_with([[]]).p99(0) == 0.0
+        res = _result_with([[3.0, 1.0, 2.0]])
+        assert res.p99(0) == 3.0  # ceil(2.97)-1 = idx 2 of sorted
+
+    def test_request_weighted_mean_uses_rates(self):
+        # Model 0: mean 2.0 over 2 requests; model 1: mean 8.0 over 1.
+        res = _result_with([[2.0, 2.0], [8.0]])
+        # Eq. 5 weighting by offered rates, not by observed counts.
+        assert res.request_weighted_mean([3.0, 1.0]) == pytest.approx(3.5)
+        assert res.request_weighted_mean([1.0, 3.0]) == pytest.approx(6.5)
+        # Without rates the observed counts recover the overall mean.
+        assert res.request_weighted_mean() == pytest.approx(res.overall_mean())
+        assert res.request_weighted_mean() == pytest.approx(4.0)
+
+    def test_request_weighted_mean_validates_length(self):
+        res = _result_with([[1.0], [2.0]])
+        with pytest.raises(ValueError):
+            res.request_weighted_mean([1.0])
+
+    def test_request_weighted_mean_zero_rates(self):
+        res = _result_with([[1.0], [2.0]])
+        assert res.request_weighted_mean([0.0, 0.0]) == 0.0
+
+    def test_request_weighted_mean_skips_unobserved_models(self):
+        # A tenant with no recorded samples (all arrivals in warmup) has an
+        # unknown mean; it must be excluded, not priced as zero latency.
+        res = _result_with([[5.0, 5.0], []])
+        assert res.request_weighted_mean([1.0, 1.0]) == pytest.approx(5.0)
+        assert res.request_weighted_mean() == pytest.approx(5.0)
 
 
 class TestSimulatorVsAnalytic:
@@ -173,6 +228,26 @@ class TestSimulatorVsAnalytic:
         sim = simulate(ts, plan, HW, reqs)
         pred = latency.predict(ts, plan, HW)
         assert sim.tpu_utilization == pytest.approx(pred.tpu_utilization, rel=0.08)
+
+    def test_utilization_never_exceeds_one_under_backlog(self):
+        # Offered load far above capacity: the queue drains long after the
+        # last arrival.  Duration must extend to the last completion, or
+        # busy/duration overshoots 1.0 (the pre-fix bug).
+        ts = tenants_for(("inceptionv4", 60.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([60.0], 20.0, seed=7)
+        sim = simulate(ts, plan, HW, reqs, warmup_frac=0.0)
+        assert sim.tpu_utilization <= 1.0
+        assert sim.duration >= max(r.arrival for r in reqs)
+
+    @given(seed=st.integers(0, 4), rate=st.floats(5.0, 80.0))
+    @settings(max_examples=10, deadline=None)
+    def test_utilization_bounded_any_load(self, seed, rate):
+        ts = tenants_for(("xception", rate))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([rate], 30.0, seed=seed)
+        sim = simulate(ts, plan, HW, reqs)
+        assert 0.0 <= sim.tpu_utilization <= 1.0
 
     @given(seed=st.integers(0, 5))
     @settings(max_examples=6, deadline=None)
