@@ -3,18 +3,25 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast bench-smoke
+.PHONY: test test-fast test-slow bench-smoke
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
 	$(PYTHON) -m pytest -x -q
 
-# Everything except tests marked `slow` -- the CI gate.
+# Everything except tests marked `slow` -- the fast CI gate.
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
-# Fast benchmark sanity: allocator overhead + plan-space engine scaling,
-# including the incremental re-planner on the large 32/64-tenant mixes.
+# Only the `slow` tests (DES convergence, 512-device dry-run compiles);
+# the second job of the CI matrix.
+test-slow:
+	$(PYTHON) -m pytest -x -q -m "slow"
+
+# Fast benchmark sanity: allocator overhead + plan-space engine scaling
+# (including the incremental re-planner on the large 32/64-tenant mixes)
+# + the analytic-model-vs-DES error sweep on short traces.
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
+	$(PYTHON) -m benchmarks.model_vs_sim --smoke

@@ -8,6 +8,7 @@ figure's headline metric (MAPE, swap share, latency reduction, ...).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Sequence
 
@@ -46,7 +47,20 @@ def tenants(profiles: Sequence[ModelProfile], rates: Sequence[float]) -> list[Te
 
 
 def mape(pred: Sequence[float], obs: Sequence[float]) -> float:
-    pairs = [(p, o) for p, o in zip(pred, obs) if o > 0]
+    """Mean absolute percentage error over comparable pairs.
+
+    Pairs with a non-positive or non-finite observation, or a non-finite
+    prediction (an unstable-queue ``inf``/``nan``), carry no comparable
+    error and are skipped; ``nan`` when no pair survives (e.g. the analytic
+    model predicts instability everywhere -- see benchmarks/README.md).
+    """
+    pairs = [
+        (p, o)
+        for p, o in zip(pred, obs)
+        if o > 0 and math.isfinite(p) and math.isfinite(o)
+    ]
+    if not pairs:
+        return math.nan
     return 100.0 * sum(abs(p - o) / o for p, o in pairs) / len(pairs)
 
 

@@ -1,0 +1,151 @@
+"""Analytic queueing model vs discrete-event simulator: error sweep.
+
+Sweeps the workload scenario library (Poisson, bursty MMPP, diurnal,
+heavy-tailed service jitter, tenant churn) across representative tenant
+mixes and reports, per combination, the analytic model's (Eq. 1-5, Eq. 10)
+mean-latency error against the event-driven ground truth plus a
+cross-simulator p99 check (DES vs the sequential stepper).
+
+The analytic prediction is evaluated at the *realized* mean per-model rates
+of each trace -- what a long-window rate estimator would hand the planner --
+so the reported error isolates model-shape mismatch (burstiness, service
+variance, nonstationarity) from plain rate misestimation.  See
+``benchmarks/README.md`` for how to read the numbers.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.model_vs_sim [--smoke] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+from typing import Callable, Sequence
+
+from benchmarks.common import (
+    HW,
+    K_MAX,
+    Row,
+    full_tpu_rates_for_utilization,
+    mape,
+    tenants,
+)
+from repro.configs.paper_models import paper_profile
+from repro.core import latency
+from repro.core.allocator import hill_climb
+from repro.core.planner import Plan, TenantSpec
+from repro.serving.simulator import simulate
+from repro.serving.workload import (
+    Request,
+    diurnal_trace,
+    mmpp_trace,
+    poisson_trace,
+    tenant_churn_trace,
+    with_service_jitter,
+)
+
+TraceFn = Callable[[list[float], float, int], list[Request]]
+
+# Poisson is the model's home turf (its arrival assumption holds exactly);
+# every other scenario violates one assumption on purpose.
+SCENARIOS: dict[str, TraceFn] = {
+    "poisson": lambda rates, dur, seed: poisson_trace(rates, dur, seed=seed),
+    "mmpp": lambda rates, dur, seed: mmpp_trace(
+        rates, dur, burst_factor=3.0, mean_normal=40.0, mean_burst=10.0, seed=seed
+    ),
+    "diurnal": lambda rates, dur, seed: diurnal_trace(
+        rates, dur, amplitude=0.6, period=dur / 4.0, seed=seed
+    ),
+    "jitter": lambda rates, dur, seed: with_service_jitter(
+        poisson_trace(rates, dur, seed=seed), sigma=0.8, seed=seed + 1
+    ),
+    "churn": lambda rates, dur, seed: list(
+        tenant_churn_trace(
+            rates, dur, mean_session=dur / 4.0, mean_absence=dur / 8.0, seed=seed
+        ).requests
+    ),
+}
+
+
+def _mixes() -> list[tuple[str, list[TenantSpec], Plan]]:
+    """Representative tenant mixes: swap-free, swap-dominated, collaborative."""
+    iv4, mnas = paper_profile("inceptionv4"), paper_profile("mnasnet")
+    mob, sq = paper_profile("mobilenetv2"), paper_profile("squeezenet")
+    eff, gpu = paper_profile("efficientnet"), paper_profile("gpunet")
+
+    mixes = []
+    ts = tenants([iv4], full_tpu_rates_for_utilization([iv4], 0.6))
+    mixes.append(("single_full_tpu", ts, Plan((11,), (0,))))
+
+    ts = tenants([mob, sq], full_tpu_rates_for_utilization([mob, sq], 0.5))
+    mixes.append(("pair_sram_fits", ts, Plan((5, 2), (0, 0))))
+
+    ts = tenants([eff, gpu], full_tpu_rates_for_utilization([eff, gpu], 0.5))
+    mixes.append(("pair_swapping", ts, Plan((6, 5), (0, 0))))
+
+    ts = [TenantSpec(iv4, 1.0), TenantSpec(mnas, 2.0)]
+    plan, _ = hill_climb(ts, HW, K_MAX)
+    mixes.append(("collaborative", ts, plan))
+    return mixes
+
+
+def _realized_tenants(
+    base: Sequence[TenantSpec], trace: Sequence[Request], duration: float
+) -> list[TenantSpec]:
+    counts = [0] * len(base)
+    for r in trace:
+        counts[r.model_idx] += 1
+    return [
+        TenantSpec(t.profile, c / duration) for t, c in zip(base, counts)
+    ]
+
+
+def run(*, duration: float = 2000.0, seed: int = 0) -> list[Row]:
+    rows: list[Row] = []
+    for mix_name, ts, plan in _mixes():
+        rates = [t.rate for t in ts]
+        for scen_name, make_trace in SCENARIOS.items():
+            trace = make_trace(rates, duration, seed)
+            if not trace:
+                continue
+            des = simulate(ts, plan, HW, trace, backend="des")
+            stepper = simulate(ts, plan, HW, trace, backend="stepper")
+            ts_real = _realized_tenants(ts, trace, duration)
+            pred = latency.predict(ts_real, plan, HW)
+
+            obs_means = [des.mean_latency(i) for i in range(len(ts))]
+            mean_err = mape(pred.latencies, obs_means)
+            p99s = [des.p99(i) for i in range(len(ts))]
+            p99_xsim = mape([stepper.p99(i) for i in range(len(ts))], p99s)
+            finite_p99 = [p for p in p99s if math.isfinite(p)]
+            worst_p99_ms = max(finite_p99) * 1e3 if finite_p99 else math.nan
+            rows.append(
+                Row(
+                    f"model_vs_sim/{mix_name}/{scen_name}",
+                    des.overall_mean() * 1e6,
+                    f"mean_err_pct={mean_err:.1f};p99_ms={worst_p99_ms:.1f};"
+                    f"p99_xsim_err_pct={p99_xsim:.1f};n={len(trace)}",
+                )
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="short traces for CI sanity (smaller n, larger CI error bars)",
+    )
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    duration = args.duration if args.duration is not None else (
+        300.0 if args.smoke else 2000.0
+    )
+    print("name,us_per_call,derived")
+    for row in run(duration=duration, seed=args.seed):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

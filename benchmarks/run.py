@@ -21,6 +21,7 @@ from benchmarks import (
     fig6_validation_multi,
     fig7_baselines,
     fig8_dynamic,
+    model_vs_sim,
 )
 
 MODULES = {
@@ -34,6 +35,7 @@ MODULES = {
     "alg_overhead": alg_overhead,
     "alg_scaling": alg_scaling,
     "alpha_ablation": alpha_ablation,
+    "model_vs_sim": model_vs_sim,
 }
 
 

@@ -57,6 +57,26 @@ class LatencyBreakdown:
             + self.cpu_service
         )
 
+    @property
+    def static(self) -> float:
+        """Closed-form deterministic path: transfers + service, no queueing
+        and no expected swap.  A lone request in an otherwise idle, warm
+        system takes exactly this long -- the round-off-exact reference the
+        discrete-event simulator is validated against (tests/test_des.py).
+        """
+        return (
+            self.input_xfer
+            + self.tpu_service
+            + self.boundary_xfer
+            + self.cpu_service
+        )
+
+    @property
+    def queueing(self) -> float:
+        """Stochastic congestion terms (Eq. 1 + Eq. 3 waits): what remains
+        of ``total`` beyond ``static`` and the expected swap penalty."""
+        return self.tpu_wait + self.cpu_wait
+
 
 @dataclasses.dataclass(frozen=True)
 class SystemPrediction:
@@ -81,6 +101,16 @@ class SystemPrediction:
     @property
     def latencies(self) -> tuple[float, ...]:
         return tuple(b.total for b in self.per_model)
+
+    @property
+    def static_latencies(self) -> tuple[float, ...]:
+        """Per-model closed-form static latency (no queueing, no swap)."""
+        return tuple(b.static for b in self.per_model)
+
+    @property
+    def queueing_latencies(self) -> tuple[float, ...]:
+        """Per-model predicted wait (TPU + CPU queueing only)."""
+        return tuple(b.queueing for b in self.per_model)
 
     def weighted_latency(self, tenants: Sequence[TenantSpec]) -> float:
         """Objective of Eq. 5: sum_i lambda_i * T_e2e_i."""

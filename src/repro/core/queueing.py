@@ -7,9 +7,43 @@
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Mg1Metrics:
+    """Per-term M/G/1 predictions (Eq. 1 decomposed for validation).
+
+    ``benchmarks/model_vs_sim.py`` and the differential DES tests compare
+    each term against its simulated observable: ``rho`` against busy-time /
+    duration, ``wait`` against mean time-in-queue, ``sojourn`` against mean
+    wait + service, ``queue_len`` (Little's law, ``lam * sojourn``) against
+    the time-averaged number in system.
+    """
+
+    rho: float
+    wait: float
+    sojourn: float
+    queue_len: float
+
+
+def mg1_metrics(lam: float, es: float, es2: float) -> Mg1Metrics:
+    """All M/G/1 steady-state predictions the simulators can observe.
+
+    Same inputs and stability semantics as ``mg1_wait`` (unstable queues
+    report ``inf`` waits); ``rho`` is reported even when >= 1.
+    """
+    wait = mg1_wait(lam, es, es2)
+    sojourn = wait + es if lam > 0.0 else es
+    return Mg1Metrics(
+        rho=lam * es,
+        wait=wait,
+        sojourn=sojourn,
+        queue_len=lam * sojourn,
+    )
 
 
 def mg1_wait(lam: float, es: float, es2: float) -> float:

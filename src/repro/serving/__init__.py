@@ -4,13 +4,30 @@ from repro.serving.controller import (
     SlidingRateEstimator,
     run_adaptive,
 )
+from repro.serving.des import DiscreteEventSimulator
 from repro.serving.engine import CompletedRequest, ExecutableModel, ServingEngine
-from repro.serving.simulator import RuntimeSimulator, SimResult, simulate
-from repro.serving.workload import RatePhase, Request, dynamic_trace, poisson_trace
+from repro.serving.result import SimResult
+from repro.serving.simulator import RuntimeSimulator, make_backend, simulate
+from repro.serving.workload import (
+    ChurnTrace,
+    RatePhase,
+    Request,
+    deterministic_trace,
+    diurnal_trace,
+    dynamic_trace,
+    mmpp_trace,
+    poisson_trace,
+    tenant_churn_trace,
+    trace_from_json,
+    trace_to_json,
+    with_service_jitter,
+)
 
 __all__ = [
     "AdaptiveRunResult",
+    "ChurnTrace",
     "CompletedRequest",
+    "DiscreteEventSimulator",
     "ExecutableModel",
     "RatePhase",
     "Request",
@@ -19,8 +36,16 @@ __all__ = [
     "SimResult",
     "SlidingRateEstimator",
     "SramCache",
+    "deterministic_trace",
+    "diurnal_trace",
     "dynamic_trace",
+    "make_backend",
+    "mmpp_trace",
     "poisson_trace",
     "run_adaptive",
     "simulate",
+    "tenant_churn_trace",
+    "trace_from_json",
+    "trace_to_json",
+    "with_service_jitter",
 ]

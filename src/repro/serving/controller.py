@@ -4,12 +4,19 @@ Implements Section IV's online phase: request rates are monitored with a
 sliding window; the resource-allocation algorithm re-runs periodically and
 the runtime switches to the new (P, K).  The paper reports <2 ms per
 invocation for the allocator -- ``benchmarks/alg_overhead.py`` measures ours.
+
+The simulated runtime underneath is pluggable (``backend="stepper"`` or
+``"des"``): both speak the shared driver surface (``offer`` /
+``advance_to`` / ``set_plan`` / ``drain``), so with the event-driven
+backend a re-plan lands mid-flight -- queued and in-service requests bound
+under the old plan drain while new arrivals take the new one.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import inspect
+import statistics
 import time
 from typing import Callable, Sequence
 
@@ -17,7 +24,8 @@ from repro.core.allocator import hill_climb
 from repro.core.plan_tables import PlanTables
 from repro.core.planner import ModelProfile, Plan, TenantSpec
 from repro.hw.specs import Platform
-from repro.serving.simulator import RuntimeSimulator, SimResult
+from repro.serving.result import SimResult
+from repro.serving.simulator import make_backend
 from repro.serving.workload import Request
 
 
@@ -46,12 +54,38 @@ class SlidingRateEstimator:
         return out
 
 
+def _should_cold_fallback(
+    norm_objective: float, history: Sequence[float], margin: float
+) -> bool:
+    """Warm-start quality-tail guard (ROADMAP open item).
+
+    The warm descent always ties or beats the *incumbent plan* under the new
+    rates, so a regression can only be detected against the incumbent's
+    trend: if the warm plan's predicted mean latency (objective normalized
+    by the offered rate mass) exceeds the *median* of the recent re-plans by
+    more than ``margin``, the basin the warm walk settled in is suspect and
+    a cold re-climb is worth its ~10x cost.  The median (not the min) is the
+    trend statistic because rate-estimate noise swings the normalized
+    objective by tens of percent near high utilization, and anchoring on the
+    luckiest recent estimate would fire the guard on every swing.  False
+    positives (the load genuinely rose) cost one cold climb and nothing
+    else -- the better of the two plans is kept either way.
+    """
+    if not history:
+        return False
+    return norm_objective > (1.0 + margin) * statistics.median(history)
+
+
 @dataclasses.dataclass
 class AdaptiveRunResult:
     sim: SimResult
     replan_times: list[float]
     plans: list[Plan]
     plan_compute_seconds: list[float]
+    # Predicted Eq. 5 objective of each committed plan (same indexing as
+    # ``plans``) and the re-plan times where the cold-fallback guard fired.
+    plan_objectives: list[float] = dataclasses.field(default_factory=list)
+    cold_fallback_times: list[float] = dataclasses.field(default_factory=list)
 
 
 def run_adaptive(
@@ -66,6 +100,9 @@ def run_adaptive(
     planner: Callable[..., tuple[Plan, float]] = hill_climb,
     min_rate: float = 0.05,
     warmup_frac: float = 0.05,
+    backend: str = "stepper",
+    cold_fallback_margin: float | None = 0.05,
+    cold_fallback_window: int = 5,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
 
@@ -79,6 +116,12 @@ def run_adaptive(
     planner supports it (``hill_climb(init_plan=...)``): successive rate
     estimates drift slowly, so the incremental search converges in a few
     delta-evaluated moves instead of re-climbing from all-CPU.
+
+    ``cold_fallback_margin`` guards the warm-start quality tail: when the
+    warm plan's predicted mean latency regresses by more than the margin
+    against the best of the last ``cold_fallback_window`` re-plans, a cold
+    climb runs too and the better plan wins (``None`` disables the guard;
+    fired times are reported in ``AdaptiveRunResult.cold_fallback_times``).
     """
     n = len(profiles)
     est = SlidingRateEstimator(n, window=window)
@@ -96,24 +139,50 @@ def run_adaptive(
     except (TypeError, ValueError):
         pass  # builtins/partials without introspectable signatures
 
+    # Normalized (per-request) objectives of recent committed plans: the
+    # incumbent trend the cold-fallback guard compares against.
+    norm_history: collections.deque[float] = collections.deque(
+        maxlen=max(1, cold_fallback_window)
+    )
+    cold_fallback_times: list[float] = []
+
     def plan_for(
-        rates: Sequence[float], incumbent: Plan | None = None
-    ) -> tuple[Plan, float]:
+        rates: Sequence[float], incumbent: Plan | None = None, now: float = 0.0
+    ) -> tuple[Plan, float, float]:
         tenants = [
             TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
         ]
+        tot_rate = sum(t.rate for t in tenants)
         kwargs = dict(planner_kwargs)
-        if warm_capable and incumbent is not None:
+        warm = warm_capable and incumbent is not None
+        if warm:
             kwargs["init_plan"] = incumbent
         t0 = time.perf_counter()
-        plan, _ = planner(tenants, platform, k_max, **kwargs)
-        return plan, time.perf_counter() - t0
+        plan, obj = planner(tenants, platform, k_max, **kwargs)
+        if (
+            warm
+            and cold_fallback_margin is not None
+            and tot_rate > 0
+            and _should_cold_fallback(
+                obj / tot_rate, norm_history, cold_fallback_margin
+            )
+        ):
+            cold_kwargs = dict(planner_kwargs)
+            cold_plan, cold_obj = planner(tenants, platform, k_max, **cold_kwargs)
+            cold_fallback_times.append(now)
+            if cold_obj < obj:
+                plan, obj = cold_plan, cold_obj
+        dt = time.perf_counter() - t0
+        if tot_rate > 0:
+            norm_history.append(obj / tot_rate)
+        return plan, obj, dt
 
     rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
-    plan, dt = plan_for(rates0)
-    sim = RuntimeSimulator(profiles, plan, platform)
+    plan, obj, dt = plan_for(rates0)
+    sim = make_backend(backend, profiles, plan, platform)
     replan_times = [0.0]
     plans = [plan]
+    objectives = [obj]
     compute_times = [dt]
 
     horizon = max((r.arrival for r in requests), default=0.0)
@@ -121,25 +190,31 @@ def run_adaptive(
     next_replan = replan_period
     for req in sorted(requests, key=lambda r: r.arrival):
         while req.arrival >= next_replan:
+            sim.advance_to(next_replan)
             rates = est.rates(next_replan)
             if any(r > 0 for r in rates):
-                new_plan, dt = plan_for(rates, incumbent=sim.plan)
+                new_plan, obj, dt = plan_for(
+                    rates, incumbent=sim.plan, now=next_replan
+                )
                 if new_plan != sim.plan:
                     sim.set_plan(new_plan, now=next_replan)
                 replan_times.append(next_replan)
                 plans.append(new_plan)
+                objectives.append(obj)
                 compute_times.append(dt)
             next_replan += replan_period
         est.observe(req.model_idx, req.arrival)
-        sim.step(req, record=req.arrival >= warmup_t)
+        sim.offer(req, record=req.arrival >= warmup_t)
 
     # Duration runs to the last *completion*: under backlog the queue drains
     # past the last arrival, and clipping there inflated tpu_utilization
     # beyond 1.0.
-    duration = max(horizon, sim.last_completion)
+    duration = max(horizon, sim.drain())
     return AdaptiveRunResult(
         sim=sim.result(duration),
         replan_times=replan_times,
         plans=plans,
         plan_compute_seconds=compute_times,
+        plan_objectives=objectives,
+        cold_fallback_times=cold_fallback_times,
     )

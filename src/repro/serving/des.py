@@ -1,0 +1,282 @@
+"""Event-driven ground-truth simulator of the SwapLess runtime.
+
+The sequential ``RuntimeSimulator`` stepper shares most of its structure with
+the analytic model it is supposed to validate (it literally walks requests
+through ``max(t, server_free)`` recurrences).  This module is the
+independent check: a classic discrete-event simulation with
+
+* an event heap ordered by (time, insertion sequence),
+* one TPU server with explicit swap state -- parameter residency tracked by
+  the model-granularity LRU ``SramCache``, the inter-model swap-in cost
+  ``T_load`` charged at service start when the tenant switch evicted the
+  weights, intra-model swap streaming folded into the bound service time,
+* ``k_i`` CPU-core servers per model under the active ``Plan``,
+* per-tenant FIFO queues in front of both stages (the TPU picks the
+  earliest-enqueued head across tenants, i.e. global FCFS),
+* mid-flight plan changes: ``set_plan`` re-routes *future* arrivals while
+  queued and in-service work bound under the old plan drains unchanged.
+
+The DES and the stepper implement the same system contract (same
+``Request`` traces in, same ``SimResult`` out) with disjoint mechanics, so
+agreement between them -- and between either and Eq. 1-5 -- is evidence,
+not tautology.  ``tests/test_des.py`` pins the correspondence:
+deterministic single-tenant latencies match the closed-form static terms to
+float round-off, and seeded Poisson waits converge to ``mg1_wait``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+from typing import Sequence
+
+from repro.core.planner import (
+    ModelProfile,
+    Plan,
+    load_time,
+    prefix_service_time,
+)
+from repro.hw.specs import Platform
+from repro.serving.cache import SramCache
+from repro.serving.result import SimResult
+from repro.serving.workload import Request
+
+# Event kinds, in no particular priority: simultaneous events are resolved
+# by insertion sequence, which matches the causal order they were scheduled.
+_ARRIVAL, _TPU_ENQUEUE, _TPU_DONE, _CPU_ENQUEUE, _CPU_DONE = range(5)
+
+
+@dataclasses.dataclass
+class _Job:
+    """One request in flight, with its route bound at arrival time."""
+
+    req: Request
+    record: bool
+    p: int                 # partition point under the plan active at arrival
+    tpu_service: float     # prefix compute + intra-swap stream (jitter-scaled)
+    cpu_service: float     # 1-core suffix time (jitter-scaled)
+    out_xfer: float        # boundary activation transfer (0 when no suffix)
+    enq: float = 0.0       # FIFO stamp of the current queue
+    seq: int = 0
+
+
+class DiscreteEventSimulator:
+    """Event-heap serving simulator; drop-in backend for ``simulate`` and
+    ``run_adaptive`` (same driver surface as ``RuntimeSimulator``:
+    ``offer`` / ``advance_to`` / ``set_plan`` / ``drain`` / ``result``)."""
+
+    def __init__(
+        self,
+        profiles: Sequence[ModelProfile],
+        plan: Plan,
+        platform: Platform,
+    ):
+        self.profiles = list(profiles)
+        self.platform = platform
+        self.n = len(self.profiles)
+        self.cache = SramCache(platform.sram_bytes)
+        self.now = 0.0
+        self.tpu_busy = 0.0
+        self.last_completion = 0.0
+        self.latencies: list[list[float]] = [[] for _ in range(self.n)]
+        self.arrivals: list[list[float]] = [[] for _ in range(self.n)]
+        self.misses = [0] * self.n
+        self.tpu_requests = [0] * self.n
+        self._heap: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self._tpu_queues: list[collections.deque[_Job]] = [
+            collections.deque() for _ in range(self.n)
+        ]
+        self._tpu_job: _Job | None = None
+        self._cpu_queues: list[collections.deque[_Job]] = [
+            collections.deque() for _ in range(self.n)
+        ]
+        self._cpu_busy = [0] * self.n
+        self._plan: Plan | None = None
+        self.set_plan(plan, now=0.0)
+
+    # -- plan management ----------------------------------------------------
+    def set_plan(self, plan: Plan, now: float) -> None:
+        """Switch to a new (P, K) configuration at simulated time ``now``.
+
+        Pending events up to ``now`` are processed first, so the switch is
+        causally ordered against the workload.  Routing is bound per job at
+        its arrival: jobs already past arrival keep their old partition and
+        service times (a mid-flight request is not re-split), while new
+        arrivals see the new plan.  CPU pools resize in place -- running
+        suffixes finish on their core; a pool shrunk below its busy count
+        just stops admitting new work until it drains (the paper preloads
+        candidate partitions, so the switch itself is free).
+        """
+        if len(plan.partition) != self.n:
+            raise ValueError("plan size mismatch")
+        self.advance_to(now)
+        self._plan = plan
+        pf, pl = self.profiles, self.platform
+        p = plan.partition
+        self._prefix_bytes = [f.prefix_weight_bytes(q) for f, q in zip(pf, p)]
+        self._s_tpu = [prefix_service_time(f, q, pl) for f, q in zip(pf, p)]
+        self._t_load = [load_time(f, q, pl) for f, q in zip(pf, p)]
+        self._s_cpu = [
+            f.suffix_cpu_time(q, 1) if q < f.num_partition_points else 0.0
+            for f, q in zip(pf, p)
+        ]
+        self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
+        self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+        # A grown pool can admit queued work immediately.
+        for i in range(self.n):
+            self._start_cpu(i)
+
+    @property
+    def plan(self) -> Plan:
+        assert self._plan is not None
+        return self._plan
+
+    def _cpu_servers(self, i: int) -> int:
+        # Suffix-bearing jobs always have somewhere to run, even if a plan
+        # change dropped the model's allocation to 0 cores mid-flight (the
+        # stepper sizes its pools max(k, 1) for the same reason).
+        return max(self.plan.cores[i], 1)
+
+    # -- driver surface -----------------------------------------------------
+    def submit(self, req: Request, *, record: bool = True) -> None:
+        """Schedule one request; its route binds when the arrival fires."""
+        if not 0 <= req.model_idx < self.n:
+            raise ValueError(f"model_idx {req.model_idx} out of range")
+        if req.arrival < self.now:
+            raise ValueError(
+                f"arrival {req.arrival} is in the simulator's past ({self.now})"
+            )
+        self._push(req.arrival, _ARRIVAL, (req, record))
+
+    def offer(self, req: Request, *, record: bool = True) -> None:
+        """Advance to the request's arrival, then submit it (the shared
+        in-order driver contract of ``simulate``/``run_adaptive``)."""
+        self.advance_to(req.arrival)
+        self.submit(req, record=record)
+
+    def advance_to(self, t: float) -> None:
+        """Process every event with timestamp <= ``t``; clock ends at ``t``."""
+        if t < self.now:
+            raise ValueError(f"cannot rewind the clock from {self.now} to {t}")
+        while self._heap and self._heap[0][0] <= t:
+            self._dispatch(*heapq.heappop(self._heap))
+        self.now = t
+
+    def drain(self) -> float:
+        """Run the event loop dry; returns the last completion time."""
+        while self._heap:
+            self._dispatch(*heapq.heappop(self._heap))
+        return self.last_completion
+
+    def result(self, duration: float) -> SimResult:
+        return SimResult(
+            latencies=self.latencies,
+            arrivals=self.arrivals,
+            tpu_busy=self.tpu_busy,
+            duration=duration,
+            misses=self.misses,
+            tpu_requests=self.tpu_requests,
+        )
+
+    # -- event machinery ----------------------------------------------------
+    def _push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _dispatch(self, t: float, seq: int, kind: int, payload: object) -> None:
+        self.now = max(self.now, t)
+        if kind == _ARRIVAL:
+            self._on_arrival(*payload)
+        elif kind == _TPU_ENQUEUE:
+            self._on_tpu_enqueue(payload)
+        elif kind == _TPU_DONE:
+            self._on_tpu_done(payload)
+        elif kind == _CPU_ENQUEUE:
+            self._on_cpu_enqueue(payload)
+        else:
+            self._on_cpu_done(payload)
+
+    def _on_arrival(self, req: Request, record: bool) -> None:
+        i = req.model_idx
+        p = self.plan.partition[i]
+        P_i = self.profiles[i].num_partition_points
+        job = _Job(
+            req=req,
+            record=record,
+            p=p,
+            tpu_service=self._s_tpu[i] * req.service_scale,
+            cpu_service=self._s_cpu[i] * req.service_scale,
+            out_xfer=self._out_xfer[i] if 0 < p < P_i else 0.0,
+        )
+        if p > 0:
+            # Input transfer is a pure delay: it occupies neither server
+            # (the additive d/B term of Eq. 4).
+            self._push(self.now + self._in_xfer[i], _TPU_ENQUEUE, job)
+        else:
+            self._on_cpu_enqueue(job)
+
+    def _on_tpu_enqueue(self, job: _Job) -> None:
+        job.enq, job.seq = self.now, next(self._seq)
+        self._tpu_queues[job.req.model_idx].append(job)
+        self._start_tpu()
+
+    def _start_tpu(self) -> None:
+        if self._tpu_job is not None:
+            return
+        # Global FCFS over per-tenant FIFO queues: serve the earliest head.
+        heads = [q[0] for q in self._tpu_queues if q]
+        if not heads:
+            return
+        job = min(heads, key=lambda j: (j.enq, j.seq))
+        i = job.req.model_idx
+        self._tpu_queues[i].popleft()
+        self._tpu_job = job
+        # Swap state transition: touching this tenant's weights may evict
+        # another's; a miss (weights not resident) charges the swap-in.
+        miss = self.cache.access(i, self._prefix_bytes_of(job), self.now)
+        service = job.tpu_service + (self._t_load_of(job) if miss else 0.0)
+        self.tpu_busy += service
+        if job.record:
+            self.tpu_requests[i] += 1
+            if miss:
+                self.misses[i] += 1
+        self._push(self.now + service, _TPU_DONE, job)
+
+    def _prefix_bytes_of(self, job: _Job) -> int:
+        return self.profiles[job.req.model_idx].prefix_weight_bytes(job.p)
+
+    def _t_load_of(self, job: _Job) -> float:
+        return load_time(self.profiles[job.req.model_idx], job.p, self.platform)
+
+    def _on_tpu_done(self, job: _Job) -> None:
+        self._tpu_job = None
+        if job.p < self.profiles[job.req.model_idx].num_partition_points:
+            self._push(self.now + job.out_xfer, _CPU_ENQUEUE, job)
+        else:
+            self._complete(job)
+        self._start_tpu()
+
+    def _on_cpu_enqueue(self, job: _Job) -> None:
+        job.enq, job.seq = self.now, next(self._seq)
+        self._cpu_queues[job.req.model_idx].append(job)
+        self._start_cpu(job.req.model_idx)
+
+    def _start_cpu(self, i: int) -> None:
+        while self._cpu_queues[i] and self._cpu_busy[i] < self._cpu_servers(i):
+            job = self._cpu_queues[i].popleft()
+            self._cpu_busy[i] += 1
+            self._push(self.now + job.cpu_service, _CPU_DONE, job)
+
+    def _on_cpu_done(self, job: _Job) -> None:
+        i = job.req.model_idx
+        self._cpu_busy[i] -= 1
+        self._complete(job)
+        self._start_cpu(i)
+
+    def _complete(self, job: _Job) -> None:
+        self.last_completion = max(self.last_completion, self.now)
+        if job.record:
+            i = job.req.model_idx
+            self.latencies[i].append(self.now - job.req.arrival)
+            self.arrivals[i].append(job.req.arrival)

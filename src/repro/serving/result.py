@@ -1,0 +1,80 @@
+"""Shared observation record for every serving backend.
+
+``SimResult`` is the one metrics container produced by the sequential
+``RuntimeSimulator`` stepper, the event-driven ``DiscreteEventSimulator``,
+and ``run_adaptive`` -- a model-vs-simulation comparison never depends on
+which backend observed the trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class SimResult:
+    latencies: list[list[float]]               # per model, per request (s)
+    arrivals: list[list[float]]                # arrival stamps (for timelines)
+    tpu_busy: float
+    duration: float
+    misses: list[int]
+    tpu_requests: list[int]
+
+    def mean_latency(self, model_idx: int) -> float:
+        """Mean observed latency; ``nan`` when the model completed nothing
+        (an unknown mean, not a zero-latency one)."""
+        ls = self.latencies[model_idx]
+        return sum(ls) / len(ls) if ls else math.nan
+
+    def overall_mean(self) -> float:
+        """Mean over all completions; ``nan`` when nothing completed at all
+        (same unknown-not-zero convention as ``mean_latency``)."""
+        alll = [l for ls in self.latencies for l in ls]
+        return sum(alll) / len(alll) if alll else math.nan
+
+    def request_weighted_mean(self, rates: Sequence[float] | None = None) -> float:
+        """Per-model rate-weighted mean latency, Eq. 5's
+        ``sum_i lambda_i T_i / sum_i lambda_i``.
+
+        With ``rates`` given, the weights are the *offered* per-model rates
+        (what the objective optimizes); without them, the observed request
+        counts stand in, which recovers the plain overall mean.  Models with
+        no recorded samples (e.g. all arrivals inside the warmup window)
+        have an unknown mean and are excluded from both numerator and
+        denominator rather than counted as zero latency.
+        """
+        if rates is None:
+            weights: Sequence[float] = [len(ls) for ls in self.latencies]
+        else:
+            if len(rates) != len(self.latencies):
+                raise ValueError("rates length must match model count")
+            weights = rates
+        pairs = [
+            (w, self.mean_latency(i))
+            for i, (w, ls) in enumerate(zip(weights, self.latencies))
+            if ls
+        ]
+        if not pairs:
+            return math.nan  # nothing completed: the mean is unknown
+        tot = sum(w for w, _ in pairs)
+        if tot <= 0:
+            return 0.0
+        return sum(w * m for w, m in pairs) / tot
+
+    def p99(self, model_idx: int) -> float:
+        """Nearest-rank 99th percentile: the smallest latency with at least
+        99% of samples at or below it (``ceil(0.99 n)``-th order statistic).
+        ``nan`` when the model completed no requests."""
+        ls = sorted(self.latencies[model_idx])
+        if not ls:
+            return math.nan
+        return ls[math.ceil(0.99 * len(ls)) - 1]
+
+    def observed_miss_rate(self, model_idx: int) -> float:
+        n = self.tpu_requests[model_idx]
+        return self.misses[model_idx] / n if n else 0.0
+
+    @property
+    def tpu_utilization(self) -> float:
+        return self.tpu_busy / self.duration if self.duration > 0 else 0.0

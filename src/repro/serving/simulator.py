@@ -1,8 +1,8 @@
-"""Discrete-event simulator of the SwapLess runtime.
+"""Sequential per-request simulator of the SwapLess runtime.
 
 Plays the role of the physical testbed in the paper's evaluation: the
-analytic model *predicts* latency, the DES *observes* it.  The simulated
-system matches Section IV's runtime:
+analytic model *predicts* latency, the simulator *observes* it.  The
+simulated system matches Section IV's runtime:
 
 * a single global TPU worker with an FCFS queue (M/G/1 discipline),
 * per-model CPU pools with ``k_i`` single-request workers (M/D/k),
@@ -12,14 +12,19 @@ system matches Section IV's runtime:
 * input/boundary transfer latencies that do not occupy either server
   (matching the additive d/B terms of Eq. 4).
 
-``RuntimeSimulator`` is steppable and supports live plan switches, which is
-what the online controller uses for dynamic workloads (Fig. 8).
+``RuntimeSimulator`` is a *stepper*: it walks the trace in arrival order
+and resolves each request's full timeline with ``max(t, server_free)``
+recurrences.  That shares structure with the analytic recurrences, so the
+independent event-driven backend (``repro.serving.des``) is the ground
+truth the model is validated against; both implement the same driver
+surface (``offer`` / ``advance_to`` / ``set_plan`` / ``drain`` /
+``result``) over the shared ``Request`` trace and ``SimResult`` record,
+and ``simulate(..., backend=...)`` / ``run_adaptive(..., backend=...)``
+pick between them.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
-import math
 from typing import Sequence
 
 from repro.core.planner import (
@@ -31,70 +36,10 @@ from repro.core.planner import (
 )
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
+from repro.serving.result import SimResult
 from repro.serving.workload import Request
 
-
-@dataclasses.dataclass
-class SimResult:
-    latencies: list[list[float]]               # per model, per request (s)
-    arrivals: list[list[float]]                # arrival stamps (for timelines)
-    tpu_busy: float
-    duration: float
-    misses: list[int]
-    tpu_requests: list[int]
-
-    def mean_latency(self, model_idx: int) -> float:
-        ls = self.latencies[model_idx]
-        return sum(ls) / len(ls) if ls else 0.0
-
-    def overall_mean(self) -> float:
-        alll = [l for ls in self.latencies for l in ls]
-        return sum(alll) / len(alll) if alll else 0.0
-
-    def request_weighted_mean(self, rates: Sequence[float] | None = None) -> float:
-        """Per-model rate-weighted mean latency, Eq. 5's
-        ``sum_i lambda_i T_i / sum_i lambda_i``.
-
-        With ``rates`` given, the weights are the *offered* per-model rates
-        (what the objective optimizes); without them, the observed request
-        counts stand in, which recovers the plain overall mean.  Models with
-        no recorded samples (e.g. all arrivals inside the warmup window)
-        have an unknown mean and are excluded from both numerator and
-        denominator rather than counted as zero latency.
-        """
-        if rates is None:
-            weights: Sequence[float] = [len(ls) for ls in self.latencies]
-        else:
-            if len(rates) != len(self.latencies):
-                raise ValueError("rates length must match model count")
-            weights = rates
-        pairs = [
-            (w, self.mean_latency(i))
-            for i, (w, ls) in enumerate(zip(weights, self.latencies))
-            if ls
-        ]
-        tot = sum(w for w, _ in pairs)
-        if tot <= 0:
-            return 0.0
-        return sum(w * m for w, m in pairs) / tot
-
-    def p99(self, model_idx: int) -> float:
-        """Nearest-rank 99th percentile: the smallest latency with at least
-        99% of samples at or below it (``ceil(0.99 n)``-th order statistic).
-        The previous ``int(0.99 n)`` index overshot by one rank for most n
-        (e.g. returned the max over all 100-sample traces)."""
-        ls = sorted(self.latencies[model_idx])
-        if not ls:
-            return 0.0
-        return ls[math.ceil(0.99 * len(ls)) - 1]
-
-    def observed_miss_rate(self, model_idx: int) -> float:
-        n = self.tpu_requests[model_idx]
-        return self.misses[model_idx] / n if n else 0.0
-
-    @property
-    def tpu_utilization(self) -> float:
-        return self.tpu_busy / self.duration if self.duration > 0 else 0.0
+__all__ = ["RuntimeSimulator", "SimResult", "simulate", "make_backend"]
 
 
 class RuntimeSimulator:
@@ -175,7 +120,9 @@ class RuntimeSimulator:
             t += self._in_xfer[i]
             start = max(t, self.tpu_free)
             miss = self.cache.access(i, self._prefix_bytes[i], start)
-            service = self._s_tpu[i] + (self._t_load[i] if miss else 0.0)
+            service = self._s_tpu[i] * req.service_scale + (
+                self._t_load[i] if miss else 0.0
+            )
             self.tpu_free = start + service
             self.tpu_busy += service
             t = self.tpu_free
@@ -189,7 +136,7 @@ class RuntimeSimulator:
             pool = self._cpu_pools[i]
             free = heapq.heappop(pool)
             start = max(t, free)
-            end = start + self._s_cpu[i]
+            end = start + self._s_cpu[i] * req.service_scale
             heapq.heappush(pool, end)
             t = end
         self.last_completion = max(self.last_completion, t)
@@ -198,6 +145,19 @@ class RuntimeSimulator:
             self.latencies[i].append(lat)
             self.arrivals[i].append(req.arrival)
         return lat
+
+    # -- shared driver surface (see repro.serving.des) -----------------------
+    def offer(self, req: Request, *, record: bool = True) -> None:
+        """Driver-contract alias of ``step``: requests must be offered in
+        arrival order (the stepper resolves each fully on arrival)."""
+        self.step(req, record=record)
+
+    def advance_to(self, t: float) -> None:
+        """No-op: the stepper has no pending events between requests."""
+
+    def drain(self) -> float:
+        """Nothing is ever in flight between steps; reports the horizon."""
+        return self.last_completion
 
     def result(self, duration: float) -> SimResult:
         return SimResult(
@@ -210,6 +170,28 @@ class RuntimeSimulator:
         )
 
 
+def make_backend(
+    backend: str,
+    profiles: Sequence[ModelProfile],
+    plan: Plan,
+    platform: Platform,
+):
+    """Instantiate a serving-simulation backend by name.
+
+    ``"stepper"`` is the sequential ``RuntimeSimulator``; ``"des"`` the
+    event-driven ``DiscreteEventSimulator`` (the validation ground truth).
+    """
+    if backend == "stepper":
+        return RuntimeSimulator(profiles, plan, platform)
+    if backend == "des":
+        # Local import: des.py imports the shared result/workload modules
+        # only, so the dependency stays one-way at module-load time.
+        from repro.serving.des import DiscreteEventSimulator
+
+        return DiscreteEventSimulator(profiles, plan, platform)
+    raise ValueError(f"unknown backend {backend!r} (want 'stepper' or 'des')")
+
+
 def simulate(
     tenants: Sequence[TenantSpec],
     plan: Plan,
@@ -217,18 +199,21 @@ def simulate(
     requests: Sequence[Request],
     *,
     warmup_frac: float = 0.05,
+    backend: str = "stepper",
 ) -> SimResult:
     """Run a static-plan simulation over a request trace.
 
     ``warmup_frac``: leading fraction of the trace excluded from statistics
     (cold-start cache fills; the paper measures steady state).
+    ``backend``: ``"stepper"`` (default) or ``"des"`` -- same contract,
+    independent mechanics.
     """
-    sim = RuntimeSimulator([t.profile for t in tenants], plan, platform)
+    sim = make_backend(backend, [t.profile for t in tenants], plan, platform)
     horizon = max((r.arrival for r in requests), default=0.0)
     warmup_t = horizon * warmup_frac
     for req in sorted(requests, key=lambda r: r.arrival):
-        sim.step(req, record=req.arrival >= warmup_t)
+        sim.offer(req, record=req.arrival >= warmup_t)
     # Duration runs to the last completion, not the last arrival: under
     # backlog the servers keep draining after arrivals stop, and clipping
     # the horizon at the last arrival let tpu_utilization exceed 1.0.
-    return sim.result(max(horizon, sim.last_completion))
+    return sim.result(max(horizon, sim.drain()))

@@ -1,0 +1,351 @@
+"""Differential tests for the discrete-event serving simulator.
+
+The DES (``repro.serving.des``) is the repo's ground truth for serving
+latency (ROADMAP "DES is ground truth" invariant).  Three tiers of checks:
+
+* *round-off exact*: with deterministic spaced arrivals and a single tenant
+  the DES must equal the closed-form static latency (Eq. 4 without waits)
+  to float round-off, and the DES must agree with the sequential stepper
+  elementwise whenever both see the same FCFS order;
+* *statistical*: seeded Poisson single-tenant waits must converge to the
+  Pollaczek-Khinchine ``mg1_wait`` (slow-marked);
+* *mechanical*: mid-flight plan changes bind routing at arrival, conserve
+  requests, and never deadlock.
+"""
+import math
+
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import latency, queueing
+from repro.core.planner import Plan, TenantSpec, prefix_service_time
+from repro.configs.paper_models import paper_profile
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.des import DiscreteEventSimulator
+from repro.serving.simulator import RuntimeSimulator, make_backend, simulate
+from repro.serving.workload import (
+    Request,
+    deterministic_trace,
+    poisson_trace,
+    with_service_jitter,
+)
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+class TestBackendFactory:
+    def test_known_backends(self):
+        profs = [paper_profile("mnasnet")]
+        plan = Plan((7,), (0,))
+        assert isinstance(
+            make_backend("stepper", profs, plan, HW), RuntimeSimulator
+        )
+        assert isinstance(
+            make_backend("des", profs, plan, HW), DiscreteEventSimulator
+        )
+
+    def test_unknown_backend_raises(self):
+        profs = [paper_profile("mnasnet")]
+        with pytest.raises(ValueError):
+            make_backend("quantum", profs, Plan((7,), (0,)), HW)
+
+
+class TestDeterministicExact:
+    """Spaced deterministic arrivals: zero queueing, warm cache -- every
+    recorded latency must equal LatencyBreakdown.static to round-off."""
+
+    def _assert_static_exact(self, name, plan, rate=0.05):
+        ts = tenants_for((name, rate))
+        # Gaps of 1/rate = 20 s dwarf any service time: no queueing at all.
+        reqs = deterministic_trace([rate], 2000.0)
+        res = simulate(ts, plan, HW, reqs, backend="des")
+        static = latency.predict(ts, plan, HW).static_latencies[0]
+        assert res.latencies[0], "trace produced no recorded requests"
+        for lat in res.latencies[0]:
+            assert lat == pytest.approx(static, rel=1e-9)
+        # Post-warmup requests are all cache hits (single tenant).
+        assert res.observed_miss_rate(0) == 0.0
+
+    def test_full_tpu(self):
+        self._assert_static_exact("inceptionv4", Plan((11,), (0,)))
+
+    def test_partitioned(self):
+        self._assert_static_exact("inceptionv4", Plan((9,), (4,)))
+
+    def test_full_cpu(self):
+        self._assert_static_exact("mnasnet", Plan((0,), (4,)))
+
+    def test_multi_tenant_static_when_fits(self):
+        # Two models that fit SRAM together, arrivals far apart: still the
+        # zero-queueing closed form, per model.  Unequal-rate deterministic
+        # streams can still collide for unlucky rate ratios, so the
+        # zero-queueing premise (every gap dwarfs every service time) is
+        # asserted explicitly.
+        ts = tenants_for(("mobilenetv2", 0.05), ("squeezenet", 0.03))
+        plan = Plan((5, 2), (0, 0))
+        reqs = deterministic_trace([0.05, 0.03], 2000.0)
+        gaps = [
+            b.arrival - a.arrival for a, b in zip(reqs, reqs[1:])
+        ]
+        assert min(gaps) > 1.0
+        res = simulate(ts, plan, HW, reqs, backend="des")
+        pred = latency.predict(ts, plan, HW)
+        for i in range(2):
+            assert res.latencies[i]
+            for lat in res.latencies[i]:
+                assert lat == pytest.approx(pred.static_latencies[i], rel=1e-9)
+
+
+def _by_arrival(res, model_idx):
+    """(arrival, latency) pairs sorted by arrival: the DES records in
+    completion order, the stepper in arrival order, and multi-core CPU
+    suffixes with jittered service times legitimately complete out of
+    order -- pairing by arrival stamp compares like with like."""
+    return sorted(zip(res.arrivals[model_idx], res.latencies[model_idx]))
+
+
+class TestDesMatchesStepper:
+    """Where both backends see the same FCFS order they are two independent
+    implementations of the same system and must agree elementwise."""
+
+    def _assert_elementwise(self, des, step, model_idx=0):
+        d, s = _by_arrival(des, model_idx), _by_arrival(step, model_idx)
+        assert len(d) == len(s)
+        for (at_d, a), (at_s, b) in zip(d, s):
+            assert at_d == at_s
+            assert a == pytest.approx(b, rel=1e-12, abs=1e-15)
+
+    def test_single_tenant_poisson_elementwise(self):
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([3.0], 500.0, seed=1)
+        des = simulate(ts, plan, HW, reqs, backend="des")
+        step = simulate(ts, plan, HW, reqs, backend="stepper")
+        self._assert_elementwise(des, step)
+        assert des.tpu_busy == pytest.approx(step.tpu_busy, rel=1e-12)
+
+    def test_single_tenant_partitioned_elementwise(self):
+        ts = tenants_for(("inceptionv4", 2.0))
+        plan = Plan((9,), (4,))
+        reqs = poisson_trace([2.0], 500.0, seed=2)
+        des = simulate(ts, plan, HW, reqs, backend="des")
+        step = simulate(ts, plan, HW, reqs, backend="stepper")
+        self._assert_elementwise(des, step)
+
+    def test_single_tenant_jittered_elementwise(self):
+        ts = tenants_for(("inceptionv4", 2.0))
+        plan = Plan((9,), (4,))
+        reqs = with_service_jitter(
+            poisson_trace([2.0], 500.0, seed=3), sigma=0.8, seed=4
+        )
+        des = simulate(ts, plan, HW, reqs, backend="des")
+        step = simulate(ts, plan, HW, reqs, backend="stepper")
+        self._assert_elementwise(des, step)
+
+    @given(seed=st.integers(0, 5))
+    @settings(max_examples=6, deadline=None)
+    def test_multi_tenant_statistical(self, seed):
+        # Multi-tenant order can differ at ties, so compare statistics.
+        ts = tenants_for(("efficientnet", 2.0), ("gpunet", 2.0))
+        plan = Plan((6, 5), (0, 0))
+        reqs = poisson_trace([2.0, 2.0], 1500.0, seed=seed)
+        des = simulate(ts, plan, HW, reqs, backend="des")
+        step = simulate(ts, plan, HW, reqs, backend="stepper")
+        for i in range(2):
+            assert des.mean_latency(i) == pytest.approx(
+                step.mean_latency(i), rel=0.05
+            )
+            assert des.observed_miss_rate(i) == pytest.approx(
+                step.observed_miss_rate(i), abs=0.05
+            )
+
+
+class TestDesVsAnalytic:
+    """DES observations against Eq. 1-4 predictions (the in-silico
+    analogue of the paper's Figs. 5-6 validation, on the independent
+    backend)."""
+
+    def test_mean_latency_tracks_prediction(self):
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([3.0], 4000.0, seed=5)
+        res = simulate(ts, plan, HW, reqs, backend="des")
+        pred = latency.predict(ts, plan, HW)
+        assert res.mean_latency(0) == pytest.approx(pred.latencies[0], rel=0.12)
+
+    def test_utilization_tracks_rho(self):
+        ts = tenants_for(("inceptionv4", 3.0))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([3.0], 4000.0, seed=6)
+        res = simulate(ts, plan, HW, reqs, backend="des")
+        pred = latency.predict(ts, plan, HW)
+        assert res.tpu_utilization == pytest.approx(pred.tpu_utilization, rel=0.08)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("rho", [0.5, 0.8])
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_poisson_wait_converges_to_mg1(self, rho, seed):
+        """Acceptance: seeded Poisson DES mean wait within 5% of mg1_wait at
+        utilization <= 0.8 (M/D/1: es2 = es^2 for the deterministic prefix)."""
+        prof = paper_profile("inceptionv4")
+        P = prof.num_partition_points
+        s = prefix_service_time(prof, P, HW)
+        lam = rho / s
+        expected = queueing.mg1_wait(lam, s, s * s)
+        ts = [TenantSpec(prof, lam)]
+        reqs = poisson_trace([lam], 6000.0, seed=seed)
+        res = simulate(ts, Plan((P,), (0,)), HW, reqs, backend="des")
+        in_xfer = prof.input_bytes / HW.swap_bw
+        waits = [l - in_xfer - s for l in res.latencies[0]]
+        obs = sum(waits) / len(waits)
+        assert obs == pytest.approx(expected, rel=0.05)
+        # Cross-check the packaged per-term metrics helper.
+        m = queueing.mg1_metrics(lam, s, s * s)
+        assert m.wait == expected
+        assert m.rho == pytest.approx(rho)
+
+
+class TestMidFlightPlanChange:
+    def test_routing_binds_at_arrival(self):
+        # A backlog bound to the TPU keeps draining through the TPU after
+        # the plan moves the tenant to full-CPU; only post-switch arrivals
+        # skip the TPU stage.
+        prof = paper_profile("mnasnet")
+        des = DiscreteEventSimulator([prof], Plan((7,), (0,)), HW)
+        for j in range(20):
+            des.submit(Request(0, 0.001 * j))
+        des.advance_to(0.02)  # mid-backlog
+        des.set_plan(Plan((0,), (4,)), now=0.02)
+        for j in range(10):
+            des.submit(Request(0, 0.03 + 0.001 * j))
+        des.drain()
+        assert sum(len(l) for l in des.latencies) == 30
+        # Every pre-switch request ran a TPU prefix; no post-switch one did.
+        assert des.tpu_requests[0] == 20
+
+    def test_grown_cpu_pool_admits_queued_work(self):
+        # One core, a pile of suffix work queued; growing the pool to 4
+        # must immediately start queued jobs (no deadlock, faster drain).
+        prof = paper_profile("mnasnet")
+        reqs = [Request(0, 0.0005 * j) for j in range(40)]
+
+        des_static = DiscreteEventSimulator([prof], Plan((0,), (1,)), HW)
+        for r in reqs:
+            des_static.submit(r)
+        t_static = des_static.drain()
+
+        des_grow = DiscreteEventSimulator([prof], Plan((0,), (1,)), HW)
+        for r in reqs:
+            des_grow.submit(r)
+        des_grow.advance_to(0.05)
+        des_grow.set_plan(Plan((0,), (4,)), now=0.05)
+        t_grow = des_grow.drain()
+
+        assert sum(len(l) for l in des_grow.latencies) == 40
+        assert t_grow < t_static
+
+    def test_shrunk_pool_drains_bound_suffixes(self):
+        # Bound CPU work survives a switch to a 0-core full-TPU plan: the
+        # pool keeps one effective server until the backlog drains.
+        prof = paper_profile("mnasnet")
+        des = DiscreteEventSimulator([prof], Plan((0,), (4,)), HW)
+        for j in range(20):
+            des.submit(Request(0, 0.0005 * j))
+        des.advance_to(0.02)
+        des.set_plan(Plan((7,), (0,)), now=0.02)
+        des.submit(Request(0, 0.05))
+        des.drain()
+        assert sum(len(l) for l in des.latencies) == 21
+
+    def test_conservation_under_random_replans(self):
+        profs = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        plans = [
+            Plan((7, 11), (0, 0)),
+            Plan((0, 11), (4, 0)),
+            Plan((5, 9), (2, 2)),
+            Plan((7, 0), (0, 4)),
+        ]
+        reqs = poisson_trace([4.0, 2.0], 60.0, seed=7)
+        des = DiscreteEventSimulator(profs, plans[0], HW)
+        switch_every = 10.0
+        next_switch, pi = switch_every, 1
+        for r in reqs:
+            while r.arrival >= next_switch:
+                des.advance_to(next_switch)
+                des.set_plan(plans[pi % len(plans)], now=next_switch)
+                pi += 1
+                next_switch += switch_every
+            des.offer(r)
+        des.drain()
+        assert sum(len(l) for l in des.latencies) == len(reqs)
+        assert all(l >= 0.0 for ls in des.latencies for l in ls)
+
+
+class TestDesGuards:
+    def test_submit_in_past_raises(self):
+        des = DiscreteEventSimulator(
+            [paper_profile("mnasnet")], Plan((7,), (0,)), HW
+        )
+        des.advance_to(10.0)
+        with pytest.raises(ValueError):
+            des.submit(Request(0, 5.0))
+
+    def test_clock_rewind_raises(self):
+        des = DiscreteEventSimulator(
+            [paper_profile("mnasnet")], Plan((7,), (0,)), HW
+        )
+        des.advance_to(10.0)
+        with pytest.raises(ValueError):
+            des.advance_to(5.0)
+
+    def test_bad_model_idx_raises(self):
+        des = DiscreteEventSimulator(
+            [paper_profile("mnasnet")], Plan((7,), (0,)), HW
+        )
+        with pytest.raises(ValueError):
+            des.submit(Request(3, 0.0))
+
+    def test_plan_size_mismatch_raises(self):
+        des = DiscreteEventSimulator(
+            [paper_profile("mnasnet")], Plan((7,), (0,)), HW
+        )
+        with pytest.raises(ValueError):
+            des.set_plan(Plan((7, 7), (0, 0)), now=0.0)
+
+
+class TestServiceJitter:
+    def test_jitter_inflates_wait_beyond_deterministic_model(self):
+        # Mean-1 lognormal jitter keeps utilization but grows E[S^2]: the
+        # observed wait must exceed the deterministic-service prediction.
+        prof = paper_profile("inceptionv4")
+        P = prof.num_partition_points
+        s = prefix_service_time(prof, P, HW)
+        lam = 0.7 / s
+        base = poisson_trace([lam], 3000.0, seed=8)
+        jittered = with_service_jitter(base, sigma=1.0, seed=9)
+        ts = [TenantSpec(prof, lam)]
+        plain = simulate(ts, Plan((P,), (0,)), HW, base, backend="des")
+        noisy = simulate(ts, Plan((P,), (0,)), HW, jittered, backend="des")
+        # Utilization is mean-preserved (within sampling noise)...
+        assert noisy.tpu_utilization == pytest.approx(
+            plain.tpu_utilization, rel=0.1
+        )
+        # ...but congestion is not: heavy-tailed service queues much harder.
+        assert noisy.mean_latency(0) > 1.15 * plain.mean_latency(0)
+
+
+class TestDesUtilization:
+    @given(seed=st.integers(0, 4), rate=st.floats(5.0, 80.0))
+    @settings(max_examples=8, deadline=None)
+    def test_utilization_bounded_any_load(self, seed, rate):
+        ts = tenants_for(("xception", rate))
+        plan = Plan((11,), (0,))
+        reqs = poisson_trace([rate], 30.0, seed=seed)
+        res = simulate(ts, plan, HW, reqs, backend="des")
+        assert 0.0 <= res.tpu_utilization <= 1.0
+        assert res.duration >= max(r.arrival for r in reqs)

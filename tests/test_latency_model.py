@@ -104,6 +104,27 @@ class TestServiceTimes:
         )
 
 
+class TestPerTermDecomposition:
+    def test_static_plus_queueing_plus_swap_is_total(self):
+        ts = tenants_for(("inceptionv4", 1.0), ("mnasnet", 2.0))
+        pred = latency.predict(ts, Plan((9, 5), (2, 2)), HW)
+        for b in pred.per_model:
+            assert b.static + b.queueing + b.tpu_swap == pytest.approx(b.total)
+        assert pred.static_latencies == tuple(b.static for b in pred.per_model)
+        assert pred.queueing_latencies == tuple(
+            b.queueing for b in pred.per_model
+        )
+
+    def test_static_is_load_independent(self):
+        # The closed-form static path must not move with the arrival rate
+        # (only waits and the expected swap penalty do).
+        plan = Plan((9,), (4,))
+        lo = latency.predict(tenants_for(("inceptionv4", 0.2)), plan, HW)
+        hi = latency.predict(tenants_for(("inceptionv4", 4.0)), plan, HW)
+        assert lo.static_latencies == hi.static_latencies
+        assert hi.queueing_latencies[0] > lo.queueing_latencies[0]
+
+
 class TestEndToEnd:
     def test_full_cpu_has_no_tpu_terms(self):
         ts = tenants_for(("mnasnet", 1.0))

@@ -4,7 +4,31 @@ import math
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
-from repro.core.queueing import mdk_wait, mg1_wait, mixture_moments
+from repro.core.queueing import mdk_wait, mg1_metrics, mg1_wait, mixture_moments
+
+
+class TestMg1Metrics:
+    def test_terms_consistent_with_mg1_wait(self):
+        lam, s = 0.5, 1.0
+        m = mg1_metrics(lam, s, s * s)
+        assert m.wait == mg1_wait(lam, s, s * s)
+        assert m.rho == pytest.approx(lam * s)
+        assert m.sojourn == pytest.approx(m.wait + s)
+        # Little's law: L = lam * T.
+        assert m.queue_len == pytest.approx(lam * m.sojourn)
+
+    def test_idle_queue(self):
+        m = mg1_metrics(0.0, 2.0, 4.0)
+        assert m.wait == 0.0
+        assert m.rho == 0.0
+        assert m.sojourn == 2.0
+        assert m.queue_len == 0.0
+
+    def test_unstable_reports_rho_and_inf_wait(self):
+        m = mg1_metrics(2.0, 1.0, 1.0)
+        assert m.rho == 2.0
+        assert m.wait == math.inf
+        assert m.sojourn == math.inf
 
 
 class TestMG1:

@@ -112,9 +112,26 @@ class TestSimResultMetrics:
 
     def test_p99_small_and_empty(self):
         assert _result_with([[5.0]]).p99(0) == 5.0
-        assert _result_with([[]]).p99(0) == 0.0
         res = _result_with([[3.0, 1.0, 2.0]])
         assert res.p99(0) == 3.0  # ceil(2.97)-1 = idx 2 of sorted
+
+    def test_zero_completed_requests_is_nan_not_zero(self):
+        # A model with no completed requests has an *unknown* latency, not a
+        # zero one: 0.0 silently wins every comparison and poisons means.
+        res = _result_with([[], [4.0]])
+        assert math.isnan(res.p99(0))
+        assert math.isnan(res.mean_latency(0))
+        # The observed model is unaffected...
+        assert res.p99(1) == 4.0
+        assert res.mean_latency(1) == 4.0
+        # ...and the aggregate metrics still skip the unobserved model
+        # rather than propagating the nan.
+        assert res.overall_mean() == 4.0
+        assert res.request_weighted_mean([1.0, 1.0]) == 4.0
+        # With *nothing* completed anywhere the aggregates are unknown too.
+        empty = _result_with([[], []])
+        assert math.isnan(empty.overall_mean())
+        assert math.isnan(empty.request_weighted_mean([1.0, 1.0]))
 
     def test_request_weighted_mean_uses_rates(self):
         # Model 0: mean 2.0 over 2 requests; model 1: mean 8.0 over 1.

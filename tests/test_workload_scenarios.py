@@ -1,0 +1,259 @@
+"""Property tests for the workload scenario library (via the offline
+hypothesis shim): every generator yields time-sorted, in-range traces;
+churn never emits requests for departed tenants; replay round-trips
+through JSON bit-exactly."""
+import math
+
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.serving.workload import (
+    Request,
+    deterministic_trace,
+    diurnal_trace,
+    dynamic_trace,
+    mmpp_trace,
+    poisson_trace,
+    RatePhase,
+    tenant_churn_trace,
+    trace_from_json,
+    trace_to_json,
+    with_service_jitter,
+)
+
+
+def _assert_trace_well_formed(reqs, n_models, duration):
+    times = [r.arrival for r in reqs]
+    assert times == sorted(times)
+    for r in reqs:
+        assert 0 <= r.model_idx < n_models
+        assert 0.0 <= r.arrival < duration
+        assert r.service_scale > 0.0
+
+
+class TestGeneratorProperties:
+    @given(
+        rates=st.lists(st.floats(0.0, 8.0), min_size=1, max_size=4),
+        duration=st.floats(10.0, 200.0),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_poisson_well_formed(self, rates, duration, seed):
+        reqs = poisson_trace(rates, duration, seed=seed)
+        _assert_trace_well_formed(reqs, len(rates), duration)
+        # Zero-rate models emit nothing.
+        for i, lam in enumerate(rates):
+            if lam == 0.0:
+                assert all(r.model_idx != i for r in reqs)
+
+    @given(
+        rates=st.lists(st.floats(0.0, 5.0), min_size=1, max_size=3),
+        duration=st.floats(20.0, 300.0),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_mmpp_well_formed(self, rates, duration, seed):
+        reqs = mmpp_trace(
+            rates, duration, burst_factor=3.0, mean_normal=30.0,
+            mean_burst=10.0, seed=seed,
+        )
+        _assert_trace_well_formed(reqs, len(rates), duration)
+
+    @given(
+        rates=st.lists(st.floats(0.0, 5.0), min_size=1, max_size=3),
+        amplitude=st.floats(0.0, 1.0),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_diurnal_well_formed(self, rates, amplitude, seed):
+        duration = 300.0
+        reqs = diurnal_trace(
+            rates, duration, amplitude=amplitude, period=120.0, seed=seed
+        )
+        _assert_trace_well_formed(reqs, len(rates), duration)
+
+    @given(
+        rates=st.lists(st.floats(0.0, 5.0), min_size=1, max_size=3),
+        duration=st.floats(10.0, 200.0),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_deterministic_well_formed(self, rates, duration):
+        reqs = deterministic_trace(rates, duration)
+        _assert_trace_well_formed(reqs, len(rates), duration)
+        # Exact count: floor(duration * rate) arrivals per model.
+        for i, lam in enumerate(rates):
+            n = sum(1 for r in reqs if r.model_idx == i)
+            assert n <= math.floor(duration * lam)
+
+    def test_deterministic_equal_rates_never_collide(self):
+        # Per-stream phase offsets keep equal-rate streams disjoint; a
+        # shared offset would make every j-th arrival a tie and queue one
+        # request behind the other (breaking the zero-queueing guarantee).
+        reqs = deterministic_trace([0.5, 0.5, 0.5], 100.0)
+        times = [r.arrival for r in reqs]
+        assert len(set(times)) == len(times)
+
+    def test_negative_rate_rejected_everywhere(self):
+        for gen in (
+            lambda: poisson_trace([-1.0], 10.0),
+            lambda: deterministic_trace([1.0, -0.1], 10.0),
+            lambda: mmpp_trace([-2.0], 10.0),
+            lambda: diurnal_trace([-0.5], 10.0),
+            lambda: tenant_churn_trace([-1.0], 10.0),
+        ):
+            with pytest.raises(ValueError):
+                gen()
+
+    def test_parameter_validation(self):
+        with pytest.raises(ValueError):
+            diurnal_trace([1.0], 10.0, amplitude=1.5)
+        with pytest.raises(ValueError):
+            diurnal_trace([1.0], 10.0, period=0.0)
+        with pytest.raises(ValueError):
+            mmpp_trace([1.0], 10.0, mean_normal=0.0)
+        with pytest.raises(ValueError):
+            mmpp_trace([1.0], 10.0, burst_factor=-1.0)
+        with pytest.raises(ValueError):
+            with_service_jitter([Request(0, 0.0)], sigma=-0.5)
+        with pytest.raises(ValueError):
+            tenant_churn_trace([1.0], 10.0, mean_session=0.0)
+
+    def test_poisson_hits_nominal_rate(self):
+        reqs = poisson_trace([5.0], duration=2000.0, seed=1)
+        assert len(reqs) / 2000.0 == pytest.approx(5.0, rel=0.05)
+
+    def test_mmpp_mean_rate_matches_theory(self):
+        # Long-run mean rate = base * (mean_n + bf * mean_b)/(mean_n + mean_b).
+        reqs = mmpp_trace(
+            [2.0], 20000.0, burst_factor=4.0, mean_normal=60.0,
+            mean_burst=15.0, seed=2,
+        )
+        expected = 2.0 * (60.0 + 4.0 * 15.0) / 75.0
+        assert len(reqs) / 20000.0 == pytest.approx(expected, rel=0.1)
+
+    def test_diurnal_mean_rate_is_base_rate(self):
+        # The sinusoid integrates to zero over whole periods.
+        reqs = diurnal_trace(
+            [3.0], 6000.0, amplitude=0.8, period=600.0, seed=3
+        )
+        assert len(reqs) / 6000.0 == pytest.approx(3.0, rel=0.08)
+
+
+class TestChurn:
+    @given(
+        rates=st.lists(st.floats(0.5, 5.0), min_size=1, max_size=3),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_requests_only_inside_sessions(self, rates, seed):
+        duration = 400.0
+        ct = tenant_churn_trace(
+            rates, duration, mean_session=60.0, mean_absence=40.0, seed=seed
+        )
+        _assert_trace_well_formed(list(ct.requests), len(rates), duration)
+        for r in ct.requests:
+            sessions = ct.active[r.model_idx]
+            assert any(a <= r.arrival < b for a, b in sessions), (
+                f"request at {r.arrival} outside every session of model "
+                f"{r.model_idx}: {sessions}"
+            )
+
+    @given(seed=st.integers(0, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_sessions_well_formed(self, seed):
+        duration = 300.0
+        ct = tenant_churn_trace(
+            [2.0, 1.0], duration, mean_session=50.0, mean_absence=30.0,
+            seed=seed,
+        )
+        for sessions in ct.active:
+            for (a, b), nxt in zip(sessions, list(sessions[1:]) + [None]):
+                assert 0.0 <= a <= b <= duration
+                if nxt is not None:
+                    assert b < nxt[0]  # an absence separates sessions
+
+
+class TestJitter:
+    @given(sigma=st.floats(0.0, 1.5), seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_jitter_preserves_arrivals_and_order(self, sigma, seed):
+        base = poisson_trace([2.0, 1.0], 50.0, seed=seed)
+        jit = with_service_jitter(base, sigma=sigma, seed=seed + 1)
+        assert len(jit) == len(base)
+        for b, j in zip(base, jit):
+            assert j.model_idx == b.model_idx
+            assert j.arrival == b.arrival
+            assert j.service_scale > 0.0
+
+    def test_jitter_is_mean_one(self):
+        base = poisson_trace([10.0], 2000.0, seed=4)
+        jit = with_service_jitter(base, sigma=0.8, seed=5)
+        mean = sum(r.service_scale for r in jit) / len(jit)
+        assert mean == pytest.approx(1.0, rel=0.05)
+
+    def test_sigma_zero_is_identity(self):
+        base = poisson_trace([2.0], 50.0, seed=6)
+        assert with_service_jitter(base, sigma=0.0, seed=7) == base
+
+
+class TestJsonReplay:
+    @given(seed=st.integers(0, 100), sigma=st.floats(0.0, 1.0))
+    @settings(max_examples=10, deadline=None)
+    def test_round_trip_exact(self, seed, sigma):
+        base = with_service_jitter(
+            poisson_trace([3.0, 1.0], 60.0, seed=seed), sigma=sigma,
+            seed=seed + 1,
+        )
+        assert trace_from_json(trace_to_json(base)) == base
+
+    def test_round_trip_preserves_service_scale_bits(self):
+        reqs = [Request(0, 0.1, service_scale=1.0 / 3.0), Request(1, 0.2)]
+        out = trace_from_json(trace_to_json(reqs))
+        assert out[0].service_scale == 1.0 / 3.0
+        assert out[1].service_scale == 1.0
+
+    def test_from_json_rejects_negative_fields(self):
+        with pytest.raises(ValueError):
+            trace_from_json('[{"model_idx": 0, "arrival": -1.0}]')
+        with pytest.raises(ValueError):
+            trace_from_json(
+                '[{"model_idx": 0, "arrival": 1.0, "service_scale": -2.0}]'
+            )
+
+    def test_from_json_resorts(self):
+        out = trace_from_json(
+            '[{"model_idx": 0, "arrival": 5.0}, {"model_idx": 1, "arrival": 1.0}]'
+        )
+        assert [r.arrival for r in out] == [1.0, 5.0]
+
+    def test_replay_drives_simulator_identically(self):
+        # A replayed trace is bit-identical, so any simulator run over it
+        # reproduces the original run exactly.
+        from repro.configs.paper_models import paper_profile
+        from repro.core.planner import Plan, TenantSpec
+        from repro.hw.specs import EDGE_TPU_PLATFORM as HW
+        from repro.serving.simulator import simulate
+
+        ts = [TenantSpec(paper_profile("inceptionv4"), 2.0)]
+        plan = Plan((9,), (4,))
+        trace = with_service_jitter(
+            poisson_trace([2.0], 200.0, seed=8), sigma=0.5, seed=9
+        )
+        replay = trace_from_json(trace_to_json(trace))
+        a = simulate(ts, plan, HW, trace, backend="des")
+        b = simulate(ts, plan, HW, replay, backend="des")
+        assert a.latencies == b.latencies
+
+
+class TestDynamicPhases:
+    def test_dynamic_phases(self):
+        phases = [
+            RatePhase(0.0, 100.0, (1.0, 0.0)),
+            RatePhase(100.0, 200.0, (0.0, 5.0)),
+        ]
+        reqs = dynamic_trace(phases, seed=3)
+        for r in reqs:
+            if r.model_idx == 0:
+                assert r.arrival < 100.0
+            else:
+                assert r.arrival >= 100.0
