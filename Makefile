@@ -20,8 +20,11 @@ test-slow:
 
 # Fast benchmark sanity: allocator overhead + plan-space engine scaling
 # (including the incremental re-planner on the large 32/64-tenant mixes)
-# + the analytic-model-vs-DES error sweep on short traces.
+# + the analytic-model-vs-DES error sweep on short traces
+# + the simulation-core throughput smoke (also self-checks that every fast
+#   path still matches its reference before timing it).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
 	$(PYTHON) -m benchmarks.model_vs_sim --smoke
+	$(PYTHON) -m benchmarks.sim_throughput --smoke --out BENCH_sim_throughput.smoke.json

@@ -21,6 +21,8 @@ import argparse
 import math
 from typing import Callable, Sequence
 
+import numpy as np
+
 from benchmarks.common import (
     HW,
     K_MAX,
@@ -35,7 +37,7 @@ from repro.core.allocator import hill_climb
 from repro.core.planner import Plan, TenantSpec
 from repro.serving.simulator import simulate
 from repro.serving.workload import (
-    Request,
+    Trace,
     diurnal_trace,
     mmpp_trace,
     poisson_trace,
@@ -43,7 +45,7 @@ from repro.serving.workload import (
     with_service_jitter,
 )
 
-TraceFn = Callable[[list[float], float, int], list[Request]]
+TraceFn = Callable[[list[float], float, int], Trace]
 
 # Poisson is the model's home turf (its arrival assumption holds exactly);
 # every other scenario violates one assumption on purpose.
@@ -58,11 +60,9 @@ SCENARIOS: dict[str, TraceFn] = {
     "jitter": lambda rates, dur, seed: with_service_jitter(
         poisson_trace(rates, dur, seed=seed), sigma=0.8, seed=seed + 1
     ),
-    "churn": lambda rates, dur, seed: list(
-        tenant_churn_trace(
-            rates, dur, mean_session=dur / 4.0, mean_absence=dur / 8.0, seed=seed
-        ).requests
-    ),
+    "churn": lambda rates, dur, seed: tenant_churn_trace(
+        rates, dur, mean_session=dur / 4.0, mean_absence=dur / 8.0, seed=seed
+    ).requests,
 }
 
 
@@ -89,13 +89,11 @@ def _mixes() -> list[tuple[str, list[TenantSpec], Plan]]:
 
 
 def _realized_tenants(
-    base: Sequence[TenantSpec], trace: Sequence[Request], duration: float
+    base: Sequence[TenantSpec], trace: Trace, duration: float
 ) -> list[TenantSpec]:
-    counts = [0] * len(base)
-    for r in trace:
-        counts[r.model_idx] += 1
+    counts = np.bincount(trace.model_idx, minlength=len(base))
     return [
-        TenantSpec(t.profile, c / duration) for t, c in zip(base, counts)
+        TenantSpec(t.profile, int(c) / duration) for t, c in zip(base, counts)
     ]
 
 

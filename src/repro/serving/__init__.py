@@ -12,6 +12,8 @@ from repro.serving.workload import (
     ChurnTrace,
     RatePhase,
     Request,
+    Trace,
+    as_trace,
     deterministic_trace,
     diurnal_trace,
     dynamic_trace,
@@ -36,6 +38,8 @@ __all__ = [
     "SimResult",
     "SlidingRateEstimator",
     "SramCache",
+    "Trace",
+    "as_trace",
     "deterministic_trace",
     "diurnal_trace",
     "dynamic_trace",

@@ -11,8 +11,8 @@ independent check: a classic discrete-event simulation with
   ``T_load`` charged at service start when the tenant switch evicted the
   weights, intra-model swap streaming folded into the bound service time,
 * ``k_i`` CPU-core servers per model under the active ``Plan``,
-* per-tenant FIFO queues in front of both stages (the TPU picks the
-  earliest-enqueued head across tenants, i.e. global FCFS),
+* global FCFS in front of the TPU and a per-tenant FIFO in front of each
+  CPU pool,
 * mid-flight plan changes: ``set_plan`` re-routes *future* arrivals while
   queued and in-service work bound under the old plan drains unchanged.
 
@@ -22,11 +22,33 @@ agreement between them -- and between either and Eq. 1-5 -- is evidence,
 not tautology.  ``tests/test_des.py`` pins the correspondence:
 deterministic single-tenant latencies match the closed-form static terms to
 float round-off, and seeded Poisson waits converge to ``mg1_wait``.
+
+Hot-loop notes (the optimization pass measured by
+``benchmarks/sim_throughput.py`` and pinned bit-identical to the frozen
+pre-optimization snapshot in ``benchmarks/des_baseline.py``):
+
+* swap costs (``prefix_weight_bytes`` / ``load_time``) bind onto the job at
+  arrival instead of being recomputed from the profile on every TPU start;
+* jobs are plain tuples (see the ``_J_*`` field map): with routing bound at
+  arrival no field ever mutates, and tuple construction/indexing beats a
+  record class in the loop that runs once per event;
+* events carry their *handler* (bound method) instead of a kind tag --
+  the (time, seq) prefix alone orders the heap, so the handler slot is
+  never compared;
+* the TPU ready queue is a single global FIFO deque.  Jobs enter it in
+  nondecreasing (event time, event sequence) order -- the heap pops events
+  in that order and the enqueue stamp a job would carry is assigned at that
+  very moment -- so popping the front IS the "earliest-enqueued head across
+  per-tenant FIFOs" selection the baseline computed with an O(n_tenants)
+  scan, for exactly the same job;
+* ``offer`` inlines the arrival: ``advance_to(arrival)`` has already
+  drained every event at or before that instant, so dispatching the arrival
+  directly equals pushing-then-immediately-popping it (one heap round-trip
+  saved per request).
 """
 from __future__ import annotations
 
 import collections
-import dataclasses
 import heapq
 import itertools
 from typing import Sequence
@@ -42,23 +64,21 @@ from repro.serving.cache import SramCache
 from repro.serving.result import SimResult
 from repro.serving.workload import Request
 
-# Event kinds, in no particular priority: simultaneous events are resolved
-# by insertion sequence, which matches the causal order they were scheduled.
-_ARRIVAL, _TPU_ENQUEUE, _TPU_DONE, _CPU_ENQUEUE, _CPU_DONE = range(5)
+_heappush = heapq.heappush
+_heappop = heapq.heappop
 
-
-@dataclasses.dataclass
-class _Job:
-    """One request in flight, with its route bound at arrival time."""
-
-    req: Request
-    record: bool
-    p: int                 # partition point under the plan active at arrival
-    tpu_service: float     # prefix compute + intra-swap stream (jitter-scaled)
-    cpu_service: float     # 1-core suffix time (jitter-scaled)
-    out_xfer: float        # boundary activation transfer (0 when no suffix)
-    enq: float = 0.0       # FIFO stamp of the current queue
-    seq: int = 0
+# _Job tuple field map: one request in flight, route bound at arrival time.
+# (Plain tuple, not a class: nothing mutates after binding, and the loop
+# that builds/reads one runs once per event.)
+_J_MODEL = 0        # model index
+_J_ARR = 1          # arrival stamp (for latency + the arrivals timeline)
+_J_RECORD = 2       # include in reported statistics?
+_J_TPU_S = 3        # prefix compute + intra-swap stream (jitter-scaled)
+_J_CPU_S = 4        # 1-core suffix time (jitter-scaled)
+_J_OUT_X = 5        # boundary activation transfer (0 when no suffix)
+_J_PBYTES = 6       # resident-footprint bytes under the bound route
+_J_TLOAD = 7        # swap-in cost charged when the prefix was evicted
+_J_SUFFIX = 8       # p < P under the bound route (has a CPU suffix)
 
 
 class DiscreteEventSimulator:
@@ -83,13 +103,12 @@ class DiscreteEventSimulator:
         self.arrivals: list[list[float]] = [[] for _ in range(self.n)]
         self.misses = [0] * self.n
         self.tpu_requests = [0] * self.n
-        self._heap: list[tuple[float, int, int, object]] = []
+        self._points = [f.num_partition_points for f in self.profiles]
+        self._heap: list[tuple] = []
         self._seq = itertools.count()
-        self._tpu_queues: list[collections.deque[_Job]] = [
-            collections.deque() for _ in range(self.n)
-        ]
-        self._tpu_job: _Job | None = None
-        self._cpu_queues: list[collections.deque[_Job]] = [
+        self._tpu_ready: collections.deque[tuple] = collections.deque()
+        self._tpu_job: tuple | None = None
+        self._cpu_queues: list[collections.deque[tuple]] = [
             collections.deque() for _ in range(self.n)
         ]
         self._cpu_busy = [0] * self.n
@@ -124,6 +143,10 @@ class DiscreteEventSimulator:
         ]
         self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
         self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+        # Suffix-bearing jobs always have somewhere to run, even if a plan
+        # change dropped the model's allocation to 0 cores mid-flight (the
+        # stepper sizes its pools max(k, 1) for the same reason).
+        self._k_eff = [max(k, 1) for k in plan.cores]
         # A grown pool can admit queued work immediately.
         for i in range(self.n):
             self._start_cpu(i)
@@ -132,12 +155,6 @@ class DiscreteEventSimulator:
     def plan(self) -> Plan:
         assert self._plan is not None
         return self._plan
-
-    def _cpu_servers(self, i: int) -> int:
-        # Suffix-bearing jobs always have somewhere to run, even if a plan
-        # change dropped the model's allocation to 0 cores mid-flight (the
-        # stepper sizes its pools max(k, 1) for the same reason).
-        return max(self.plan.cores[i], 1)
 
     # -- driver surface -----------------------------------------------------
     def submit(self, req: Request, *, record: bool = True) -> None:
@@ -148,26 +165,50 @@ class DiscreteEventSimulator:
             raise ValueError(
                 f"arrival {req.arrival} is in the simulator's past ({self.now})"
             )
-        self._push(req.arrival, _ARRIVAL, (req, record))
+        _heappush(
+            self._heap,
+            (req.arrival, next(self._seq), self._on_arrival, (req, record)),
+        )
 
     def offer(self, req: Request, *, record: bool = True) -> None:
-        """Advance to the request's arrival, then submit it (the shared
-        in-order driver contract of ``simulate``/``run_adaptive``)."""
+        """Advance to the request's arrival, then process it (the shared
+        in-order driver contract of ``simulate``/``run_adaptive``).
+
+        ``advance_to`` drains every event stamped at or before the arrival,
+        so handling the arrival inline is event-order-identical to
+        ``submit`` + another advance -- minus a heap round-trip.
+        """
+        if req.arrival < self.now:
+            raise ValueError(
+                f"arrival {req.arrival} is in the simulator's past ({self.now})"
+            )
+        if not 0 <= req.model_idx < self.n:
+            raise ValueError(f"model_idx {req.model_idx} out of range")
         self.advance_to(req.arrival)
-        self.submit(req, record=record)
+        self._on_arrival((req, record))
 
     def advance_to(self, t: float) -> None:
         """Process every event with timestamp <= ``t``; clock ends at ``t``."""
         if t < self.now:
             raise ValueError(f"cannot rewind the clock from {self.now} to {t}")
-        while self._heap and self._heap[0][0] <= t:
-            self._dispatch(*heapq.heappop(self._heap))
+        heap = self._heap
+        if heap and heap[0][0] <= t:
+            pop = _heappop
+            while heap and heap[0][0] <= t:
+                et, _, handler, payload = pop(heap)
+                if et > self.now:
+                    self.now = et
+                handler(payload)
         self.now = t
 
     def drain(self) -> float:
         """Run the event loop dry; returns the last completion time."""
-        while self._heap:
-            self._dispatch(*heapq.heappop(self._heap))
+        heap, pop = self._heap, _heappop
+        while heap:
+            et, _, handler, payload = pop(heap)
+            if et > self.now:
+                self.now = et
+            handler(payload)
         return self.last_completion
 
     def result(self, duration: float) -> SimResult:
@@ -180,103 +221,192 @@ class DiscreteEventSimulator:
             tpu_requests=self.tpu_requests,
         )
 
+    # -- columnar driver ----------------------------------------------------
+    def offer_trace(self, trace, *, record_from: float = 0.0) -> None:
+        """Offer a whole arrival-sorted columnar ``Trace`` under a static
+        plan: semantically ``for r in trace: self.offer(r, record=...)``,
+        with the per-request ``offer``/arrival plumbing inlined and every
+        plan-derived table bound to a local (valid because the plan cannot
+        change mid-call -- ``run_adaptive`` drives plan changes through the
+        scalar ``offer``).  Event processing order -- hence every observable
+        -- is identical to the scalar driver.
+        """
+        mi_col = trace.model_idx
+        if mi_col.size == 0:
+            return
+        if mi_col.min() < 0 or mi_col.max() >= self.n:
+            raise ValueError("model_idx out of range in trace")
+        if not trace.is_sorted:
+            # The scalar offer() raises per request on a clock rewind; the
+            # inlined driver must surface the same misuse, not corrupt the
+            # event order silently.  O(1) for generator-produced traces.
+            raise ValueError("offer_trace requires an arrival-sorted Trace")
+        if trace.arrival[0] < self.now:
+            raise ValueError(
+                f"arrival {trace.arrival[0]} is in the simulator's past "
+                f"({self.now})"
+            )
+        heap, pop = self._heap, _heappop
+        push, seq = _heappush, self._seq
+        s_tpu, s_cpu = self._s_tpu, self._s_cpu
+        in_xfer, out_xfer = self._in_xfer, self._out_xfer
+        pbytes, t_load = self._prefix_bytes, self._t_load
+        points, partition = self._points, self._plan.partition
+        enq = self._on_tpu_enqueue
+        for i, a, scale in zip(
+            mi_col.tolist(),
+            trace.arrival.tolist(),
+            trace.service_scale.tolist(),
+        ):
+            # Inlined advance_to(a) (sorted trace: the clock never rewinds).
+            while heap and heap[0][0] <= a:
+                et, _, handler, payload = pop(heap)
+                if et > self.now:
+                    self.now = et
+                handler(payload)
+            self.now = a
+            p = partition[i]
+            suffix = p < points[i]
+            job = (
+                i,
+                a,
+                a >= record_from,
+                s_tpu[i] * scale,
+                s_cpu[i] * scale,
+                out_xfer[i] if 0 < p and suffix else 0.0,
+                pbytes[i],
+                t_load[i],
+                suffix,
+            )
+            if p > 0:
+                push(heap, (a + in_xfer[i], next(seq), enq, job))
+            else:
+                self._on_cpu_enqueue(job)
+
     # -- event machinery ----------------------------------------------------
-    def _push(self, t: float, kind: int, payload: object) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
-
-    def _dispatch(self, t: float, seq: int, kind: int, payload: object) -> None:
-        self.now = max(self.now, t)
-        if kind == _ARRIVAL:
-            self._on_arrival(*payload)
-        elif kind == _TPU_ENQUEUE:
-            self._on_tpu_enqueue(payload)
-        elif kind == _TPU_DONE:
-            self._on_tpu_done(payload)
-        elif kind == _CPU_ENQUEUE:
-            self._on_cpu_enqueue(payload)
-        else:
-            self._on_cpu_done(payload)
-
-    def _on_arrival(self, req: Request, record: bool) -> None:
+    def _on_arrival(self, payload) -> None:
+        req, record = payload
         i = req.model_idx
-        p = self.plan.partition[i]
-        P_i = self.profiles[i].num_partition_points
-        job = _Job(
-            req=req,
-            record=record,
-            p=p,
-            tpu_service=self._s_tpu[i] * req.service_scale,
-            cpu_service=self._s_cpu[i] * req.service_scale,
-            out_xfer=self._out_xfer[i] if 0 < p < P_i else 0.0,
+        p = self._plan.partition[i]
+        scale = req.service_scale
+        suffix = p < self._points[i]
+        job = (
+            i,
+            req.arrival,
+            record,
+            self._s_tpu[i] * scale,
+            self._s_cpu[i] * scale,
+            self._out_xfer[i] if 0 < p and suffix else 0.0,
+            self._prefix_bytes[i],
+            self._t_load[i],
+            suffix,
         )
         if p > 0:
             # Input transfer is a pure delay: it occupies neither server
             # (the additive d/B term of Eq. 4).
-            self._push(self.now + self._in_xfer[i], _TPU_ENQUEUE, job)
+            _heappush(
+                self._heap,
+                (
+                    self.now + self._in_xfer[i],
+                    next(self._seq),
+                    self._on_tpu_enqueue,
+                    job,
+                ),
+            )
         else:
             self._on_cpu_enqueue(job)
 
-    def _on_tpu_enqueue(self, job: _Job) -> None:
-        job.enq, job.seq = self.now, next(self._seq)
-        self._tpu_queues[job.req.model_idx].append(job)
-        self._start_tpu()
+    def _on_tpu_enqueue(self, job: tuple) -> None:
+        # Ready jobs are appended in nondecreasing (event time, sequence)
+        # order -- the heap's pop order -- so the deque front is always the
+        # global-FCFS earliest-enqueued job.  Whenever the server is idle
+        # the ready queue is empty (an idle server always drained it), so
+        # starting the arriving job directly equals append-then-popleft.
+        if self._tpu_job is None:
+            self._begin_tpu(job)
+        else:
+            self._tpu_ready.append(job)
 
-    def _start_tpu(self) -> None:
-        if self._tpu_job is not None:
-            return
-        # Global FCFS over per-tenant FIFO queues: serve the earliest head.
-        heads = [q[0] for q in self._tpu_queues if q]
-        if not heads:
-            return
-        job = min(heads, key=lambda j: (j.enq, j.seq))
-        i = job.req.model_idx
-        self._tpu_queues[i].popleft()
+    def _begin_tpu(self, job: tuple) -> None:
         self._tpu_job = job
+        i = job[_J_MODEL]
         # Swap state transition: touching this tenant's weights may evict
         # another's; a miss (weights not resident) charges the swap-in.
-        miss = self.cache.access(i, self._prefix_bytes_of(job), self.now)
-        service = job.tpu_service + (self._t_load_of(job) if miss else 0.0)
+        miss = self.cache.access(i, job[_J_PBYTES], self.now)
+        service = job[_J_TPU_S] + (job[_J_TLOAD] if miss else 0.0)
         self.tpu_busy += service
-        if job.record:
+        if job[_J_RECORD]:
             self.tpu_requests[i] += 1
             if miss:
                 self.misses[i] += 1
-        self._push(self.now + service, _TPU_DONE, job)
+        _heappush(
+            self._heap,
+            (self.now + service, next(self._seq), self._on_tpu_done, job),
+        )
 
-    def _prefix_bytes_of(self, job: _Job) -> int:
-        return self.profiles[job.req.model_idx].prefix_weight_bytes(job.p)
-
-    def _t_load_of(self, job: _Job) -> float:
-        return load_time(self.profiles[job.req.model_idx], job.p, self.platform)
-
-    def _on_tpu_done(self, job: _Job) -> None:
-        self._tpu_job = None
-        if job.p < self.profiles[job.req.model_idx].num_partition_points:
-            self._push(self.now + job.out_xfer, _CPU_ENQUEUE, job)
+    def _on_tpu_done(self, job: tuple) -> None:
+        now = self.now
+        if job[_J_SUFFIX]:
+            _heappush(
+                self._heap,
+                (now + job[_J_OUT_X], next(self._seq), self._on_cpu_enqueue, job),
+            )
         else:
-            self._complete(job)
-        self._start_tpu()
+            # Complete (inlined): full-TPU route ends here.
+            if now > self.last_completion:
+                self.last_completion = now
+            if job[_J_RECORD]:
+                i = job[_J_MODEL]
+                self.latencies[i].append(now - job[_J_ARR])
+                self.arrivals[i].append(job[_J_ARR])
+        ready = self._tpu_ready
+        if ready:
+            # _begin_tpu, inlined at the hottest call site (the back-to-back
+            # service chain of a busy server).
+            nxt = ready.popleft()
+            self._tpu_job = nxt
+            i = nxt[_J_MODEL]
+            miss = self.cache.access(i, nxt[_J_PBYTES], now)
+            service = nxt[_J_TPU_S] + (nxt[_J_TLOAD] if miss else 0.0)
+            self.tpu_busy += service
+            if nxt[_J_RECORD]:
+                self.tpu_requests[i] += 1
+                if miss:
+                    self.misses[i] += 1
+            _heappush(
+                self._heap,
+                (now + service, next(self._seq), self._on_tpu_done, nxt),
+            )
+        else:
+            self._tpu_job = None
 
-    def _on_cpu_enqueue(self, job: _Job) -> None:
-        job.enq, job.seq = self.now, next(self._seq)
-        self._cpu_queues[job.req.model_idx].append(job)
-        self._start_cpu(job.req.model_idx)
-
-    def _start_cpu(self, i: int) -> None:
-        while self._cpu_queues[i] and self._cpu_busy[i] < self._cpu_servers(i):
-            job = self._cpu_queues[i].popleft()
-            self._cpu_busy[i] += 1
-            self._push(self.now + job.cpu_service, _CPU_DONE, job)
-
-    def _on_cpu_done(self, job: _Job) -> None:
-        i = job.req.model_idx
-        self._cpu_busy[i] -= 1
-        self._complete(job)
+    def _on_cpu_enqueue(self, job: tuple) -> None:
+        i = job[_J_MODEL]
+        self._cpu_queues[i].append(job)
         self._start_cpu(i)
 
-    def _complete(self, job: _Job) -> None:
-        self.last_completion = max(self.last_completion, self.now)
-        if job.record:
-            i = job.req.model_idx
-            self.latencies[i].append(self.now - job.req.arrival)
-            self.arrivals[i].append(job.req.arrival)
+    def _start_cpu(self, i: int) -> None:
+        queue = self._cpu_queues[i]
+        while queue and self._cpu_busy[i] < self._k_eff[i]:
+            job = queue.popleft()
+            self._cpu_busy[i] += 1
+            _heappush(
+                self._heap,
+                (
+                    self.now + job[_J_CPU_S],
+                    next(self._seq),
+                    self._on_cpu_done,
+                    job,
+                ),
+            )
+
+    def _on_cpu_done(self, job: tuple) -> None:
+        i = job[_J_MODEL]
+        self._cpu_busy[i] -= 1
+        now = self.now
+        if now > self.last_completion:
+            self.last_completion = now
+        if job[_J_RECORD]:
+            self.latencies[i].append(now - job[_J_ARR])
+            self.arrivals[i].append(job[_J_ARR])
+        self._start_cpu(i)

@@ -11,11 +11,16 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class SimResult:
-    latencies: list[list[float]]               # per model, per request (s)
-    arrivals: list[list[float]]                # arrival stamps (for timelines)
+    # Per model, per completed request.  Scalar backends fill plain float
+    # lists; the vectorized stepper fast path hands over NumPy arrays --
+    # every metric below handles either (len/indexing/np reductions only).
+    latencies: list[Sequence[float]]
+    arrivals: list[Sequence[float]]            # arrival stamps (for timelines)
     tpu_busy: float
     duration: float
     misses: list[int]
@@ -25,13 +30,15 @@ class SimResult:
         """Mean observed latency; ``nan`` when the model completed nothing
         (an unknown mean, not a zero-latency one)."""
         ls = self.latencies[model_idx]
-        return sum(ls) / len(ls) if ls else math.nan
+        return float(np.sum(ls)) / len(ls) if len(ls) else math.nan
 
     def overall_mean(self) -> float:
         """Mean over all completions; ``nan`` when nothing completed at all
         (same unknown-not-zero convention as ``mean_latency``)."""
-        alll = [l for ls in self.latencies for l in ls]
-        return sum(alll) / len(alll) if alll else math.nan
+        count = sum(len(ls) for ls in self.latencies)
+        if not count:
+            return math.nan
+        return sum(float(np.sum(ls)) for ls in self.latencies) / count
 
     def request_weighted_mean(self, rates: Sequence[float] | None = None) -> float:
         """Per-model rate-weighted mean latency, Eq. 5's
@@ -53,7 +60,7 @@ class SimResult:
         pairs = [
             (w, self.mean_latency(i))
             for i, (w, ls) in enumerate(zip(weights, self.latencies))
-            if ls
+            if len(ls)
         ]
         if not pairs:
             return math.nan  # nothing completed: the mean is unknown
@@ -65,11 +72,17 @@ class SimResult:
     def p99(self, model_idx: int) -> float:
         """Nearest-rank 99th percentile: the smallest latency with at least
         99% of samples at or below it (``ceil(0.99 n)``-th order statistic).
-        ``nan`` when the model completed no requests."""
-        ls = sorted(self.latencies[model_idx])
-        if not ls:
+        ``nan`` when the model completed no requests.
+
+        Selection (``np.partition``), not a sort: million-request traces
+        from the vectorized fast path make the full Python sort the most
+        expensive line of a sweep.  Same order statistic, no float math.
+        """
+        ls = self.latencies[model_idx]
+        if not len(ls):
             return math.nan
-        return ls[math.ceil(0.99 * len(ls)) - 1]
+        rank = math.ceil(0.99 * len(ls)) - 1
+        return float(np.partition(np.asarray(ls), rank)[rank])
 
     def observed_miss_rate(self, model_idx: int) -> float:
         n = self.tpu_requests[model_idx]

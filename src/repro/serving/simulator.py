@@ -14,7 +14,21 @@ simulated system matches Section IV's runtime:
 
 ``RuntimeSimulator`` is a *stepper*: it walks the trace in arrival order
 and resolves each request's full timeline with ``max(t, server_free)``
-recurrences.  That shares structure with the analytic recurrences, so the
+recurrences.  Two execution paths share that definition:
+
+* the scalar ``step``/``offer`` path, one pure-Python iteration per
+  request -- the seed semantics and the differential reference;
+* ``run_trace``, a vectorized fast path over a columnar ``Trace`` that
+  resolves a whole constant-plan segment at once with the Lindley
+  recurrence identity ``end = cumsum(s) + maximum.accumulate(arrival -
+  shifted cumsum(s))`` plus a cheap exact sequential replay for SRAM miss
+  accounting.  ``simulate()`` and ``run_adaptive()`` dispatch to it
+  automatically between re-plan boundaries.  It is a *replay* of the
+  scalar semantics, not a new model: every quantity matches the scalar
+  path to float round-off (integer observables exactly), enforced by
+  ``tests/test_sim_fastpath.py``.
+
+The stepper shares structure with the analytic recurrences, so the
 independent event-driven backend (``repro.serving.des``) is the ground
 truth the model is validated against; both implement the same driver
 surface (``offer`` / ``advance_to`` / ``set_plan`` / ``drain`` /
@@ -27,6 +41,8 @@ from __future__ import annotations
 import heapq
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.planner import (
     ModelProfile,
     Plan,
@@ -37,9 +53,128 @@ from repro.core.planner import (
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
 from repro.serving.result import SimResult
-from repro.serving.workload import Request
+from repro.serving.workload import Request, Trace
 
 __all__ = ["RuntimeSimulator", "SimResult", "simulate", "make_backend"]
+
+
+def _lindley_guess(enqueue: np.ndarray, service: np.ndarray, free0: float) -> np.ndarray:
+    """Completion times of a single FCFS server via the Lindley identity.
+
+    Unrolls ``end[j] = max(enqueue[j], end[j-1]) + service[j]`` (with the
+    server initially free at ``free0``) into
+
+        end = cumsum(service)
+              + maximum.accumulate(enqueue - shifted_cumsum(service))
+
+    where the initial free time folds into position 0 of the accumulate.
+    Associativity differs from the scalar recurrence, so this agrees with
+    it only to round-off -- it is the *guess* that classifies busy-period
+    boundaries for the bit-exact ``_server_ends`` below.
+    """
+    cu = np.cumsum(service)
+    shifted = np.empty_like(cu)
+    shifted[0] = 0.0
+    shifted[1:] = cu[:-1]
+    d = enqueue - shifted
+    if d[0] < free0:
+        d[0] = free0
+    return cu + np.maximum.accumulate(d)
+
+
+def _segmented_ends(
+    enqueue: np.ndarray,
+    service: np.ndarray,
+    free0: float,
+    resets: np.ndarray,
+) -> np.ndarray:
+    """Server completion times given busy-period boundaries ``resets``.
+
+    ``resets[j]`` asserts job ``j`` found the server idle (``enqueue[j] >=
+    end[j-1]``), so its busy period restarts from ``enqueue[j]`` exactly and
+    every later end in the period is the *left-to-right* float sum
+    ``fl(...fl(fl(root + s_r) + s_r+1)... )`` -- the very association the
+    scalar recurrence produces.  Busy periods are mutually independent, so
+    they all resolve in parallel: segments are bucketed by power-of-two
+    length and each bucket is one padded 2-D ``cumsum`` along rows (NumPy's
+    ``accumulate`` is sequential, giving the exact association per row).
+    Bitwise equal to the scalar stepper iff ``resets`` is classified as the
+    scalar run would.
+    """
+    n = enqueue.size
+    starts = np.flatnonzero(resets)
+    roots = enqueue[starts].copy()
+    if starts[0] == 0 and roots[0] < free0:
+        roots[0] = free0  # max(enqueue[0], free0): selection, no arithmetic
+    seg_len = np.empty(starts.size, dtype=np.int64)
+    seg_len[:-1] = starts[1:] - starts[:-1]
+    seg_len[-1] = n - starts[-1]
+    ends = np.empty(n)
+    bexp = np.ceil(np.log2(seg_len)).astype(np.int64)
+    for b in range(int(bexp.max()) + 1):
+        sel = np.flatnonzero(bexp == b)
+        if not sel.size:
+            continue
+        r, l = starts[sel], seg_len[sel]
+        if b == 0:
+            ends[r] = roots[sel] + service[r]
+            continue
+        if b == 1:
+            # Length-2 segments, the bulk at moderate load: two adds.
+            e0 = roots[sel] + service[r]
+            ends[r] = e0
+            ends[r + 1] = e0 + service[r + 1]
+            continue
+        w = 1 << b
+        cols = np.arange(w)
+        idx = r[:, None] + cols[None, :]
+        valid = cols[None, :] < l[:, None]
+        mat = np.zeros((r.size, w + 1))
+        mat[:, 0] = roots[sel]
+        mat[:, 1:] = np.where(valid, service[np.where(valid, idx, 0)], 0.0)
+        cs = np.cumsum(mat, axis=1)
+        ends[idx[valid]] = cs[:, 1:][valid]
+    return ends
+
+
+def _server_ends(enqueue: np.ndarray, service: np.ndarray, free0: float) -> np.ndarray:
+    """Completion times of a single FCFS server, vectorized *and* bit-exact.
+
+    The scalar recurrence ``end[j] = max(enqueue[j], end[j-1]) + service[j]``
+    only couples jobs within a busy period; across an idle gap the clock
+    restarts from the enqueue time exactly.  So: guess the ends with the
+    Lindley identity, classify busy-period boundaries from the guess,
+    recompute each period with the scalar association (``_segmented_ends``),
+    and re-check the classification against the recomputed ends.  A
+    consistent fixpoint satisfies the scalar recurrence elementwise and is
+    therefore *bitwise* the scalar result.  Misclassifications only occur
+    where the guess's round-off straddles a near-tie, so the loop almost
+    always exits on the first pass; a pathological non-converging tie chain
+    falls back to the plain sequential recurrence.
+    """
+    ends = _lindley_guess(enqueue, service, free0)
+    resets = np.empty(enqueue.size, dtype=bool)
+    for _ in range(8):
+        resets[0] = True
+        np.greater_equal(enqueue[1:], ends[:-1], out=resets[1:])
+        if resets.all():
+            # Fully idle server (zero queueing): end = enqueue + service
+            # elementwise, trivially consistent.
+            ends = enqueue + service
+            if enqueue[0] < free0:
+                ends[0] = free0 + service[0]
+            if np.array_equal(enqueue[1:] >= ends[:-1], resets[1:]):
+                return ends
+            continue
+        ends = _segmented_ends(enqueue, service, free0, resets)
+        if np.array_equal(enqueue[1:] >= ends[:-1], resets[1:]):
+            return ends
+    out = np.empty(enqueue.size)
+    free = free0
+    for j, (e, s) in enumerate(zip(enqueue.tolist(), service.tolist())):
+        free = (e if e > free else free) + s
+        out[j] = free
+    return out
 
 
 class RuntimeSimulator:
@@ -103,6 +238,27 @@ class RuntimeSimulator:
         ]
         self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
         self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+        # Columnar mirrors of the per-model tables for the vectorized path
+        # (same float values -- np.array of python floats is exact).
+        self._part_arr = np.array(p, dtype=np.int64)
+        self._points_arr = np.array(
+            [f.num_partition_points for f in pf], dtype=np.int64
+        )
+        self._s_tpu_arr = np.array(self._s_tpu)
+        self._t_load_arr = np.array(self._t_load)
+        self._in_xfer_arr = np.array(self._in_xfer)
+        self._out_xfer_arr = np.array(self._out_xfer)
+        # Boundary transfer charged only on split routes (0 < p < P); a
+        # masked copy lets the fast path add it unconditionally (x + 0.0
+        # is exact) instead of scattering through boolean masks.
+        self._out_eff_arr = np.where(
+            (self._part_arr > 0) & (self._part_arr < self._points_arr),
+            self._out_xfer_arr,
+            0.0,
+        )
+        self._want = [
+            min(b, self.cache.capacity) for b in self._prefix_bytes
+        ]
 
     @property
     def plan(self) -> Plan:
@@ -146,6 +302,223 @@ class RuntimeSimulator:
             self.arrivals[i].append(req.arrival)
         return lat
 
+    # -- vectorized fast path -----------------------------------------------
+    def _replay_lru(
+        self, tm: np.ndarray, first: np.ndarray, last: np.ndarray
+    ) -> tuple[np.ndarray, list[tuple[int, int]]]:
+        """Exact SRAM miss accounting for a TPU access sequence.
+
+        Misses depend only on the *order* of accesses (LRU recency order
+        equals processing order: TPU starts are strictly increasing), never
+        on the clock, so they resolve before the Lindley pass.  ``first`` /
+        ``last`` map each model to its first/last position in ``tm`` (-1
+        when absent).  Returns the per-access miss flags plus the final
+        ``(model, bytes)`` residency in recency order; the caller stamps
+        ``last_used`` from the computed start times and restores the cache.
+
+        Two regimes:
+        * *no possible eviction* (worst-case residency fits capacity): a
+          model can miss only on its first access -- fully vectorized;
+        * otherwise an O(#tenant-switches) run-compressed LRU replay
+          (within a run of one model only the first access can miss).
+        """
+        cap = self.cache.capacity
+        want = self._want
+        old_state = self.cache.state()
+        old_bytes = {m: b for m, b, _ in old_state}
+        miss = np.zeros(tm.size, dtype=bool)
+
+        first_l = first.tolist()
+        accessed = [g for g, f in enumerate(first_l) if f >= 0]
+        grow = sum(max(0, want[g] - old_bytes.get(g, 0)) for g in accessed)
+        if self.cache.used + grow <= cap:
+            # No eviction can occur: first-touch misses only.
+            miss[[f for g, f in enumerate(first_l)
+                  if f >= 0 and old_bytes.get(g, -1) < want[g]]] = True
+            # Recency: untouched entries keep their order, accessed models
+            # move to the back ordered by last occurrence.
+            by_last = sorted((last[g], g) for g in accessed)
+            accessed_set = set(accessed)
+            order = [
+                (g, b) for g, b, _ in old_state if g not in accessed_set
+            ] + [
+                (g, max(old_bytes.get(g, 0), want[g])) for _, g in by_last
+            ]
+            return miss, order
+
+        # General LRU replay over tenant-switch points.
+        runs = np.flatnonzero(
+            np.concatenate(([True], tm[1:] != tm[:-1]))
+        )
+        od: dict[int, int] = {m: b for m, b, _ in old_state}
+        od_get, od_pop = od.get, od.pop
+        used = self.cache.used
+        miss_at: list[int] = []
+        append = miss_at.append
+        for pos, g in zip(runs.tolist(), tm[runs].tolist()):
+            w = want[g]
+            b = od_get(g)
+            if b is not None and b >= w:
+                del od[g]          # move-to-end: dict keeps insertion order
+                od[g] = b
+                continue
+            append(pos)
+            if b is not None:
+                del od[g]
+                used -= b
+            while used + w > cap and od:
+                used -= od_pop(next(iter(od)))
+            od[g] = w
+            used += w
+        miss[miss_at] = True
+        return miss, list(od.items())
+
+    def run_trace(self, trace: Trace, *, record_from: float = 0.0) -> None:
+        """Resolve a whole arrival-sorted, constant-plan trace segment.
+
+        Semantically identical to ``for r in trace: self.offer(r,
+        record=r.arrival >= record_from)`` -- same state evolution, same
+        recorded observations -- but vectorized: the TPU stage is one
+        exact Lindley pass over the merged trace (``_server_ends``), SRAM
+        misses replay exactly from access order alone, and each CPU pool
+        resolves per model (the same exact Lindley for one core; the scalar
+        heap recurrence, op-for-op, for multi-core pools, whose service
+        order depends on the heap state).  Every float observable is
+        *bitwise* identical to the scalar path except the aggregate
+        ``tpu_busy`` (pairwise vs sequential summation, equal to round-off).
+        """
+        n_req = len(trace)
+        if n_req == 0:
+            return
+        if not trace.is_sorted:
+            # Same misuse the scalar driver surfaces per request; an
+            # unsorted trace would silently corrupt the Lindley order and
+            # the searchsorted warmup boundary.  O(1) for generator traces.
+            raise ValueError("run_trace requires an arrival-sorted Trace")
+        m = trace.model_idx
+        arr = trace.arrival
+        sc = trace.service_scale
+        unit = trace.scale_is_unit
+        has_tpu = self._part_arr > 0
+        has_cpu = self._part_arr < self._points_arr
+        # Arrival-sorted segment: the record predicate (arrival >=
+        # record_from) is a suffix starting at k0 -- no boolean mask needed.
+        k0 = int(np.searchsorted(arr, record_from, side="left"))
+
+        all_tpu = bool(has_tpu.all())
+        any_cpu = bool(has_cpu.any())
+        if all_tpu:
+            ti, tm, arr_t = None, m, arr
+            kt = k0
+        else:
+            ti = np.flatnonzero(has_tpu[m])
+            tm, arr_t = m[ti], arr[ti]
+            kt = int(np.searchsorted(ti, k0, side="left"))
+
+        if all_tpu and not any_cpu:
+            completion = None  # pure-TPU segment: completion == ends
+        else:
+            completion = arr.copy()  # p==0 models enqueue to CPU at arrival
+
+        if tm.size:
+            enq = arr_t + self._in_xfer_arr[tm]
+            # First/last occurrence per model via scatter (last write wins):
+            # O(n), no sort.
+            last = np.full(self.n, -1, dtype=np.int64)
+            last[tm] = np.arange(tm.size)
+            first = np.full(self.n, -1, dtype=np.int64)
+            first[tm[::-1]] = np.arange(tm.size - 1, -1, -1)
+            miss, residency = self._replay_lru(tm, first, last)
+            any_miss = bool(miss.any())
+            if unit:
+                service = self._s_tpu_arr[tm]  # fancy index -> fresh array
+            elif ti is None:
+                service = self._s_tpu_arr[tm] * sc
+            else:
+                service = self._s_tpu_arr[tm] * sc[ti]
+            if any_miss:
+                mi = np.flatnonzero(miss)
+                service[mi] += self._t_load_arr[tm[mi]]
+            free0 = self.tpu_free
+            ends = _server_ends(enq, service, free0)
+            # Cache handoff: each accessed model's last_used is the start of
+            # its last access; untouched residents keep their old stamps.
+            old_stamp = {g: lu for g, _, lu in self.cache.state()}
+            last_l = last.tolist()
+            rows = []
+            for g, b in residency:
+                j = last_l[g]
+                if j >= 0:
+                    prev = ends[j - 1] if j else free0
+                    e = enq[j]
+                    stamp = float(e if e >= prev else prev)
+                else:
+                    stamp = old_stamp.get(g, 0.0)
+                rows.append((g, b, stamp))
+            self.cache.restore(rows)
+            self.tpu_free = float(ends[-1])
+            self.tpu_busy += float(service.sum())
+            rec_tm = tm[kt:]
+            for i, c in enumerate(np.bincount(rec_tm, minlength=self.n)):
+                self.tpu_requests[i] += int(c)
+            if any_miss:
+                for i, c in enumerate(
+                    np.bincount(rec_tm[miss[kt:]], minlength=self.n)
+                ):
+                    self.misses[i] += int(c)
+            if completion is None:
+                completion = ends
+            elif ti is None:
+                completion = ends + self._out_eff_arr[tm]
+            else:
+                completion[ti] = ends + self._out_eff_arr[tm]
+
+        if any_cpu:
+            for i in np.flatnonzero(has_cpu).tolist():
+                sel = np.flatnonzero(m == i)
+                if sel.size == 0:
+                    continue
+                t_in = completion[sel]
+                svc = (
+                    np.full(sel.size, self._s_cpu[i])
+                    if unit
+                    else self._s_cpu[i] * sc[sel]
+                )
+                pool = self._cpu_pools[i]
+                if len(pool) == 1:
+                    ends_c = _server_ends(t_in, svc, pool[0])
+                    pool[0] = float(ends_c[-1])
+                else:
+                    # Multi-server FCFS: replay the scalar heap ops exactly.
+                    ends_l: list[float] = []
+                    push, pop = heapq.heappush, heapq.heappop
+                    for t, s in zip(t_in.tolist(), svc.tolist()):
+                        free = pop(pool)
+                        end = (t if t > free else free) + s
+                        push(pool, end)
+                        ends_l.append(end)
+                    ends_c = np.array(ends_l)
+                completion[sel] = ends_c
+
+        self.last_completion = max(
+            self.last_completion, float(completion.max())
+        )
+        # Record columnar chunks; result() flattens them (tolist-ing a
+        # million floats into Python lists would dominate the whole pass).
+        if k0 < n_req:
+            lat_r = completion[k0:] - arr[k0:]
+            arr_r = arr[k0:]
+            if self.n == 1:
+                self.latencies[0].append(lat_r)
+                self.arrivals[0].append(arr_r)
+            else:
+                m_r = m[k0:]
+                for i in range(self.n):
+                    keep = m_r == i
+                    if keep.any():
+                        self.latencies[i].append(lat_r[keep])
+                        self.arrivals[i].append(arr_r[keep])
+
     # -- shared driver surface (see repro.serving.des) -----------------------
     def offer(self, req: Request, *, record: bool = True) -> None:
         """Driver-contract alias of ``step``: requests must be offered in
@@ -161,13 +534,27 @@ class RuntimeSimulator:
 
     def result(self, duration: float) -> SimResult:
         return SimResult(
-            latencies=self.latencies,
-            arrivals=self.arrivals,
+            latencies=[_flat(ls) for ls in self.latencies],
+            arrivals=[_flat(a) for a in self.arrivals],
             tpu_busy=self.tpu_busy,
             duration=duration,
             misses=self.misses,
             tpu_requests=self.tpu_requests,
         )
+
+
+def _flat(parts: list):
+    """Flatten mixed scalar/chunk observation storage.
+
+    The scalar path appends floats, ``run_trace`` appends NumPy chunks;
+    pure-scalar lists pass through untouched (the seed's live-list
+    behavior), anything chunked concatenates to one float64 array.
+    """
+    if not any(isinstance(p, np.ndarray) for p in parts):
+        return parts
+    return np.concatenate(
+        [p if isinstance(p, np.ndarray) else np.array([p]) for p in parts]
+    )
 
 
 def make_backend(
@@ -192,14 +579,41 @@ def make_backend(
     raise ValueError(f"unknown backend {backend!r} (want 'stepper' or 'des')")
 
 
+def ensure_sorted(requests: "Trace | Sequence[Request]"):
+    """The trace in arrival order, skipping the copy when already sorted.
+
+    Every generator returns sorted traces (``Trace`` carries the flag, so
+    the check is O(1)); ``Request`` sequences are verified linearly --
+    cheaper than the unconditional ``sorted()`` copy either way.
+    """
+    if isinstance(requests, Trace):
+        return requests.sorted_by_arrival()
+    if all(a.arrival <= b.arrival for a, b in zip(requests, requests[1:])):
+        return requests
+    return sorted(requests, key=lambda r: r.arrival)
+
+
+def sorted_trace_and_horizon(requests: "Trace | Sequence[Request]"):
+    """``(arrival-sorted trace, last arrival time)`` -- the shared preamble
+    of ``simulate`` and ``run_adaptive`` (the horizon anchors the warmup
+    cutoff and the minimum reported duration; 0.0 for an empty trace)."""
+    reqs = ensure_sorted(requests)
+    if not len(reqs):
+        return reqs, 0.0
+    if isinstance(reqs, Trace):
+        return reqs, float(reqs.arrival[-1])
+    return reqs, reqs[-1].arrival
+
+
 def simulate(
     tenants: Sequence[TenantSpec],
     plan: Plan,
     platform: Platform,
-    requests: Sequence[Request],
+    requests: "Trace | Sequence[Request]",
     *,
     warmup_frac: float = 0.05,
     backend: str = "stepper",
+    vectorize: bool = True,
 ) -> SimResult:
     """Run a static-plan simulation over a request trace.
 
@@ -207,12 +621,22 @@ def simulate(
     (cold-start cache fills; the paper measures steady state).
     ``backend``: ``"stepper"`` (default) or ``"des"`` -- same contract,
     independent mechanics.
+    ``vectorize``: with a columnar ``Trace``, resolve the whole trace through
+    the fast driver -- the vectorized ``run_trace`` on the stepper, the
+    inlined columnar ``offer_trace`` on the DES (default); ``False`` forces
+    the scalar per-request reference path.
     """
     sim = make_backend(backend, [t.profile for t in tenants], plan, platform)
-    horizon = max((r.arrival for r in requests), default=0.0)
+    reqs, horizon = sorted_trace_and_horizon(requests)
     warmup_t = horizon * warmup_frac
-    for req in sorted(requests, key=lambda r: r.arrival):
-        sim.offer(req, record=req.arrival >= warmup_t)
+    if vectorize and isinstance(reqs, Trace):
+        if backend == "stepper":
+            sim.run_trace(reqs, record_from=warmup_t)
+        else:
+            sim.offer_trace(reqs, record_from=warmup_t)
+    else:
+        for req in reqs:
+            sim.offer(req, record=req.arrival >= warmup_t)
     # Duration runs to the last completion, not the last arrival: under
     # backlog the servers keep draining after arrivals stop, and clipping
     # the horizon at the last arrival let tpu_utilization exceed 1.0.

@@ -1,0 +1,432 @@
+"""Differential tests for the high-throughput simulation core.
+
+ROADMAP invariant: *fast paths are replays, not semantics*.  Every fast
+path introduced by the throughput PR -- the vectorized stepper
+(``RuntimeSimulator.run_trace`` + ``_server_ends``), the columnar DES
+driver (``offer_trace``), the optimized DES hot loop, and the O(1)
+``SramCache`` -- must reproduce its scalar/pre-optimization reference
+exactly:
+
+* vectorized stepper == scalar stepper **bitwise** on every recorded
+  observable (the busy-period-exact ``_server_ends`` keeps even the float
+  association of the scalar recurrence; only the aggregate ``tpu_busy``
+  may differ at round-off, from pairwise vs sequential summation);
+* optimized DES == the frozen PR-3 snapshot in
+  ``benchmarks/des_baseline.py`` **bitwise** (same float ops in the same
+  event order);
+* O(1) ``SramCache`` == the scan-based reference on any access sequence
+  with increasing stamps (the only regime simulators produce).
+
+Plus regression coverage for the workload over-draw fix and the
+verify-then-skip trace sorting.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from benchmarks.des_baseline import (
+    BaselineDiscreteEventSimulator,
+    BaselineSramCache,
+    baseline_simulate,
+)
+from repro.configs.paper_models import paper_profile
+from repro.core.planner import Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.cache import SramCache
+from repro.serving.controller import run_adaptive
+from repro.serving.des import DiscreteEventSimulator
+from repro.serving.simulator import (
+    _server_ends,
+    ensure_sorted,
+    simulate,
+)
+from repro.serving.workload import (
+    Request,
+    Trace,
+    _poisson_arrival_times,
+    mmpp_trace,
+    poisson_trace,
+    tenant_churn_trace,
+    with_service_jitter,
+)
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def assert_bitwise_equal(a, b, *, busy_exact=False):
+    """Recorded observables of two SimResults are identical."""
+    for x, y in zip(a.latencies, b.latencies):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(a.arrivals, b.arrivals):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert a.misses == b.misses
+    assert a.tpu_requests == b.tpu_requests
+    if busy_exact:
+        assert a.tpu_busy == b.tpu_busy
+    else:
+        assert a.tpu_busy == pytest.approx(b.tpu_busy, rel=1e-12)
+    assert a.duration == pytest.approx(b.duration, rel=1e-12)
+
+
+# -- vectorized stepper == scalar stepper ------------------------------------
+
+def _scenarios():
+    sq, mb = paper_profile("squeezenet"), paper_profile("mobilenetv2")
+    collab_ts = [TenantSpec(p, 5.0) for p in [sq] * 2 + [mb] * 2]
+    collab_plan = Plan(
+        (sq.num_partition_points, sq.num_partition_points, 1, 1),
+        (0, 0, 1, 1),
+    )
+    yield (
+        "collab_poisson",
+        collab_ts,
+        collab_plan,
+        poisson_trace([5.0] * 4, 300.0, seed=1),
+    )
+    swap_ts = tenants_for(("efficientnet", 2.0), ("gpunet", 2.0))
+    yield (
+        "swap_pair_poisson",
+        swap_ts,
+        Plan((6, 5), (0, 0)),
+        poisson_trace([2.0, 2.0], 400.0, seed=2),
+    )
+    yield (
+        "swap_pair_mmpp",
+        swap_ts,
+        Plan((6, 5), (0, 0)),
+        mmpp_trace([2.0, 2.0], 400.0, burst_factor=3.0, seed=3),
+    )
+    iv = tenants_for(("inceptionv4", 2.0))
+    yield (
+        "jitter_split_k1",
+        iv,
+        Plan((9,), (1,)),
+        with_service_jitter(poisson_trace([2.0], 300.0, seed=4), sigma=0.8, seed=5),
+    )
+    yield (
+        "jitter_split_k4",
+        iv,
+        Plan((9,), (4,)),
+        with_service_jitter(poisson_trace([2.0], 300.0, seed=6), sigma=0.8, seed=7),
+    )
+    churn_ts = tenants_for(("mnasnet", 4.0), ("inceptionv4", 1.0))
+    yield (
+        "churn_split",
+        churn_ts,
+        Plan((5, 9), (2, 2)),
+        tenant_churn_trace(
+            [4.0, 1.0], 400.0, mean_session=80.0, mean_absence=40.0, seed=8
+        ).requests,
+    )
+    yield (
+        "full_cpu",
+        tenants_for(("mnasnet", 3.0)),
+        Plan((0,), (4,)),
+        poisson_trace([3.0], 300.0, seed=9),
+    )
+
+
+class TestVectorizedStepperIsAReplay:
+    @pytest.mark.parametrize(
+        "name,ts,plan,trace",
+        list(_scenarios()),
+        ids=[s[0] for s in _scenarios()],
+    )
+    def test_bitwise_equal_to_scalar(self, name, ts, plan, trace):
+        assert isinstance(trace, Trace)
+        assert len(trace) > 100, "scenario too small to exercise the paths"
+        fast = simulate(ts, plan, HW, trace, vectorize=True)
+        slow = simulate(ts, plan, HW, trace, vectorize=False)
+        assert_bitwise_equal(fast, slow)
+
+    def test_warmup_recording_matches(self):
+        ts = tenants_for(("squeezenet", 5.0))
+        plan = Plan((2,), (0,))
+        trace = poisson_trace([5.0], 200.0, seed=10)
+        for frac in (0.0, 0.3, 0.99):
+            fast = simulate(ts, plan, HW, trace, warmup_frac=frac)
+            slow = simulate(ts, plan, HW, trace, warmup_frac=frac, vectorize=False)
+            assert_bitwise_equal(fast, slow)
+
+    def test_adaptive_midflight_plan_changes_match(self):
+        # run_adaptive's columnar fast path must commit the same plans at
+        # the same times and record bitwise-equal observations.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        trace = poisson_trace([5.0, 1.5], 240.0, seed=11)
+        common = dict(replan_period=30.0, window=30.0, initial_rates=(5.0, 1.5))
+        fast = run_adaptive(profiles, trace, HW, K_MAX, vectorize=True, **common)
+        slow = run_adaptive(profiles, trace, HW, K_MAX, vectorize=False, **common)
+        assert fast.plans == slow.plans
+        assert fast.replan_times == slow.replan_times
+        assert fast.plan_objectives == slow.plan_objectives
+        assert fast.cold_fallback_times == slow.cold_fallback_times
+        assert_bitwise_equal(fast.sim, slow.sim)
+
+    @given(seed=st.integers(0, 20), rate=st.floats(5.0, 60.0))
+    @settings(max_examples=10, deadline=None)
+    def test_backlog_regimes_match(self, seed, rate):
+        # From idle to heavy overload: the busy-period classification in
+        # _server_ends must stay exact everywhere.
+        ts = tenants_for(("xception", rate))
+        plan = Plan((11,), (0,))
+        trace = poisson_trace([rate], 40.0, seed=seed)
+        fast = simulate(ts, plan, HW, trace)
+        slow = simulate(ts, plan, HW, trace, vectorize=False)
+        assert_bitwise_equal(fast, slow)
+
+
+class TestServerEnds:
+    @given(seed=st.integers(0, 100), load=st.floats(0.2, 3.0))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_scalar_recurrence_bitwise(self, seed, load):
+        rng = np.random.default_rng(seed)
+        n = 400
+        enq = np.cumsum(rng.exponential(1.0, size=n))
+        svc = rng.exponential(load, size=n)
+        free0 = float(rng.uniform(0.0, 5.0))
+        got = _server_ends(enq, svc, free0)
+        free = free0
+        for j, (e, s) in enumerate(zip(enq.tolist(), svc.tolist())):
+            free = max(e, free) + s
+            assert got[j] == free, (j, got[j], free)
+
+
+# -- optimized DES == frozen PR-3 snapshot -----------------------------------
+
+class TestDesBitIdenticalToBaseline:
+    def _pair(self, profiles, plan):
+        return (
+            DiscreteEventSimulator(profiles, plan, HW),
+            BaselineDiscreteEventSimulator(profiles, plan, HW),
+        )
+
+    def _assert_state_equal(self, a, b):
+        assert a.latencies == b.latencies
+        assert a.arrivals == b.arrivals
+        assert a.misses == b.misses
+        assert a.tpu_requests == b.tpu_requests
+        assert a.tpu_busy == b.tpu_busy
+        assert a.last_completion == b.last_completion
+
+    @pytest.mark.parametrize(
+        "names,plan,rates",
+        [
+            (("squeezenet",), Plan((2,), (0,)), [20.0]),
+            (("efficientnet", "gpunet"), Plan((6, 5), (0, 0)), [3.0, 3.0]),
+            (("inceptionv4",), Plan((9,), (2,)), [2.5]),
+            (("mnasnet", "inceptionv4"), Plan((5, 9), (2, 2)), [5.0, 1.0]),
+        ],
+    )
+    def test_static_traces(self, names, plan, rates):
+        profiles = [paper_profile(n) for n in names]
+        trace = with_service_jitter(
+            poisson_trace(rates, 200.0, seed=13), sigma=0.5, seed=14
+        )
+        new = simulate(
+            [TenantSpec(p, r) for p, r in zip(profiles, rates)],
+            plan,
+            HW,
+            trace,
+            backend="des",
+        )
+        old = baseline_simulate(
+            [TenantSpec(p, r) for p, r in zip(profiles, rates)],
+            plan,
+            HW,
+            trace.to_requests(),
+            backend="des",
+        )
+        assert new.latencies == old.latencies
+        assert new.arrivals == old.arrivals
+        assert new.misses == old.misses
+        assert new.tpu_requests == old.tpu_requests
+        assert new.tpu_busy == old.tpu_busy
+
+    def test_columnar_driver_equals_scalar_offers(self):
+        profiles = [paper_profile("efficientnet"), paper_profile("gpunet")]
+        ts = [TenantSpec(p, 2.0) for p in profiles]
+        trace = poisson_trace([2.0, 2.0], 300.0, seed=15)
+        fast = simulate(ts, Plan((6, 5), (0, 0)), HW, trace, backend="des")
+        slow = simulate(
+            ts, Plan((6, 5), (0, 0)), HW, trace, backend="des", vectorize=False
+        )
+        assert_bitwise_equal(fast, slow, busy_exact=True)
+
+    def test_midflight_plan_changes(self):
+        # The full driver surface under random re-plans: submit, advance_to,
+        # set_plan, drain -- event-for-event identical.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        plans = [
+            Plan((7, 11), (0, 0)),
+            Plan((0, 11), (4, 0)),
+            Plan((5, 9), (2, 2)),
+            Plan((7, 0), (0, 4)),
+        ]
+        reqs = poisson_trace([4.0, 2.0], 60.0, seed=16).to_requests()
+        new, old = self._pair(profiles, plans[0])
+        for sim in (new, old):
+            next_switch, pi = 10.0, 1
+            for r in reqs:
+                while r.arrival >= next_switch:
+                    sim.advance_to(next_switch)
+                    sim.set_plan(plans[pi % len(plans)], now=next_switch)
+                    pi += 1
+                    next_switch += 10.0
+                sim.offer(r)
+            sim.drain()
+        self._assert_state_equal(new, old)
+
+    def test_submit_out_of_order_future(self):
+        profiles = [paper_profile("mnasnet")]
+        new, old = self._pair(profiles, Plan((7,), (0,)))
+        for sim in (new, old):
+            for j in (5, 1, 3, 2, 4):
+                sim.submit(Request(0, 0.01 * j))
+            sim.drain()
+        self._assert_state_equal(new, old)
+
+
+# -- O(1) SramCache == scan-based reference ----------------------------------
+
+class TestSramCacheEquivalence:
+    @given(
+        cap=st.integers(10, 200),
+        seed=st.integers(0, 200),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_random_access_sequences(self, cap, seed):
+        rng = np.random.default_rng(seed)
+        fast, ref = SramCache(cap), BaselineSramCache(cap)
+        now = 0.0
+        for _ in range(120):
+            m = int(rng.integers(0, 5))
+            b = int(rng.integers(1, 150))
+            now += float(rng.uniform(0.01, 1.0))  # stamps strictly increase
+            assert fast.access(m, b, now) == ref.access(m, b, now)
+            assert fast.used == ref.used
+            for g in range(5):
+                assert fast.resident(g) == ref.resident(g)
+
+    def test_used_is_constant_time_counter(self):
+        c = SramCache(100)
+        c.access(0, 40, 0.0)
+        c.access(1, 50, 1.0)
+        assert c.used == 90
+        c.access(2, 30, 2.0)  # evicts 0
+        assert c.used == 80
+        c.reset()
+        assert c.used == 0
+
+    def test_state_restore_round_trip(self):
+        c = SramCache(100)
+        c.access(0, 40, 0.0)
+        c.access(1, 50, 1.0)
+        c.access(0, 40, 2.0)  # 1 is now LRU
+        snap = c.state()
+        assert [m for m, _, _ in snap] == [1, 0]
+        c2 = SramCache(100)
+        c2.restore(snap)
+        assert c2.used == 90
+        c2.access(2, 30, 3.0)  # must evict 1 (the LRU), not 0
+        assert not c2.resident(1) and c2.resident(0)
+
+    def test_restore_rejects_overflow(self):
+        c = SramCache(50)
+        with pytest.raises(ValueError):
+            c.restore([(0, 40, 0.0), (1, 40, 1.0)])
+
+
+# -- workload over-draw fix ---------------------------------------------------
+
+class TestPoissonCoverage:
+    @given(seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_tiny_draw_blocks_still_cover_the_horizon(self, seed):
+        # _chunk=7 forces the extension loop dozens of times; the realized
+        # count must still match the rate (a silent truncation would cap it
+        # near the block size).
+        lam, duration = 50.0, 100.0
+        rng = np.random.default_rng(seed)
+        times = _poisson_arrival_times(rng, lam, duration, _chunk=7)
+        mean = lam * duration
+        assert abs(times.size - mean) < 6.0 * math.sqrt(mean)
+        assert times.size and times[-1] < duration
+        # The tail of the horizon is populated, not truncated.
+        assert times[-1] > duration * 0.95
+
+    def test_chunked_trace_well_formed(self):
+        trace = poisson_trace([20.0, 10.0], 50.0, seed=3, _chunk=5)
+        arr = trace.arrival
+        assert np.all(arr[1:] >= arr[:-1])
+        assert arr[-1] < 50.0
+        counts = np.bincount(trace.model_idx, minlength=2)
+        assert abs(counts[0] - 1000) < 6 * math.sqrt(1000)
+        assert abs(counts[1] - 500) < 6 * math.sqrt(500)
+
+    def test_high_rate_long_duration_hits_rate(self):
+        trace = poisson_trace([200.0], 500.0, seed=4)
+        assert len(trace) / 500.0 == pytest.approx(200.0, rel=0.02)
+
+
+# -- verify-then-skip sorting -------------------------------------------------
+
+class TestSortedSkip:
+    def test_sorted_inputs_pass_through_unchanged(self):
+        trace = poisson_trace([3.0], 50.0, seed=5)
+        assert ensure_sorted(trace) is trace
+        reqs = trace.to_requests()
+        assert ensure_sorted(reqs) is reqs
+
+    def test_unsorted_inputs_still_sorted(self):
+        reqs = [Request(0, 3.0), Request(0, 1.0), Request(0, 2.0)]
+        out = ensure_sorted(reqs)
+        assert [r.arrival for r in out] == [1.0, 2.0, 3.0]
+        tr = Trace(np.array([0, 0]), np.array([2.0, 1.0]))
+        out_t = ensure_sorted(tr)
+        assert out_t.arrival.tolist() == [1.0, 2.0]
+
+    def test_fast_drivers_reject_unsorted_traces(self):
+        # The scalar offer() raises per request on a clock rewind; the bulk
+        # drivers must surface the same misuse instead of silently
+        # corrupting the service order / warmup boundary.
+        from repro.serving.simulator import RuntimeSimulator
+
+        prof = [paper_profile("mnasnet")]
+        plan = Plan((7,), (0,))
+        bad = Trace(np.array([0, 0, 0]), np.array([5.0, 1.0, 3.0]))
+        with pytest.raises(ValueError):
+            RuntimeSimulator(prof, plan, HW).run_trace(bad)
+        with pytest.raises(ValueError):
+            DiscreteEventSimulator(prof, plan, HW).offer_trace(bad)
+
+    def test_trace_does_not_freeze_caller_arrays(self):
+        # Trace copies caller-owned writable arrays before marking its
+        # columns read-only -- wrapping a buffer must not make later writes
+        # to that buffer crash.
+        mi = np.array([0, 0], dtype=np.int64)
+        ar = np.array([1.0, 2.0])
+        tr = Trace(mi, ar)
+        ar[0] = 5.0  # caller's buffer stays writable...
+        mi[0] = 1
+        assert tr.arrival[0] == 1.0  # ...and the trace kept the old values
+        assert tr.model_idx[0] == 0
+
+    def test_unsorted_trace_simulates_like_sorted(self):
+        base = poisson_trace([4.0], 60.0, seed=6)
+        perm = np.random.default_rng(0).permutation(len(base))
+        shuffled = Trace(
+            base.model_idx[perm], base.arrival[perm], base.service_scale[perm]
+        )
+        ts = tenants_for(("squeezenet", 4.0))
+        plan = Plan((2,), (0,))
+        a = simulate(ts, plan, HW, base)
+        b = simulate(ts, plan, HW, shuffled)
+        assert_bitwise_equal(a, b)
