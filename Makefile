@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke
+.PHONY: test test-fast test-slow bench-smoke bench-sched
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -22,9 +22,17 @@ test-slow:
 # (including the incremental re-planner on the large 32/64-tenant mixes)
 # + the analytic-model-vs-DES error sweep on short traces
 # + the simulation-core throughput smoke (also self-checks that every fast
-#   path still matches its reference before timing it).
+#   path still matches its reference before timing it)
+# + the scheduling-discipline sweep smoke (self-checks fcfs == the frozen
+#   DES baseline before timing).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
 	$(PYTHON) -m benchmarks.model_vs_sim --smoke
 	$(PYTHON) -m benchmarks.sim_throughput --smoke --out BENCH_sim_throughput.smoke.json
+	$(PYTHON) -m benchmarks.scheduling --smoke --out BENCH_scheduling.smoke.json
+
+# Full scheduling-discipline sweep (swap-amortization vs FCFS on the
+# swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
+bench-sched:
+	$(PYTHON) -m benchmarks.scheduling --out BENCH_scheduling.json

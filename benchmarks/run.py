@@ -22,6 +22,7 @@ from benchmarks import (
     fig7_baselines,
     fig8_dynamic,
     model_vs_sim,
+    scheduling,
     sim_throughput,
 )
 
@@ -37,6 +38,7 @@ MODULES = {
     "alg_scaling": alg_scaling,
     "alpha_ablation": alpha_ablation,
     "model_vs_sim": model_vs_sim,
+    "scheduling": scheduling,
     "sim_throughput": sim_throughput,
 }
 

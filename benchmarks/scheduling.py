@@ -1,0 +1,238 @@
+"""TPU scheduling disciplines vs FCFS: the swap-amortization sweep.
+
+Quantifies what the pluggable service discipline subsystem
+(``repro.serving.scheduling``) buys on swap-heavy multi-tenant mixes: the
+``swap_batch`` discipline serves runs of queued same-tenant requests so one
+inter-model swap-in (Eq. 2's ``T_load``) amortizes over the run.  Each row
+simulates the mix on the event-driven ground truth (``backend="des"``) and
+reports the mean-latency reduction vs FCFS, the observed swap-in (miss)
+rate, and the batch-amortized analytic prediction
+(``queueing.swap_batch_amortization``) with its error -- the model is what
+the planner co-optimizes over, so its accuracy on these rows is what makes
+``hill_climb(discipline_space=...)`` trustworthy.
+
+Mixes:
+
+* ``swap2`` -- efficientnet + gpunet full-TPU at ~0.72 FCFS utilization:
+  the Fig. 6 alpha ~ 0.5 thrashing pair and the headline amortization row
+  (two tenants means deep per-tenant queues to batch from).
+* ``thrash16`` -- 16 small-model tenants contending for SRAM.  Swap-heavy
+  but per-tenant queues are shallow (16 ways to split the backlog), so the
+  amortization win is honest-but-modest -- the regime where batching helps
+  least while still never hurting.
+* ``collab8`` -- the paper's collaborative regime: every resident prefix
+  fits SRAM together, zero swap-ins.  The control row: all disciplines
+  must price and serve it identically to FCFS (no regression when there is
+  nothing to amortize).
+
+Before anything is timed, the FCFS run is self-checked **bitwise** against
+the frozen PR-3 DES snapshot (``benchmarks/des_baseline.py``) -- the
+"non-FCFS disciplines are opt-in, FCFS stays pinned" invariant from
+ROADMAP.md; a sweep whose baseline drifted from the reference would be
+meaningless.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.scheduling [--smoke]
+        [--duration SEC] [--seed N] [--out BENCH_scheduling.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from benchmarks.common import HW, Row
+from benchmarks.des_baseline import baseline_simulate
+from repro.configs.paper_models import paper_profile
+from repro.core import latency
+from repro.core.planner import (
+    FCFS,
+    DisciplineSpec,
+    Plan,
+    TenantSpec,
+    prefix_service_time,
+    validate_plan,
+)
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+
+BATCH_CAPS = (2, 4, 8, 16)
+
+
+def _equal_load_rates(profiles, plan, rho_base: float) -> list[float]:
+    """One shared per-tenant rate putting the swap-free TPU utilization at
+    ``rho_base`` (swap-ins inflate the realized rho above it)."""
+    s = [
+        prefix_service_time(p, q, HW)
+        for p, q in zip(profiles, plan.partition)
+    ]
+    return [rho_base / sum(s)] * len(profiles)
+
+
+def _mixes() -> dict[str, tuple[list[TenantSpec], Plan]]:
+    eff, gpu = paper_profile("efficientnet"), paper_profile("gpunet")
+    sq, mb = paper_profile("squeezenet"), paper_profile("mobilenetv2")
+    mn = paper_profile("mnasnet")
+
+    swap_profiles = [eff, gpu]
+    swap_plan = Plan((6, 5), (0, 0))
+
+    thrash_profiles = [sq, mb, mn, eff] * 4
+    thrash_plan = Plan(
+        tuple(p.num_partition_points for p in thrash_profiles),
+        (0,) * len(thrash_profiles),
+    )
+
+    collab_profiles = [sq] * 4 + [mb] * 4
+    collab_plan = Plan(
+        tuple([sq.num_partition_points] * 4 + [1] * 4),
+        tuple([0] * 4 + [1] * 4),
+    )
+
+    mixes = {}
+    for name, profiles, plan, rho in (
+        ("swap2", swap_profiles, swap_plan, 0.55),
+        ("thrash16", thrash_profiles, thrash_plan, 0.55),
+        ("collab8", collab_profiles, collab_plan, 0.60),
+    ):
+        rates = _equal_load_rates(profiles, plan, rho)
+        ts = [TenantSpec(p, r) for p, r in zip(profiles, rates)]
+        validate_plan(plan, ts, HW.cpu.n_cores)
+        mixes[name] = (ts, plan)
+    return mixes
+
+
+def _disciplines() -> list[tuple[str, DisciplineSpec]]:
+    specs = [("fcfs", FCFS)]
+    specs += [
+        (f"swap_batch{c}", DisciplineSpec("swap_batch", batch_cap=c))
+        for c in BATCH_CAPS
+    ]
+    return specs
+
+
+def _self_check_fcfs(ts, plan, trace) -> None:
+    """FCFS DES must be bitwise the frozen PR-3 snapshot before timing."""
+    new = simulate(ts, plan, HW, trace, backend="des")
+    old = baseline_simulate(ts, plan, HW, trace.to_requests(), backend="des")
+    assert new.latencies == old.latencies, "fcfs diverged from des_baseline"
+    assert new.misses == old.misses
+    assert new.tpu_requests == old.tpu_requests
+    assert new.tpu_busy == old.tpu_busy
+
+
+def run_sweep(*, duration: float = 1500.0, seed: int = 0, check: bool = True) -> dict:
+    rows: list[dict] = []
+    for mix_name, (ts, plan) in _mixes().items():
+        rates = [t.rate for t in ts]
+        trace = poisson_trace(rates, duration, seed=seed)
+        if check:
+            # Short self-check trace: cheap, still thousands of events.
+            _self_check_fcfs(ts, plan, trace[: min(len(trace), 5000)])
+        fcfs_mean = None
+        for disc_name, spec in _disciplines():
+            p = Plan(plan.partition, plan.cores, spec)
+            res = simulate(ts, p, HW, trace, backend="des")
+            pred = latency.predict(ts, p, HW)
+            obs = res.request_weighted_mean(rates)
+            pm = pred.mean_latency(ts)
+            if disc_name == "fcfs":
+                fcfs_mean = obs
+            miss = [
+                res.observed_miss_rate(i) for i in range(len(ts))
+            ]
+            finite_miss = [m for m in miss if math.isfinite(m)]
+            p99s = [res.p99(i) for i in range(len(ts))]
+            rows.append(
+                {
+                    "mix": mix_name,
+                    "discipline": disc_name,
+                    "batch_cap": spec.batch_cap,
+                    "n_requests": len(trace),
+                    "mean_ms": obs * 1e3,
+                    "worst_p99_ms": max(p99s) * 1e3,
+                    "mean_miss_rate": (
+                        sum(finite_miss) / len(finite_miss)
+                        if finite_miss
+                        else math.nan
+                    ),
+                    "reduction_vs_fcfs_pct": (
+                        100.0 * (1.0 - obs / fcfs_mean) if fcfs_mean else 0.0
+                    ),
+                    "pred_mean_ms": pm * 1e3,
+                    "pred_err_pct": 100.0 * (pm - obs) / obs,
+                    "tpu_utilization": res.tpu_utilization,
+                }
+            )
+
+    best = {}
+    for r in rows:
+        if r["mix"] == "swap2" and r["discipline"].startswith("swap_batch"):
+            if not best or r["reduction_vs_fcfs_pct"] > best["reduction_vs_fcfs_pct"]:
+                best = r
+    headline = {
+        "swap2_best_reduction_pct": best.get("reduction_vs_fcfs_pct"),
+        "swap2_best_discipline": best.get("discipline"),
+        "swap2_best_pred_err_pct": best.get("pred_err_pct"),
+    }
+    return {
+        "benchmark": "scheduling",
+        "duration": duration,
+        "seed": seed,
+        "headline": headline,
+        "rows": rows,
+    }
+
+
+def _rows_of(report: dict) -> list[Row]:
+    return [
+        Row(
+            f"scheduling/{r['mix']}/{r['discipline']}",
+            r["mean_ms"] * 1e3,
+            f"vs_fcfs_pct={r['reduction_vs_fcfs_pct']:.1f};"
+            f"miss={r['mean_miss_rate']:.3f};"
+            f"pred_err_pct={r['pred_err_pct']:.1f};"
+            f"p99_ms={r['worst_p99_ms']:.1f}",
+        )
+        for r in report["rows"]
+    ]
+
+
+def run() -> list[Row]:
+    """benchmarks.run harness entry point: the smoke-sized sweep."""
+    return _rows_of(run_sweep(duration=200.0))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="short traces: CI sanity (self-check + shape), not a record",
+    )
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_scheduling.json")
+    args = ap.parse_args()
+    duration = args.duration if args.duration is not None else (
+        200.0 if args.smoke else 1500.0
+    )
+    report = run_sweep(duration=duration, seed=args.seed)
+    report["smoke"] = bool(args.smoke)
+    print("name,us_per_call,derived")
+    for row in _rows_of(report):
+        print(row.csv())
+    h = report["headline"]
+    if h.get("swap2_best_reduction_pct") is not None:
+        print(
+            f"# headline swap2: {h['swap2_best_discipline']} cuts mean "
+            f"latency {h['swap2_best_reduction_pct']:.1f}% vs fcfs "
+            f"(model err {h['swap2_best_pred_err_pct']:+.1f}%)"
+        )
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+
+
+if __name__ == "__main__":
+    main()

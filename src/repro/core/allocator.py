@@ -19,7 +19,13 @@ import numpy as np
 
 from repro.core import latency
 from repro.core.plan_tables import EvalTables, PlanTables
-from repro.core.planner import Plan, TenantSpec, validate_plan
+from repro.core.planner import (
+    FCFS,
+    DisciplineSpec,
+    Plan,
+    TenantSpec,
+    validate_plan,
+)
 from repro.hw.specs import Platform
 
 
@@ -143,6 +149,29 @@ def prop_alloc_batch(
 _BATCH_MIN_TENANTS = 5
 
 
+def _ensure_eval_tables(
+    tables: PlanTables | EvalTables | None,
+    tenants: Sequence[TenantSpec],
+    platform: Platform,
+    k_max: int,
+) -> EvalTables:
+    """A prebuilt ``EvalTables`` when it is valid for this (mix, platform,
+    k-range); otherwise a rebuild reusing whatever rate-free base is
+    available.  The one cache-validity policy shared by every climb path."""
+    if (
+        isinstance(tables, EvalTables)
+        and tables.matches(tenants, platform)
+        and tables.k_max >= k_max
+    ):
+        return tables
+    return EvalTables.build(
+        tenants,
+        platform,
+        k_max,
+        base=tables.base if isinstance(tables, EvalTables) else tables,
+    )
+
+
 def hill_climb(
     tenants: Sequence[TenantSpec],
     platform: Platform,
@@ -151,9 +180,11 @@ def hill_climb(
     force_alpha_zero: bool = False,
     max_iters: int = 10_000,
     batch: bool | None = None,
-    tables: PlanTables | None = None,
+    tables: PlanTables | EvalTables | None = None,
     init_plan: Plan | None = None,
     prune: bool = True,
+    discipline: DisciplineSpec = FCFS,
+    discipline_space: Sequence[DisciplineSpec] | None = None,
 ) -> tuple[Plan, float]:
     """Algorithm 1: greedy hill-climbing resource allocation.
 
@@ -188,10 +219,73 @@ def hill_climb(
       the warm climb converges in a handful of iterations instead of
       re-walking up from all-CPU.
 
+    Discipline co-optimization:
+
+    * ``discipline`` scores the whole climb under one TPU service
+      discipline (the returned plan carries it); the FCFS default keeps
+      every code path identical to the pre-discipline planner.
+    * ``discipline_space`` searches (partition, cores, discipline) jointly:
+      the climb runs once per candidate spec -- the discipline axis is tiny
+      and its effect on the objective is global, so exhausting it around
+      the inner climb *is* the joint search -- and the strictly best plan
+      is returned.  Ties resolve non-batching-first, plain FCFS ahead of
+      priority/weighted-fair, regardless of how the caller ordered the
+      space (on a predicted tie, e.g. a no-swap mix that batching prices
+      identically but measurably hurts, or a priority spec the mean
+      objective cannot separate from FCFS, the most-FCFS-like plan must
+      win).  Specs that cannot batch are all scored on the unmodified
+      FCFS objective, so they share one climb and a space of only such
+      specs returns the FCFS plan unchanged.
+
     Returns the final (Plan, predicted objective).
     """
     if batch is None:
         batch = init_plan is not None or len(tenants) >= _BATCH_MIN_TENANTS
+    if discipline_space is not None:
+        if not discipline_space:
+            raise ValueError("discipline_space must not be empty")
+        # The evaluation tables are discipline-independent: build them once
+        # and share across the per-spec climbs (only the climbs themselves
+        # depend on the discipline; the scalar path never touches tables).
+        shared = (
+            _ensure_eval_tables(tables, tenants, platform, k_max)
+            if batch
+            else tables
+        )
+        # Non-batching specs first, plain FCFS ahead of the rest (stable
+        # within each group): on a predicted tie -- e.g. a no-swap mix,
+        # where batching prices identically but measurably hurts the
+        # simulated system, or a priority spec the mean objective cannot
+        # distinguish from FCFS -- the most-FCFS-like plan wins no matter
+        # how the caller ordered the space.  All non-batching specs are
+        # priced on the identical FCFS objective, so one climb scores the
+        # whole group: the first spec in tie-break order represents it
+        # (the others could only ever tie, and ties keep the first).
+        ordered = sorted(
+            discipline_space, key=lambda s: (s.batches, s.kind != "fcfs")
+        )
+        best: tuple[Plan, float] | None = None
+        nonbatching_done = False
+        for spec in ordered:
+            if not spec.batches:
+                if nonbatching_done:
+                    continue
+                nonbatching_done = True
+            cand = hill_climb(
+                tenants,
+                platform,
+                k_max,
+                force_alpha_zero=force_alpha_zero,
+                max_iters=max_iters,
+                batch=batch,
+                tables=shared,
+                init_plan=init_plan,
+                prune=prune,
+                discipline=spec,
+            )
+            if best is None or cand[1] < best[1]:
+                best = cand
+        return best
     if not batch:
         if init_plan is not None:
             raise ValueError("init_plan warm start requires the batched path")
@@ -201,9 +295,10 @@ def hill_climb(
             k_max,
             force_alpha_zero=force_alpha_zero,
             max_iters=max_iters,
+            discipline=discipline,
         )
     n = len(tenants)
-    etab = EvalTables.build(tenants, platform, k_max, base=tables)
+    etab = _ensure_eval_tables(tables, tenants, platform, k_max)
     rates = etab.rates[None, :]
     if prune:
         fronts = etab.base.frontiers
@@ -234,6 +329,7 @@ def hill_climb(
             platform,
             force_alpha_zero=force_alpha_zero,
             tables=etab,
+            discipline=discipline,
         )[0]
     )
 
@@ -270,6 +366,7 @@ def hill_climb(
             platform,
             force_alpha_zero=force_alpha_zero,
             tables=etab,
+            discipline=discipline,
         )
         j = int(np.argmin(objs))  # first minimum, like the scalar scan
         if not objs[j] < l_curr:
@@ -279,7 +376,11 @@ def hill_climb(
         pos[vm[j]] = vpos[j]
         l_curr = float(objs[j])
 
-    plan = Plan(tuple(int(p) for p in partition), tuple(int(k) for k in cores))
+    plan = Plan(
+        tuple(int(p) for p in partition),
+        tuple(int(k) for k in cores),
+        discipline,
+    )
     validate_plan(plan, tenants, k_max)
     return plan, l_curr
 
@@ -291,12 +392,13 @@ def _hill_climb_scalar(
     *,
     force_alpha_zero: bool = False,
     max_iters: int = 10_000,
+    discipline: DisciplineSpec = FCFS,
 ) -> tuple[Plan, float]:
     """Seed scalar Algorithm 1; reference for the batched path."""
     n = len(tenants)
     partition = [0] * n
     cores = prop_alloc(tenants, partition, k_max)
-    plan = Plan(tuple(partition), cores)
+    plan = Plan(tuple(partition), cores, discipline)
     l_curr = latency.penalized_objective(
         tenants, plan, platform, force_alpha_zero=force_alpha_zero
     )
@@ -316,7 +418,7 @@ def _hill_climb_scalar(
                     continue
                 l_cand = latency.penalized_objective(
                     tenants,
-                    Plan(tuple(cand), k_cand),
+                    Plan(tuple(cand), k_cand, discipline),
                     platform,
                     force_alpha_zero=force_alpha_zero,
                 )
@@ -329,7 +431,7 @@ def _hill_climb_scalar(
         cores = k_star
         l_curr = l_cand
 
-    plan = Plan(tuple(partition), tuple(cores))
+    plan = Plan(tuple(partition), tuple(cores), discipline)
     validate_plan(plan, tenants, k_max)
     return plan, l_curr
 
@@ -424,9 +526,12 @@ def brute_force_oracle(
     batch: bool = True,
     chunk_size: int = 4096,
     prune: bool = True,
+    discipline: DisciplineSpec = FCFS,
 ) -> tuple[Plan, float]:
     """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
-    only for tests/validation on small instances.
+    only for tests/validation on small instances.  ``discipline`` scores
+    the enumeration under that TPU service discipline (the returned plan
+    carries it); the discipline axis itself is not enumerated here.
 
     The feasible set is streamed through ``objective_batch`` in chunks of
     ``chunk_size`` plans (``batch=False`` restores the seed scalar loop);
@@ -443,7 +548,7 @@ def brute_force_oracle(
     frontier point exactly.
     """
     if not batch:
-        return _brute_force_scalar(tenants, platform, k_max)
+        return _brute_force_scalar(tenants, platform, k_max, discipline=discipline)
     tables = EvalTables.build(tenants, platform, k_max)
     best_plan: Plan | None = None
     best_obj = math.inf
@@ -457,7 +562,7 @@ def brute_force_oracle(
         parts = np.array([c[0] for c in chunk])
         cores = np.array([c[1] for c in chunk])
         objs = latency.objective_batch(
-            tenants, parts, cores, platform, tables=tables
+            tenants, parts, cores, platform, tables=tables, discipline=discipline
         )
         # NaN (zero-rate tenant on an unstable queue) never beats ``best`` in
         # the scalar loop; map to inf so argmin skips it the same way.
@@ -465,7 +570,7 @@ def brute_force_oracle(
         j = int(np.argmin(objs))
         if objs[j] < best_obj:
             best_obj = float(objs[j])
-            best_plan = Plan(chunk[j][0], chunk[j][1])
+            best_plan = Plan(chunk[j][0], chunk[j][1], discipline)
     assert best_plan is not None
     return best_plan, best_obj
 
@@ -474,12 +579,14 @@ def _brute_force_scalar(
     tenants: Sequence[TenantSpec],
     platform: Platform,
     k_max: int,
+    *,
+    discipline: DisciplineSpec = FCFS,
 ) -> tuple[Plan, float]:
     """Seed scalar oracle; reference for the chunked batch path."""
     best_plan: Plan | None = None
     best_obj = math.inf
     for partition, cores in _feasible_plans(tenants, k_max):
-        plan = Plan(tuple(partition), tuple(cores))
+        plan = Plan(tuple(partition), tuple(cores), discipline)
         obj = latency.objective(tenants, plan, platform)
         if obj < best_obj:
             best_obj = obj

@@ -24,6 +24,8 @@ from repro.core.plan_tables import (
     PlanTables,
 )
 from repro.core.planner import (
+    FCFS,
+    DisciplineSpec,
     ModelProfile,
     Plan,
     TenantSpec,
@@ -31,6 +33,41 @@ from repro.core.planner import (
     prefix_service_time,
 )
 from repro.hw.specs import Platform
+
+
+def _amortized_tpu_terms(
+    tenants: Sequence[TenantSpec],
+    partition: Sequence[int],
+    alphas: Sequence[float],
+    platform: Platform,
+    batch_cap: int,
+    staleness: float,
+) -> tuple[float, float, np.ndarray]:
+    """Scalar-path swap-batch aggregates: ``(tpu_wait, rho_tpu, alpha_eff)``.
+
+    Assembles the per-tenant inputs of
+    ``queueing.swap_batch_amortization`` from profile lookups -- the same
+    formulas the batched evaluator runs on gathered tables, so the two
+    paths agree to round-off (the PR-1 batch == scalar invariant extended
+    to batching disciplines).
+    """
+    n = len(tenants)
+    rates = np.zeros(n)
+    svc = np.zeros(n)
+    tl = np.zeros(n)
+    for j, (t, p) in enumerate(zip(tenants, partition)):
+        if p > 0:
+            rates[j] = t.rate
+            svc[j] = prefix_service_time(t.profile, p, platform)
+            tl[j] = load_time(t.profile, p, platform)
+    lam = float(rates.sum())
+    s1 = float((rates * svc).sum())
+    s2 = float((rates * svc * svc).sum())
+    wait, rho, alpha_eff = queueing.swap_batch_amortization(
+        lam, s1, s2, rates, np.asarray(alphas, dtype=np.float64), tl, svc,
+        batch_cap, staleness=staleness,
+    )
+    return float(wait), float(rho), alpha_eff
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +202,15 @@ def predict(
 
     ``force_alpha_zero`` implements the paper's "SwapLess (alpha=0)" ablation
     baseline: the queueing terms are kept but inter-model swapping is ignored.
+
+    A batching ``plan.discipline`` (swap_batch with cap > 1) swaps the Eq. 2
+    mixture for the batch-amortized model
+    (``queueing.swap_batch_amortization``); the reported ``alphas`` are then
+    the amortized effective switch-in probabilities.  The ``priority`` /
+    ``weighted_fair`` disciplines keep the FCFS aggregate prediction: they
+    redistribute waiting between tenants but are work-conserving and
+    service-blind, so the mean terms the Eq. 5 objective sums are conserved
+    and they batch nothing.
     """
     partition, cores = plan.partition, plan.cores
     if force_alpha_zero:
@@ -173,10 +219,19 @@ def predict(
         alphas = swap.weight_miss_probs(tenants, partition, platform)
 
     lam_tpu = swap.tpu_arrival_rate(tenants, partition)
-    weights, atoms = tpu_service_distribution(tenants, partition, alphas, platform)
-    es, es2 = queueing.mixture_moments(weights, atoms)
-    tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
-    rho_tpu = lam_tpu * es
+    if plan.discipline.batches and not force_alpha_zero:
+        tpu_wait, rho_tpu, alphas = _amortized_tpu_terms(
+            tenants, partition, alphas, platform,
+            plan.discipline.batch_cap, plan.discipline.staleness,
+        )
+        alphas = [float(a) for a in alphas]
+    else:
+        weights, atoms = tpu_service_distribution(
+            tenants, partition, alphas, platform
+        )
+        es, es2 = queueing.mixture_moments(weights, atoms)
+        tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
+        rho_tpu = lam_tpu * es
 
     per_model: list[LatencyBreakdown] = []
     cpu_utils: list[float] = []
@@ -269,10 +324,18 @@ def penalized_objective(
         alphas = swap.weight_miss_probs(tenants, partition, platform)
 
     lam_tpu = swap.tpu_arrival_rate(tenants, partition)
-    weights, atoms = tpu_service_distribution(tenants, partition, alphas, platform)
-    es, es2 = queueing.mixture_moments(weights, atoms)
-    rho_tpu = lam_tpu * es
-    tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
+    if plan.discipline.batches and not force_alpha_zero:
+        tpu_wait, rho_tpu, alphas = _amortized_tpu_terms(
+            tenants, partition, alphas, platform,
+            plan.discipline.batch_cap, plan.discipline.staleness,
+        )
+    else:
+        weights, atoms = tpu_service_distribution(
+            tenants, partition, alphas, platform
+        )
+        es, es2 = queueing.mixture_moments(weights, atoms)
+        rho_tpu = lam_tpu * es
+        tpu_wait = queueing.mg1_wait(lam_tpu, es, es2)
 
     total = 0.0
     overload = max(0.0, rho_tpu - 1.0)
@@ -350,6 +413,7 @@ def _batch_eval(
     *,
     force_alpha_zero: bool,
     tables: PlanTables | EvalTables | None,
+    discipline: DisciplineSpec = FCFS,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Shared core: per-plan (weighted_latency_total, overload) arrays.
 
@@ -372,7 +436,9 @@ def _batch_eval(
     ti = et.tenant_idx
     A = et.pstack[ti, P].sum(axis=1)       # [B, 9] per-tenant aggregates
     F = et.pkstack[ti, P, K].sum(axis=1)   # [B, 2] static latency + overload
-    return _aggregate_objective(et, A, F, P, force_alpha_zero=force_alpha_zero)
+    return _aggregate_objective(
+        et, A, F, P, force_alpha_zero=force_alpha_zero, discipline=discipline
+    )
 
 
 def _aggregate_objective(
@@ -382,12 +448,24 @@ def _aggregate_objective(
     P: np.ndarray,
     *,
     force_alpha_zero: bool,
+    discipline: DisciplineSpec = FCFS,
 ) -> tuple[np.ndarray, np.ndarray]:
     """O(1)-per-plan tail of the decomposed objective: [B, 9] / [B, 2]
-    per-tenant aggregates -> (weighted_latency_total, overload)."""
+    per-tenant aggregates -> (weighted_latency_total, overload).
+
+    A batching ``discipline`` routes through the batch-amortized swap model
+    instead of the Eq. 10 collapse; the per-tenant amortization weights
+    depend on the plan's own fixed-point wait, so this branch pays two
+    extra per-tenant gathers from the rate-free tables ([B, n] instead of
+    the aggregate [B, 9]) -- still one NumPy pass, and exactly the formulas
+    the scalar ``_amortized_tpu_terms`` runs.
+    """
     lam = A[:, PCOL_LAM]
     S1 = A[:, PCOL_S1]
     S2 = A[:, PCOL_S2]
+
+    if discipline.batches and not force_alpha_zero:
+        return _aggregate_objective_batched_swap(et, A, F, P, discipline)
 
     with np.errstate(divide="ignore", invalid="ignore"):
         if force_alpha_zero:
@@ -428,6 +506,51 @@ def _aggregate_objective(
     return total, overload
 
 
+def _aggregate_objective_batched_swap(
+    et: EvalTables,
+    A: np.ndarray,
+    F: np.ndarray,
+    P: np.ndarray,
+    discipline: DisciplineSpec,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Swap-batch tail of the decomposed objective (see
+    ``queueing.swap_batch_amortization`` for the model)."""
+    lam = A[:, PCOL_LAM]
+    ti = et.tenant_idx
+    on = P > 0
+    r = np.where(on, et.rates[None, :], 0.0)            # [B, n]
+    svc = np.where(on, et.base.prefix_service[ti, P], 0.0)
+    tl = np.where(on, et.base.load[ti, P], 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        shared = (
+            (A[:, PCOL_WEIGHT] > et.sram_bytes)
+            & (A[:, PCOL_ACTIVE] > 1.0)
+            & (lam > 0.0)
+        )
+        # Eq. 10 shared-occupancy alphas, per tenant (the collapse to the
+        # (SL - Q/lam) aggregates is FCFS-only: amortization reweights each
+        # tenant's summand individually).
+        alphas = np.where(
+            shared[:, None] & on,
+            np.maximum(0.0, 1.0 - r / np.where(lam > 0, lam, 1.0)[:, None]),
+            0.0,
+        )
+        wait, rho, alpha_eff = queueing.swap_batch_amortization(
+            lam, A[:, PCOL_S1], A[:, PCOL_S2], r, alphas, tl, svc,
+            discipline.batch_cap, staleness=discipline.staleness,
+        )
+        swap_latency = (r * alpha_eff * tl).sum(axis=-1)
+        total = F[:, PKCOL_STATIC] + lam * wait + swap_latency
+        if (et.rates <= 0.0).any():
+            # Same zero-rate NaN convention as the FCFS tail: a zero-rate
+            # tenant on an unstable TPU queue contributes 0 * inf = NaN in
+            # the scalar sum.
+            zr_on_tpu = ((et.rates <= 0.0)[None, :] & (P > 0)).any(axis=1)
+            total = np.where(zr_on_tpu & np.isinf(wait), np.nan, total)
+        overload = np.maximum(0.0, rho - 1.0) + F[:, PKCOL_OVERLOAD]
+    return total, overload
+
+
 def objective_batch(
     tenants: Sequence[TenantSpec],
     partitions: np.ndarray,
@@ -436,11 +559,13 @@ def objective_batch(
     *,
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
+    discipline: DisciplineSpec = FCFS,
 ) -> np.ndarray:
     """Eq. 5 objective for B candidate plans at once; ``inf`` where unstable.
 
     Batched equivalent of ``objective``: element b equals
-    ``objective(tenants, Plan(partitions[b], cores[b]), platform)``.
+    ``objective(tenants, Plan(partitions[b], cores[b], discipline),
+    platform)``.
     """
     total, _ = _batch_eval(
         tenants,
@@ -449,6 +574,7 @@ def objective_batch(
         platform,
         force_alpha_zero=force_alpha_zero,
         tables=tables,
+        discipline=discipline,
     )
     return total
 
@@ -461,13 +587,14 @@ def penalized_objective_batch(
     *,
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
+    discipline: DisciplineSpec = FCFS,
 ) -> np.ndarray:
     """Batched ``penalized_objective``: one pass of array ops over B plans.
 
     Element b equals ``penalized_objective(tenants, Plan(partitions[b],
-    cores[b]), platform)`` up to float round-off; pass precomputed
-    ``tables`` (see ``PlanTables.for_tenants``) to skip table construction
-    on repeated calls -- the allocator's hot path does.
+    cores[b], discipline), platform)`` up to float round-off; pass
+    precomputed ``tables`` (see ``PlanTables.for_tenants``) to skip table
+    construction on repeated calls -- the allocator's hot path does.
     """
     total, overload = _batch_eval(
         tenants,
@@ -476,6 +603,7 @@ def penalized_objective_batch(
         platform,
         force_alpha_zero=force_alpha_zero,
         tables=tables,
+        discipline=discipline,
     )
     feasible = (overload == 0.0) & np.isfinite(total)
     return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))
@@ -491,6 +619,7 @@ def penalized_objective_delta_batch(
     *,
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
+    discipline: DisciplineSpec = FCFS,
 ) -> np.ndarray:
     """``penalized_objective_batch`` for neighbors of one base plan.
 
@@ -535,6 +664,7 @@ def penalized_objective_delta_batch(
             platform,
             force_alpha_zero=force_alpha_zero,
             tables=et,
+            discipline=discipline,
         )
     A = np.tile(et.pstack[ti, P0].sum(axis=0), (B, 1))       # [B, 9]
     F = np.tile(F0, (B, 1))                                  # [B, 2]
@@ -550,7 +680,7 @@ def penalized_objective_delta_batch(
             et.pkstack[pi, p_new, k_new] - et.pkstack[pi, P0[i_idx], K0[i_idx]],
         )
     total, overload = _aggregate_objective(
-        et, A, F, P, force_alpha_zero=force_alpha_zero
+        et, A, F, P, force_alpha_zero=force_alpha_zero, discipline=discipline
     )
     feasible = (overload == 0.0) & np.isfinite(total)
     return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))

@@ -208,12 +208,74 @@ class TenantSpec:
     rate: float
 
 
+_DISCIPLINE_KINDS = ("fcfs", "swap_batch", "priority", "weighted_fair")
+
+
+@dataclasses.dataclass(frozen=True)
+class DisciplineSpec:
+    """Which TPU service discipline a plan runs under (value object).
+
+    The spec is *data* carried by a ``Plan`` (so the planner can co-optimize
+    it and the simulators can switch it mid-flight via ``set_plan``); the
+    runtime queue mechanics live in ``repro.serving.scheduling`` -- the
+    dependency stays core <- serving.
+
+    Kinds:
+
+    * ``fcfs`` -- single global FCFS queue (the paper's Section IV runtime
+      and the permanent bitwise-pinned reference).
+    * ``swap_batch`` -- serve runs of up to ``batch_cap`` queued same-model
+      requests back-to-back so one inter-model swap-in (Eq. 2's T_load)
+      amortizes over the whole run; ``batch_cap`` doubles as the fairness
+      bound (any queued head-of-line job is overtaken by at most
+      ``batch_cap - 1`` batched services before FCFS order resumes), and
+      ``staleness`` optionally breaks a run early once the globally oldest
+      queued job has waited longer than that many seconds.
+    * ``priority`` -- strict non-preemptive priority across tenants
+      (``weights[i]`` higher = served first; FIFO within a tenant).
+    * ``weighted_fair`` -- served-time-weighted fair queueing: the nonempty
+      tenant with the smallest accumulated TPU service per unit ``weight``
+      goes next (FIFO within a tenant).
+
+    ``batch_cap <= 1`` disables batching: every evaluator and simulator
+    treats such a spec exactly as FCFS semantics with bookkeeping, and the
+    planner's co-optimization returns the FCFS plan unchanged.
+    """
+
+    kind: str = "fcfs"
+    batch_cap: int = 1
+    staleness: float = math.inf
+    weights: tuple[float, ...] | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in _DISCIPLINE_KINDS:
+            raise ValueError(
+                f"unknown discipline {self.kind!r} (want one of {_DISCIPLINE_KINDS})"
+            )
+        if self.batch_cap < 1:
+            raise ValueError("batch_cap must be >= 1")
+        if not self.staleness > 0:
+            raise ValueError("staleness must be positive (math.inf disables)")
+        if self.weights is not None and any(w < 0 for w in self.weights):
+            raise ValueError("discipline weights must be non-negative")
+
+    @property
+    def batches(self) -> bool:
+        """True when the spec actually amortizes swaps (cap of 1 is FCFS)."""
+        return self.kind == "swap_batch" and self.batch_cap > 1
+
+
+FCFS = DisciplineSpec()
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A global configuration: partition vector P and core vector K."""
+    """A global configuration: partition vector P, core vector K, and the
+    TPU service discipline the runtime serves the queue with."""
 
     partition: tuple[int, ...]
     cores: tuple[int, ...]
+    discipline: DisciplineSpec = FCFS
 
     def __post_init__(self) -> None:
         if len(self.partition) != len(self.cores):
@@ -234,6 +296,11 @@ def validate_plan(plan: Plan, tenants: Sequence[TenantSpec], k_max: int) -> None
             raise ValueError("negative core count")
     if sum(plan.cores) > k_max:
         raise ValueError(f"core allocation {plan.cores} exceeds K_max={k_max}")
+    w = plan.discipline.weights
+    if w is not None and len(w) != len(tenants):
+        raise ValueError(
+            f"discipline weights length {len(w)} != {len(tenants)} tenants"
+        )
 
 
 def intra_swap_bytes(profile: ModelProfile, p: int, platform: Platform) -> int:

@@ -7,6 +7,16 @@ from repro.serving.controller import (
 from repro.serving.des import DiscreteEventSimulator
 from repro.serving.engine import CompletedRequest, ExecutableModel, ServingEngine
 from repro.serving.result import SimResult
+from repro.serving.scheduling import (
+    FCFS,
+    Discipline,
+    DisciplineSpec,
+    FcfsDiscipline,
+    PriorityDiscipline,
+    SwapBatchDiscipline,
+    WeightedFairDiscipline,
+    make_discipline,
+)
 from repro.serving.simulator import RuntimeSimulator, make_backend, simulate
 from repro.serving.workload import (
     ChurnTrace,
@@ -29,7 +39,14 @@ __all__ = [
     "AdaptiveRunResult",
     "ChurnTrace",
     "CompletedRequest",
+    "Discipline",
+    "DisciplineSpec",
     "DiscreteEventSimulator",
+    "FCFS",
+    "FcfsDiscipline",
+    "PriorityDiscipline",
+    "SwapBatchDiscipline",
+    "WeightedFairDiscipline",
     "ExecutableModel",
     "RatePhase",
     "Request",
@@ -44,6 +61,7 @@ __all__ = [
     "diurnal_trace",
     "dynamic_trace",
     "make_backend",
+    "make_discipline",
     "mmpp_trace",
     "poisson_trace",
     "run_adaptive",

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.allocator import hill_climb
 from repro.core.plan_tables import PlanTables
-from repro.core.planner import ModelProfile, Plan, TenantSpec
+from repro.core.planner import DisciplineSpec, ModelProfile, Plan, TenantSpec
 from repro.hw.specs import Platform
 from repro.serving.result import SimResult
 from repro.serving.simulator import make_backend, sorted_trace_and_horizon
@@ -39,6 +39,7 @@ class SlidingRateEstimator:
         self._stamps: list[collections.deque[float]] = [
             collections.deque() for _ in range(n_models)
         ]
+        self._eval_now = 0.0  # high-water mark of rates() evaluation times
 
     def observe(self, model_idx: int, t: float) -> None:
         self._stamps[model_idx].append(t)
@@ -54,13 +55,25 @@ class SlidingRateEstimator:
             self._stamps[i].extend(times[model_idx == i].tolist())
 
     def rates(self, now: float) -> list[float]:
+        # Eviction is destructive, so evaluation must be monotone: a caller
+        # probing rates(t1) then rates(t0) with t0 < t1 would otherwise get
+        # estimates that depend on which stamps the *first* call already
+        # evicted.  The clock is clamped to its high-water mark -- backdated
+        # probes answer at the latest evaluated instant instead of silently
+        # mixing two windows (stamps older than t1's window are gone).
+        now = self._eval_now = max(now, self._eval_now)
         # Before one full window has elapsed the divisor is the elapsed time,
         # not the window length -- dividing by the full window would
         # systematically underestimate lambda-hat on early re-plans.
         horizon = min(self.window, now)
+        cutoff = now - self.window
         out = []
         for dq in self._stamps:
-            while dq and dq[0] < now - self.window:
+            # Strict < keeps a stamp sitting exactly on the window boundary
+            # (dq[0] == now - window), so re-evaluating at the same ``now``
+            # is idempotent: the boundary stamp is counted every time, never
+            # evicted by one call and missed by the next.
+            while dq and dq[0] < cutoff:
                 dq.popleft()
             out.append(len(dq) / horizon if horizon > 0 else 0.0)
         return out
@@ -116,6 +129,7 @@ def run_adaptive(
     vectorize: bool = True,
     cold_fallback_margin: float | None = 0.05,
     cold_fallback_window: int = 5,
+    discipline_space: Sequence[DisciplineSpec] | None = None,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
 
@@ -141,6 +155,14 @@ def run_adaptive(
     ``run_trace`` fast path (``vectorize=False`` forces the scalar
     per-request loop).  Re-plan times, rate estimates, and committed plans
     are identical either way; observed latencies agree to float round-off.
+
+    ``discipline_space`` makes every re-plan a joint (partition, cores,
+    discipline) search over the given specs when the planner supports it
+    (``hill_climb(discipline_space=...)``); the committed plans carry the
+    chosen spec and ``set_plan`` switches the runtime's TPU discipline
+    mid-flight along with the rest of the configuration.  ``None`` (the
+    default) keeps the planner untouched: plain FCFS, bit-identical to the
+    pre-discipline controller.
     """
     n = len(profiles)
     est = SlidingRateEstimator(n, window=window)
@@ -152,11 +174,23 @@ def run_adaptive(
     warm_capable = False
     try:
         params = inspect.signature(planner).parameters
-        if "tables" in params:
-            planner_kwargs["tables"] = PlanTables.build(profiles, platform, k_max)
-        warm_capable = "init_plan" in params
     except (TypeError, ValueError):
-        pass  # builtins/partials without introspectable signatures
+        params = {}  # builtins/partials without introspectable signatures
+    if "tables" in params:
+        planner_kwargs["tables"] = PlanTables.build(profiles, platform, k_max)
+    warm_capable = "init_plan" in params
+    if discipline_space is not None:
+        # A **kwargs wrapper around hill_climb accepts the kwarg without
+        # naming it, so VAR_KEYWORD counts as support.
+        takes_kw = any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+        )
+        if "discipline_space" not in params and not takes_kw:
+            raise ValueError(
+                "planner does not support discipline co-optimization "
+                "(needs a discipline_space parameter)"
+            )
+        planner_kwargs["discipline_space"] = tuple(discipline_space)
 
     # Normalized (per-request) objectives of recent committed plans: the
     # incumbent trend the cold-fallback guard compares against.

@@ -62,6 +62,7 @@ from repro.core.planner import (
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
 from repro.serving.result import SimResult
+from repro.serving.scheduling import WeightedFairDiscipline, make_discipline
 from repro.serving.workload import Request
 
 _heappush = heapq.heappush
@@ -113,6 +114,13 @@ class DiscreteEventSimulator:
         ]
         self._cpu_busy = [0] * self.n
         self._plan: Plan | None = None
+        # TPU service discipline (repro.serving.scheduling).  ``None`` is the
+        # native FCFS deque hot path, bitwise-pinned to the PR-3 baseline;
+        # a non-default Plan.discipline installs a queue object instead.
+        self._disc = None
+        self._wf: WeightedFairDiscipline | None = None
+        self._run_model: int | None = None
+        self._run_len = 0
         self.set_plan(plan, now=0.0)
 
     # -- plan management ----------------------------------------------------
@@ -131,6 +139,31 @@ class DiscreteEventSimulator:
         if len(plan.partition) != self.n:
             raise ValueError("plan size mismatch")
         self.advance_to(now)
+        old_spec = self._plan.discipline if self._plan is not None else None
+        if plan.discipline != old_spec:
+            # Discipline switch: queued jobs migrate between queue
+            # representations in global enqueue order.  Jobs coming off the
+            # native FCFS deque carry no enqueue stamps, so they re-enter
+            # stamped at the switch instant (staleness clocks restart; the
+            # relative order -- the thing correctness rests on -- is exact).
+            new = make_discipline(plan.discipline, self.n)
+            if new is not None:
+                for job in self._tpu_ready:
+                    new.push(job, now)
+                self._tpu_ready.clear()
+            if self._disc is not None:
+                for _, t, job in self._disc.drain_rows():
+                    if new is None:
+                        self._tpu_ready.append(job)
+                    else:
+                        new.push(job, t)
+            self._disc = new
+            self._wf = new if isinstance(new, WeightedFairDiscipline) else None
+            # Run state is only maintained under a discipline; restart it
+            # at the switch (same legitimacy class as the staleness-clock
+            # restart above).
+            self._run_model = None
+            self._run_len = 0
         self._plan = plan
         pf, pl = self.profiles, self.platform
         p = plan.partition
@@ -322,19 +355,37 @@ class DiscreteEventSimulator:
         # global-FCFS earliest-enqueued job.  Whenever the server is idle
         # the ready queue is empty (an idle server always drained it), so
         # starting the arriving job directly equals append-then-popleft.
+        # An idle server grabs the arriving job no matter the discipline
+        # (all disciplines are work-conserving); a busy one parks it in the
+        # discipline queue, which for FCFS is the native deque.
         if self._tpu_job is None:
             self._begin_tpu(job)
-        else:
+        elif self._disc is None:
             self._tpu_ready.append(job)
+        else:
+            self._disc.push(job, self.now)
 
     def _begin_tpu(self, job: tuple) -> None:
         self._tpu_job = job
         i = job[_J_MODEL]
+        # Same-tenant run state: what swap_batch amortization extends.
+        # Tracked only under a discipline -- the native FCFS hot loop stays
+        # op-for-op the PR-3 baseline; a mid-flight switch *into* a
+        # discipline starts with a cleared run (set_plan resets it), which
+        # costs at most one head-ordered first decision.
+        if self._disc is not None:
+            if i == self._run_model:
+                self._run_len += 1
+            else:
+                self._run_model = i
+                self._run_len = 1
         # Swap state transition: touching this tenant's weights may evict
         # another's; a miss (weights not resident) charges the swap-in.
         miss = self.cache.access(i, job[_J_PBYTES], self.now)
         service = job[_J_TPU_S] + (job[_J_TLOAD] if miss else 0.0)
         self.tpu_busy += service
+        if self._wf is not None:
+            self._wf.charge(i, service)
         if job[_J_RECORD]:
             self.tpu_requests[i] += 1
             if miss:
@@ -359,6 +410,16 @@ class DiscreteEventSimulator:
                 i = job[_J_MODEL]
                 self.latencies[i].append(now - job[_J_ARR])
                 self.arrivals[i].append(job[_J_ARR])
+        if self._disc is not None:
+            # Discipline-managed queue: the selection hook replaces the
+            # baseline's FCFS popleft (this is the one decision point a
+            # service discipline owns).
+            nxt = self._disc.pop(now, self._run_model, self._run_len)
+            if nxt is None:
+                self._tpu_job = None
+            else:
+                self._begin_tpu(nxt)
+            return
         ready = self._tpu_ready
         if ready:
             # _begin_tpu, inlined at the hottest call site (the back-to-back

@@ -66,7 +66,10 @@ class SimResult:
             return math.nan  # nothing completed: the mean is unknown
         tot = sum(w for w, _ in pairs)
         if tot <= 0:
-            return 0.0
+            # All-zero weights leave the weighted mean undefined, not zero
+            # (the class-wide unknown-not-zero nan convention: a 0.0 here
+            # silently wins comparisons and poisons downstream averages).
+            return math.nan
         return sum(w * m for w, m in pairs) / tot
 
     def p99(self, model_idx: int) -> float:
@@ -85,8 +88,12 @@ class SimResult:
         return float(np.partition(np.asarray(ls), rank)[rank])
 
     def observed_miss_rate(self, model_idx: int) -> float:
+        """Fraction of the model's TPU services that paid a swap-in;
+        ``nan`` when the model never visited the TPU (full-CPU route or no
+        recorded requests) -- an unknown rate, not a perfect hit rate, per
+        the class's nan convention."""
         n = self.tpu_requests[model_idx]
-        return self.misses[model_idx] / n if n else 0.0
+        return self.misses[model_idx] / n if n else math.nan
 
     @property
     def tpu_utilization(self) -> float:

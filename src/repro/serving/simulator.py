@@ -39,6 +39,8 @@ pick between them.
 from __future__ import annotations
 
 import heapq
+import itertools
+import math
 from typing import Sequence
 
 import numpy as np
@@ -53,6 +55,11 @@ from repro.core.planner import (
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
 from repro.serving.result import SimResult
+from repro.serving.scheduling import (
+    FcfsDiscipline,
+    WeightedFairDiscipline,
+    make_discipline,
+)
 from repro.serving.workload import Request, Trace
 
 __all__ = ["RuntimeSimulator", "SimResult", "simulate", "make_backend"]
@@ -177,8 +184,30 @@ def _server_ends(enqueue: np.ndarray, service: np.ndarray, free0: float) -> np.n
     return out
 
 
+# Deferred-TPU job tuple of the discipline path (same field layout as the
+# DES ``_J_*`` map; the two simulators never exchange jobs, but one layout
+# keeps the mechanics recognizably parallel).
+_DJ_MODEL = 0
+_DJ_ARR = 1
+_DJ_RECORD = 2
+_DJ_TPU_S = 3
+_DJ_CPU_S = 4
+_DJ_OUT_X = 5
+_DJ_PBYTES = 6
+_DJ_TLOAD = 7
+_DJ_SUFFIX = 8
+
+
 class RuntimeSimulator:
-    """Steppable two-stage (TPU -> CPU) FCFS system over profiled tenants."""
+    """Steppable two-stage (TPU -> CPU) system over profiled tenants.
+
+    The TPU queue runs under ``plan.discipline``: with the default FCFS the
+    seed scalar ``step`` path resolves each request fully at arrival (queue
+    order == arrival order, so no queue state is needed); any other
+    discipline defers TPU service decisions through a pending queue
+    (``repro.serving.scheduling``) that is drained as the offered clock
+    advances -- see ``_advance_tpu``.
+    """
 
     def __init__(
         self,
@@ -199,6 +228,14 @@ class RuntimeSimulator:
         self.tpu_requests = [0] * self.n
         self._plan: Plan | None = None
         self._cpu_pools: list[list[float]] = [[0.0] for _ in range(self.n)]
+        # Non-FCFS discipline state (all dormant under the default FCFS,
+        # whose scalar/vectorized paths stay bitwise-pinned):
+        self._disc = None                     # scheduling.Discipline | None
+        self._wf: WeightedFairDiscipline | None = None
+        self._tpu_arrivals: list[tuple] = []  # (enqueue_t, seq, job) heap
+        self._arr_seq = itertools.count()
+        self._run_model: int | None = None
+        self._run_len = 0
         self.set_plan(plan, now=0.0)
 
     # -- plan management ----------------------------------------------------
@@ -213,6 +250,32 @@ class RuntimeSimulator:
         if len(plan.partition) != self.n:
             raise ValueError("plan size mismatch")
         old = self._plan
+        if self._disc is not None:
+            # Resolve TPU decisions up to the switch instant so queued work
+            # bound under the old plan is ordered before the change.
+            self._advance_tpu(now)
+        if old is None or plan.discipline != old.discipline:
+            if self._disc is None:
+                # FCFS -> non-FCFS (or the initial install): the scalar path
+                # leaves nothing pending, so no migration is needed.
+                self._disc = make_discipline(plan.discipline, self.n)
+            else:
+                # Between discipline objects, queued jobs migrate in global
+                # enqueue order.  A switch back to FCFS keeps the deferred
+                # machinery (as an FcfsDiscipline) -- the scalar fast path
+                # cannot absorb already-queued jobs, and mixed-discipline
+                # runs are outside the bitwise-pinned FCFS contract anyway.
+                new = make_discipline(plan.discipline, self.n) or FcfsDiscipline(
+                    plan.discipline, self.n
+                )
+                for _, t, job in self._disc.drain_rows():
+                    new.push(job, t)
+                self._disc = new
+            self._wf = (
+                self._disc
+                if isinstance(self._disc, WeightedFairDiscipline)
+                else None
+            )
         self._plan = plan
         self._derive(plan)
         new_pools: list[list[float]] = []
@@ -267,7 +330,18 @@ class RuntimeSimulator:
 
     # -- event processing ---------------------------------------------------
     def step(self, req: Request, *, record: bool = True) -> float:
-        """Process one request; returns its end-to-end latency (s)."""
+        """Process one request; returns its end-to-end latency (s).
+
+        FCFS only: the scalar recurrence resolves each request fully at
+        arrival, which is exactly the property non-FCFS disciplines give
+        up.  Under a non-default ``plan.discipline`` drive the simulator
+        through ``offer``/``advance_to``/``drain`` instead.
+        """
+        if self._disc is not None:
+            raise ValueError(
+                "step() resolves a request at arrival; non-FCFS disciplines "
+                "defer service order -- drive via offer()/advance_to()/drain()"
+            )
         i = req.model_idx
         p = self.plan.partition[i]
         P_i = self.profiles[i].num_partition_points
@@ -301,6 +375,127 @@ class RuntimeSimulator:
             self.latencies[i].append(lat)
             self.arrivals[i].append(req.arrival)
         return lat
+
+    # -- deferred TPU machinery (non-FCFS disciplines) -----------------------
+    def _offer_deferred(self, req: Request, record: bool) -> None:
+        """Discipline-path ``offer``: bind the route at arrival, defer the
+        TPU service decision to ``_advance_tpu``.
+
+        Full-CPU routes resolve immediately (they never touch the TPU and
+        per-model pools see them in arrival order either way); TPU-bound
+        jobs enter a future-enqueue heap keyed by ``arrival + input_xfer``
+        so the discipline queue receives them in enqueue-time order exactly
+        as the DES's enqueue events fire.
+        """
+        i = req.model_idx
+        p = self.plan.partition[i]
+        suffix = p < self.profiles[i].num_partition_points
+        if p > 0:
+            enq = req.arrival + self._in_xfer[i]
+            # Advance only to the *arrival*: it lower-bounds every future
+            # enqueue (offers come in arrival order and input transfers are
+            # non-negative), so no decision is finalized before a job the
+            # DES would already have queued.  Advancing to this job's own
+            # enqueue time would over-run it whenever another model's
+            # smaller input transfer lands an enqueue inside (arrival, enq].
+            self._advance_tpu(req.arrival)
+            job = (
+                i,
+                req.arrival,
+                record,
+                self._s_tpu[i] * req.service_scale,
+                self._s_cpu[i] * req.service_scale,
+                self._out_xfer[i] if suffix else 0.0,
+                self._prefix_bytes[i],
+                self._t_load[i],
+                suffix,
+            )
+            heapq.heappush(self._tpu_arrivals, (enq, next(self._arr_seq), job))
+            return
+        self._advance_tpu(req.arrival)
+        pool = self._cpu_pools[i]
+        free = heapq.heappop(pool)
+        start = max(req.arrival, free)
+        end = start + self._s_cpu[i] * req.service_scale
+        heapq.heappush(pool, end)
+        self.last_completion = max(self.last_completion, end)
+        if record:
+            self.latencies[i].append(end - req.arrival)
+            self.arrivals[i].append(req.arrival)
+
+    def _advance_tpu(self, until: float) -> None:
+        """Resolve every TPU service decision at or before time ``until``.
+
+        Replays the DES event interleaving with two pending structures: the
+        future-enqueue heap (jobs still in input transfer) and the
+        discipline queue (jobs waiting for the server).  The server is busy
+        exactly through ``tpu_free`` whenever the discipline queue is
+        nonempty -- jobs only queue behind a busy server -- so the next
+        decision is either ingesting the earliest future enqueue (when it
+        lands at or before the completion) or letting the discipline pick
+        at the completion instant.  Exact ties between an enqueue and a
+        completion resolve enqueue-first here, where the DES orders them by
+        event sequence; like FCFS multi-tenant tie order, that difference
+        is legitimate between the two backends (ROADMAP "DES is ground
+        truth").
+        """
+        disc = self._disc
+        heap = self._tpu_arrivals
+        while True:
+            next_enq = heap[0][0] if heap else math.inf
+            if len(disc):
+                if next_enq <= self.tpu_free:
+                    if next_enq > until:
+                        return
+                    enq_t, _, job = heapq.heappop(heap)
+                    disc.push(job, enq_t)
+                    continue
+                if self.tpu_free > until:
+                    return
+                job = disc.pop(self.tpu_free, self._run_model, self._run_len)
+                self._begin_tpu_job(job, self.tpu_free)
+                continue
+            if not heap or next_enq > until:
+                return
+            enq_t, _, job = heapq.heappop(heap)
+            if enq_t >= self.tpu_free:
+                # Idle server: work-conserving start, no discipline choice.
+                self._begin_tpu_job(job, enq_t)
+            else:
+                disc.push(job, enq_t)
+
+    def _begin_tpu_job(self, job: tuple, start: float) -> None:
+        """Serve one TPU job at ``start`` and resolve its full timeline
+        (same per-request float ops as the scalar ``step`` TPU/CPU path)."""
+        i = job[_DJ_MODEL]
+        if i == self._run_model:
+            self._run_len += 1
+        else:
+            self._run_model = i
+            self._run_len = 1
+        miss = self.cache.access(i, job[_DJ_PBYTES], start)
+        service = job[_DJ_TPU_S] + (job[_DJ_TLOAD] if miss else 0.0)
+        self.tpu_free = start + service
+        self.tpu_busy += service
+        if self._wf is not None:
+            self._wf.charge(i, service)
+        if job[_DJ_RECORD]:
+            self.tpu_requests[i] += 1
+            if miss:
+                self.misses[i] += 1
+        t = self.tpu_free
+        if job[_DJ_SUFFIX]:
+            t += job[_DJ_OUT_X]
+            pool = self._cpu_pools[i]
+            free = heapq.heappop(pool)
+            start_c = max(t, free)
+            end = start_c + job[_DJ_CPU_S]
+            heapq.heappush(pool, end)
+            t = end
+        self.last_completion = max(self.last_completion, t)
+        if job[_DJ_RECORD]:
+            self.latencies[i].append(t - job[_DJ_ARR])
+            self.arrivals[i].append(job[_DJ_ARR])
 
     # -- vectorized fast path -----------------------------------------------
     def _replay_lru(
@@ -395,6 +590,14 @@ class RuntimeSimulator:
             # unsorted trace would silently corrupt the Lindley order and
             # the searchsorted warmup boundary.  O(1) for generator traces.
             raise ValueError("run_trace requires an arrival-sorted Trace")
+        if self._disc is not None:
+            # Non-FCFS disciplines defer service decisions, which the
+            # Lindley identity (strict FCFS order) cannot express: fall back
+            # transparently to the scalar reference loop -- same observables,
+            # scalar speed.  FCFS keeps the vectorized path below.
+            for r in trace:
+                self.offer(r, record=r.arrival >= record_from)
+            return
         m = trace.model_idx
         arr = trace.arrival
         sc = trace.service_scale
@@ -521,15 +724,28 @@ class RuntimeSimulator:
 
     # -- shared driver surface (see repro.serving.des) -----------------------
     def offer(self, req: Request, *, record: bool = True) -> None:
-        """Driver-contract alias of ``step``: requests must be offered in
-        arrival order (the stepper resolves each fully on arrival)."""
-        self.step(req, record=record)
+        """Driver-contract entry: requests must be offered in arrival order.
+
+        Under FCFS this is an alias of ``step`` (each request resolves
+        fully on arrival); under a non-FCFS discipline the TPU decision is
+        deferred to the pending-queue machinery.
+        """
+        if self._disc is None:
+            self.step(req, record=record)
+        else:
+            self._offer_deferred(req, record)
 
     def advance_to(self, t: float) -> None:
-        """No-op: the stepper has no pending events between requests."""
+        """Resolve deferred TPU decisions up to ``t`` (no-op under FCFS,
+        where the stepper has no pending events between requests)."""
+        if self._disc is not None:
+            self._advance_tpu(t)
 
     def drain(self) -> float:
-        """Nothing is ever in flight between steps; reports the horizon."""
+        """Run any deferred TPU work dry; reports the last completion
+        (under FCFS nothing is ever in flight between steps)."""
+        if self._disc is not None:
+            self._advance_tpu(math.inf)
         return self.last_completion
 
     def result(self, duration: float) -> SimResult:

@@ -290,7 +290,12 @@ def deterministic_trace(rates: list[float], duration: float) -> Trace:
         if lam <= 0:
             continue
         phase = (idx + 1) / (len(rates) + 1)
-        n = int(np.floor(duration * lam))
+        # Over-draw and filter: floor(duration * lam) draws dropped the last
+        # in-horizon arrival whenever the phase offset pushed index
+        # floor(duration * lam) back under the horizon (e.g. lam=1,
+        # duration=10.9, phase=0.5: the t=10.5 arrival) -- the same
+        # truncation class the Poisson generators' extension loop fixed.
+        n = int(np.ceil(duration * lam)) + 1
         times = (np.arange(n) + phase) / lam
         streams.append((idx, times[times < duration]))
     return _merge_streams(streams)

@@ -55,6 +55,33 @@ class TestRateEstimator:
         est.observe(0, 0.0)
         assert est.rates(0.0) == [0.0, 0.0]
 
+    def test_backdated_probe_is_monotone_safe(self):
+        # rates(t1) evicts stamps older than t1 - window; a later probe at
+        # t0 < t1 used to answer from the already-evicted window (an
+        # eviction-order-dependent estimate).  The clock now clamps to its
+        # high-water mark: the backdated probe answers at t1, and probing
+        # forward again is unchanged.
+        est = SlidingRateEstimator(1, window=10.0)
+        for t in (1.0, 2.0, 14.0, 15.0):
+            est.observe(0, t)
+        at_t1 = est.rates(16.0)  # evicts the 1.0/2.0 stamps
+        assert at_t1[0] == pytest.approx(2 / 10.0)
+        assert est.rates(8.0) == at_t1  # backdated probe: clamped, stable
+        assert est.rates(16.0) == at_t1
+
+    def test_boundary_stamp_is_idempotent(self):
+        # A stamp sitting exactly on the window edge (dq[0] == now - window)
+        # is kept by the strict < eviction; repeated evaluation at the same
+        # instant must count it every time, not evict it on the first pass
+        # and lose it on the second.
+        est = SlidingRateEstimator(1, window=10.0)
+        est.observe(0, 5.0)
+        est.observe(0, 12.0)
+        first = est.rates(15.0)  # 5.0 == 15.0 - 10.0: on the boundary
+        assert first[0] == pytest.approx(2 / 10.0)
+        assert est.rates(15.0) == first
+        assert est.rates(15.0) == first
+
 
 class TestAdaptiveController:
     def test_adapts_and_beats_static_full_tpu(self):

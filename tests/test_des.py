@@ -68,8 +68,15 @@ class TestDeterministicExact:
         assert res.latencies[0], "trace produced no recorded requests"
         for lat in res.latencies[0]:
             assert lat == pytest.approx(static, rel=1e-9)
-        # Post-warmup requests are all cache hits (single tenant).
-        assert res.observed_miss_rate(0) == 0.0
+        if plan.partition[0] > 0:
+            # Visited the TPU, never missed post-warmup (single tenant).
+            assert res.tpu_requests[0] > 0
+            assert res.observed_miss_rate(0) == 0.0
+        else:
+            # Full-CPU route: no TPU visits, so the miss rate is unknown
+            # (nan), not a perfect 0.0 hit rate.
+            assert res.tpu_requests[0] == 0
+            assert math.isnan(res.observed_miss_rate(0))
 
     def test_full_tpu(self):
         self._assert_static_exact("inceptionv4", Plan((11,), (0,)))

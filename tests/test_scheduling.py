@@ -1,0 +1,592 @@
+"""Tests for the pluggable TPU scheduling-discipline subsystem.
+
+Covers the acceptance contract of the scheduling PR:
+
+* discipline queue mechanics (``repro.serving.scheduling``): per-tenant
+  FIFO is never violated, the swap_batch fairness cap and staleness bound
+  hold, priority/weighted-fair select as specified;
+* FCFS stays the bitwise-pinned default -- a ``swap_batch`` spec with
+  ``batch_cap=1`` cannot batch and must run the native FCFS paths;
+* on a pinned swap-heavy 2-tenant mix, ``swap_batch`` measurably reduces
+  DES mean latency vs FCFS and the batch-amortized analytic model
+  (``queueing.swap_batch_amortization``) predicts the batched mean within
+  the model_vs_sim Poisson-row error band;
+* the batched plan evaluator equals the scalar objective under a batching
+  discipline (the PR-1 invariant extended);
+* planner co-optimization (``hill_climb(discipline_space=...)``) returns
+  the FCFS plan unchanged when batching is disabled and picks a batching
+  spec when it wins;
+* mid-flight discipline switches conserve requests in both simulators.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import paper_profile
+from repro.core import latency
+from repro.core.allocator import hill_climb, prop_alloc
+from repro.core.planner import FCFS, DisciplineSpec, Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import run_adaptive
+from repro.serving.des import DiscreteEventSimulator
+from repro.serving.scheduling import (
+    FcfsDiscipline,
+    PriorityDiscipline,
+    SwapBatchDiscipline,
+    WeightedFairDiscipline,
+    make_discipline,
+)
+from repro.serving.simulator import RuntimeSimulator, simulate
+from repro.serving.workload import Request, poisson_trace
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+SWAP_BATCH8 = DisciplineSpec("swap_batch", batch_cap=8)
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def _swap_pair(rate=10.0):
+    """The pinned swap-heavy mix: efficientnet+gpunet full-TPU exceed SRAM
+    together (Fig. 6's alpha ~ 0.5 regime) at ~0.72 FCFS utilization."""
+    return tenants_for(("efficientnet", rate), ("gpunet", rate)), Plan(
+        (6, 5), (0, 0)
+    )
+
+
+class TestDisciplineSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DisciplineSpec("lifo")
+        with pytest.raises(ValueError):
+            DisciplineSpec("swap_batch", batch_cap=0)
+        with pytest.raises(ValueError):
+            DisciplineSpec("swap_batch", staleness=0.0)
+        with pytest.raises(ValueError):
+            DisciplineSpec("priority", weights=(-1.0,))
+
+    def test_batches_property(self):
+        assert not FCFS.batches
+        assert not DisciplineSpec("swap_batch", batch_cap=1).batches
+        assert SWAP_BATCH8.batches
+        assert not DisciplineSpec("priority").batches
+
+    def test_plan_carries_discipline_and_defaults_to_fcfs(self):
+        plan = Plan((1,), (1,))
+        assert plan.discipline == FCFS
+        assert Plan((1,), (1,), SWAP_BATCH8) != plan
+
+    def test_weights_length_mismatch_rejected_at_build(self):
+        # The simulators build disciplines without validate_plan; a short
+        # weights tuple must fail at construction, not with an IndexError
+        # inside the first contended pop.
+        short = DisciplineSpec("priority", weights=(1.0,))
+        with pytest.raises(ValueError):
+            make_discipline(short, 2)
+        with pytest.raises(ValueError):
+            make_discipline(DisciplineSpec("weighted_fair", weights=(1.0,)), 3)
+        ts, plan = _swap_pair(rate=2.0)
+        with pytest.raises(ValueError):
+            simulate(
+                ts,
+                Plan(plan.partition, plan.cores, short),
+                HW,
+                poisson_trace([2.0, 2.0], 5.0, seed=0),
+                backend="des",
+            )
+
+    def test_make_discipline_returns_none_for_fcfs_equivalents(self):
+        assert make_discipline(FCFS, 2) is None
+        assert make_discipline(DisciplineSpec("swap_batch", batch_cap=1), 2) is None
+        assert isinstance(make_discipline(SWAP_BATCH8, 2), SwapBatchDiscipline)
+        assert isinstance(
+            make_discipline(DisciplineSpec("priority"), 2), PriorityDiscipline
+        )
+        assert isinstance(
+            make_discipline(DisciplineSpec("weighted_fair"), 2),
+            WeightedFairDiscipline,
+        )
+
+
+class TestQueueMechanics:
+    """Unit tests on the discipline objects (jobs are (model,) stubs)."""
+
+    def _drain(self, disc, run_model=None, now=0.0):
+        """Pop everything, tracking the server's run state as the
+        simulators do; returns the served job sequence."""
+        out, run_len = [], 0
+        while len(disc):
+            job = disc.pop(now, run_model, run_len)
+            if job[0] == run_model:
+                run_len += 1
+            else:
+                run_model, run_len = job[0], 1
+            out.append(job)
+        return out
+
+    def test_fcfs_is_global_fifo(self):
+        disc = FcfsDiscipline(FCFS, 3)
+        jobs = [(0, "a"), (1, "b"), (0, "c"), (2, "d"), (1, "e")]
+        for j, t in zip(jobs, range(5)):
+            disc.push(j, float(t))
+        assert self._drain(disc) == jobs
+
+    def test_swap_batch_extends_runs_but_never_reorders_within_tenant(self):
+        disc = SwapBatchDiscipline(SWAP_BATCH8, 2)
+        # Interleaved enqueue order; server currently running tenant 0.
+        seq = [(1, 0), (0, 1), (1, 2), (0, 3), (1, 4), (0, 5)]
+        for j, t in zip(seq, range(6)):
+            disc.push(j, float(t))
+        served = self._drain(disc, run_model=0)
+        # Tenant 0's jobs first (run extension), then tenant 1's -- and
+        # within each tenant strictly in enqueue order.
+        assert served == [(0, 1), (0, 3), (0, 5), (1, 0), (1, 2), (1, 4)]
+
+    def test_swap_batch_respects_fairness_cap(self):
+        cap = 3
+        disc = SwapBatchDiscipline(DisciplineSpec("swap_batch", batch_cap=cap), 2)
+        disc.push((1, "head"), 0.0)  # global FCFS head, other tenant
+        for k in range(6):
+            disc.push((0, k), 1.0 + k)
+        # Server has already served cap-1 consecutive tenant-0 jobs: one
+        # more extension is allowed, then the head must be served.
+        first = disc.pop(10.0, 0, cap - 1)
+        assert first == (0, 0)
+        second = disc.pop(10.0, 0, cap)
+        assert second == (1, "head")
+        # After the switch tenant 1 has nothing queued, so FCFS order
+        # resumes at tenant 0's earliest remaining job.
+        third = disc.pop(10.0, 1, 1)
+        assert third == (0, 1)
+
+    def test_swap_batch_head_never_overtaken_by_more_than_cap(self):
+        # System-level starvation bound: however long tenant 0's backlog,
+        # tenant 1's head job is served after at most batch_cap services.
+        cap = 4
+        disc = SwapBatchDiscipline(DisciplineSpec("swap_batch", batch_cap=cap), 2)
+        disc.push((1, "head"), 0.0)
+        for k in range(50):
+            disc.push((0, k), 0.1 + k)
+        served = self._drain(disc, run_model=0)
+        assert served.index((1, "head")) <= cap
+
+    def test_swap_batch_staleness_breaks_runs_early(self):
+        spec = DisciplineSpec("swap_batch", batch_cap=8, staleness=1.0)
+        disc = SwapBatchDiscipline(spec, 2)
+        disc.push((1, "old"), 0.0)
+        disc.push((0, "fresh"), 0.5)
+        # Head has waited 5 s > staleness 1 s: the run must break even
+        # though the cap would allow an extension.
+        assert disc.pop(5.0, 0, 1) == (1, "old")
+        # A fresh head lets the run extend.
+        disc.push((1, "new"), 5.0)
+        assert disc.pop(5.2, 0, 1) == (0, "fresh")
+
+    def test_priority_orders_by_weight_then_fifo(self):
+        disc = PriorityDiscipline(
+            DisciplineSpec("priority", weights=(0.0, 5.0, 1.0)), 3
+        )
+        jobs = [(0, "a"), (2, "b"), (1, "c"), (1, "d"), (2, "e")]
+        for j, t in zip(jobs, range(5)):
+            disc.push(j, float(t))
+        assert self._drain(disc) == [
+            (1, "c"), (1, "d"), (2, "b"), (2, "e"), (0, "a")
+        ]
+
+    def test_weighted_fair_converges_to_weight_shares(self):
+        disc = WeightedFairDiscipline(
+            DisciplineSpec("weighted_fair", weights=(3.0, 1.0)), 2
+        )
+        for k in range(40):
+            disc.push((0, k), float(k))
+            disc.push((1, k), float(k) + 0.5)
+        served, counts = [], [0, 0]
+        run_model, run_len = None, 0
+        for _ in range(20):
+            job = disc.pop(100.0, run_model, run_len)
+            run_model = job[0]
+            counts[job[0]] += 1
+            disc.charge(job[0], 1.0)  # unit service per job
+            served.append(job)
+        # 3:1 weights with equal unit services -> ~3:1 service counts.
+        assert counts[0] == pytest.approx(15, abs=1)
+        # Per-tenant FIFO within the interleaving.
+        for i in (0, 1):
+            mine = [j[1] for j in served if j[0] == i]
+            assert mine == sorted(mine)
+
+    def test_drain_rows_preserves_global_enqueue_order(self):
+        disc = SwapBatchDiscipline(SWAP_BATCH8, 3)
+        jobs = [(2, "a"), (0, "b"), (1, "c"), (0, "d")]
+        for j, t in zip(jobs, range(4)):
+            disc.push(j, float(t))
+        rows = disc.drain_rows()
+        assert [job for _, _, job in rows] == jobs
+        assert len(disc) == 0
+
+
+class TestFcfsStaysPinned:
+    """A cap-1 swap_batch spec cannot batch: both simulators must take the
+    native FCFS paths and reproduce the default-plan run bitwise."""
+
+    def test_cap_one_is_bitwise_fcfs(self):
+        ts, plan = _swap_pair(rate=6.0)
+        trace = poisson_trace([6.0, 6.0], 300.0, seed=3)
+        cap1 = Plan(plan.partition, plan.cores, DisciplineSpec("swap_batch"))
+        for backend in ("des", "stepper"):
+            a = simulate(ts, plan, HW, trace, backend=backend)
+            b = simulate(ts, cap1, HW, trace, backend=backend)
+            for x, y in zip(a.latencies, b.latencies):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+            assert a.misses == b.misses
+            assert a.tpu_busy == b.tpu_busy
+
+    def test_single_tenant_swap_batch_equals_fcfs(self):
+        # One tenant has nothing to batch: the deferred machinery must
+        # reproduce the scalar FCFS stepper's observables bitwise (same
+        # service order, same per-request float ops).
+        ts = tenants_for(("inceptionv4", 2.0))
+        plan_f = Plan((9,), (4,))
+        plan_b = Plan((9,), (4,), SWAP_BATCH8)
+        trace = poisson_trace([2.0], 300.0, seed=4)
+        a = simulate(ts, plan_f, HW, trace, backend="stepper")
+        b = simulate(ts, plan_b, HW, trace, backend="stepper")
+        assert np.array_equal(np.asarray(a.latencies[0]), np.asarray(b.latencies[0]))
+        assert a.misses == b.misses and a.tpu_requests == b.tpu_requests
+
+
+class TestSwapBatchSystemBehavior:
+    def _run(self, spec, *, rate=10.0, duration=1500.0, backend="des"):
+        ts, base = _swap_pair(rate)
+        plan = Plan(base.partition, base.cores, spec)
+        trace = poisson_trace([rate, rate], duration, seed=1)
+        return ts, plan, simulate(ts, plan, HW, trace, backend=backend)
+
+    def test_per_tenant_fifo_preserved(self):
+        # Full-TPU routes: completion order == service order, so sorted
+        # per-model arrival recordings prove the discipline never reordered
+        # within a tenant.
+        _, _, res = self._run(SWAP_BATCH8, duration=400.0)
+        for i in range(2):
+            arr = np.asarray(res.arrivals[i])
+            assert arr.size > 100
+            assert np.all(arr[1:] >= arr[:-1])
+
+    def test_pinned_mix_swap_batch_beats_fcfs_and_model_predicts_it(self):
+        """The acceptance row: measured amortization win + model accuracy.
+
+        Measured on this seed: FCFS mean 89.2 ms -> swap_batch(8) 67.9 ms
+        (-24%), DES-observed; the batch-amortized analytic model predicts
+        72.1 ms (+6.1% of observed).  The 12% assertion band is the
+        model_vs_sim Poisson-row band (the same tolerance
+        tests/test_des.py grants the FCFS model on its home turf).
+        """
+        rates = [10.0, 10.0]
+        ts, plan_f, fcfs = self._run(FCFS)
+        _, plan_b, batched = self._run(SWAP_BATCH8)
+        obs_f = fcfs.request_weighted_mean(rates)
+        obs_b = batched.request_weighted_mean(rates)
+        # Measurable amortization win (measured ~24%; assert >15%).
+        assert obs_b < 0.85 * obs_f
+        # Fewer swap-ins is the mechanism, not a side effect.
+        for i in range(2):
+            assert batched.observed_miss_rate(i) < fcfs.observed_miss_rate(i)
+        # The extended analytic model predicts both means within the
+        # Poisson-row band.
+        pred_f = latency.predict(ts, plan_f, HW).mean_latency(ts)
+        pred_b = latency.predict(ts, plan_b, HW).mean_latency(ts)
+        assert pred_f == pytest.approx(obs_f, rel=0.12)
+        assert pred_b == pytest.approx(obs_b, rel=0.12)
+        # And the predicted ordering matches the observed one.
+        assert pred_b < pred_f
+
+    def test_heterogeneous_input_transfers_match_des(self):
+        # Regression: the stepper's deferred loop once advanced to the
+        # offered job's own enqueue time (arrival + input_xfer), finalizing
+        # service decisions past enqueues of models with *smaller* input
+        # transfers -- latent on the paper profiles (all share input_bytes)
+        # but real decision-order divergence on any heterogeneous pair.
+        import dataclasses
+
+        eff = paper_profile("efficientnet")
+        gpu = dataclasses.replace(
+            paper_profile("gpunet"), input_bytes=15_000_000
+        )
+        ts = [TenantSpec(eff, 10.0), TenantSpec(gpu, 10.0)]
+        plan = Plan((6, 5), (0, 0), SWAP_BATCH8)
+        trace = poisson_trace([10.0, 10.0], 300.0, seed=1)
+        des = simulate(ts, plan, HW, trace, backend="des")
+        st = simulate(ts, plan, HW, trace, backend="stepper")
+        assert des.misses == st.misses
+        for i in range(2):
+            d = sorted(zip(des.arrivals[i], des.latencies[i]))
+            s = sorted(
+                zip(
+                    np.asarray(st.arrivals[i]).tolist(),
+                    np.asarray(st.latencies[i]).tolist(),
+                )
+            )
+            for (at_d, a), (at_s, b) in zip(d, s):
+                assert at_d == at_s
+                assert a == pytest.approx(b, rel=1e-12, abs=1e-15)
+
+    def test_des_and_stepper_agree_under_swap_batch(self):
+        rates = [10.0, 10.0]
+        _, _, des = self._run(SWAP_BATCH8, duration=500.0, backend="des")
+        _, _, st = self._run(SWAP_BATCH8, duration=500.0, backend="stepper")
+        assert des.tpu_requests == st.tpu_requests
+        for i in range(2):
+            assert des.mean_latency(i) == pytest.approx(
+                st.mean_latency(i), rel=0.05
+            )
+            assert des.observed_miss_rate(i) == pytest.approx(
+                st.observed_miss_rate(i), abs=0.05
+            )
+
+    def test_amortized_objective_monotone_in_cap(self):
+        ts, plan = _swap_pair()
+        objs = []
+        for cap in (1, 2, 4, 8, 16):
+            spec = DisciplineSpec("swap_batch", batch_cap=cap)
+            p = Plan(plan.partition, plan.cores, spec)
+            objs.append(latency.objective(ts, p, HW))
+        assert objs[0] == latency.objective(ts, plan, HW)  # cap 1 == FCFS
+        for a, b in zip(objs, objs[1:]):
+            assert b <= a + 1e-12  # a larger cap never predicts worse
+
+    def test_staleness_throttled_spec_priced_near_fcfs(self):
+        # Regression: the analytic model once ignored staleness, pricing a
+        # throttled swap_batch spec at the full amortization win while the
+        # DES (whose runs the bound keeps breaking) stayed at FCFS latency
+        # -- a planner mis-commitment.  The freshness factor collapses the
+        # predicted win as staleness drops below the queueing delay.
+        ts, plan = _swap_pair()
+        pred_fcfs = latency.predict(ts, plan, HW).mean_latency(ts)
+        means = []
+        for stale in (math.inf, 0.1, 0.001):
+            spec = DisciplineSpec("swap_batch", batch_cap=8, staleness=stale)
+            p = Plan(plan.partition, plan.cores, spec)
+            means.append(latency.predict(ts, p, HW).mean_latency(ts))
+        unthrottled, mild, throttled = means
+        assert unthrottled < mild < throttled <= pred_fcfs
+        # Tight staleness ~ FCFS (within 1%); inf keeps the full win.
+        assert throttled == pytest.approx(pred_fcfs, rel=0.01)
+        assert unthrottled < 0.9 * pred_fcfs
+        # And the DES agrees the throttled discipline behaves like FCFS.
+        rate = ts[0].rate
+        trace = poisson_trace([rate, rate], 400.0, seed=1)
+        obs_f = simulate(ts, plan, HW, trace, backend="des")
+        obs_t = simulate(
+            ts,
+            Plan(
+                plan.partition,
+                plan.cores,
+                DisciplineSpec("swap_batch", batch_cap=8, staleness=0.001),
+            ),
+            HW,
+            trace,
+            backend="des",
+        )
+        assert obs_t.request_weighted_mean([rate, rate]) == pytest.approx(
+            obs_f.request_weighted_mean([rate, rate]), rel=0.05
+        )
+
+    def test_batch_equals_scalar_for_batching_discipline(self):
+        # The PR-1 batch == scalar invariant, extended to swap_batch.
+        ts, _ = _swap_pair()
+        parts, cores_l, scal = [], [], []
+        for p1 in range(0, 7):
+            for p2 in range(0, 6):
+                try:
+                    k = prop_alloc(ts, [p1, p2], K_MAX)
+                except ValueError:
+                    continue
+                parts.append([p1, p2])
+                cores_l.append(list(k))
+                scal.append(
+                    latency.penalized_objective(
+                        ts, Plan((p1, p2), k, SWAP_BATCH8), HW
+                    )
+                )
+        batched = latency.penalized_objective_batch(
+            ts, np.array(parts), np.array(cores_l), HW, discipline=SWAP_BATCH8
+        )
+        np.testing.assert_allclose(batched, np.array(scal), rtol=1e-9)
+
+    def test_delta_batch_matches_full_batch_for_discipline(self):
+        ts, _ = _swap_pair()
+        base_p = np.array([6, 5])
+        base_k = np.array([0, 0])
+        parts = np.array([[5, 5], [6, 4], [4, 5], [6, 5]])
+        cores = np.array([[1, 0], [0, 1], [2, 0], [0, 0]])
+        full = latency.penalized_objective_batch(
+            ts, parts, cores, HW, discipline=SWAP_BATCH8
+        )
+        delta = latency.penalized_objective_delta_batch(
+            ts, base_p, base_k, parts, cores, HW, discipline=SWAP_BATCH8
+        )
+        np.testing.assert_allclose(delta, full, rtol=1e-9)
+
+
+class TestPlannerCoOptimization:
+    def test_disabled_batching_returns_fcfs_plan_unchanged(self):
+        ts, _ = _swap_pair()
+        base_plan, base_obj = hill_climb(ts, HW, K_MAX)
+        space = (FCFS, DisciplineSpec("swap_batch", batch_cap=1))
+        plan, obj = hill_climb(ts, HW, K_MAX, discipline_space=space)
+        assert plan == base_plan
+        assert obj == base_obj
+        assert plan.discipline == FCFS
+
+    def test_tie_breaks_to_non_batching_regardless_of_order(self):
+        # On a no-swap mix (prefixes co-resident in SRAM) batching prices
+        # identically but measurably hurts the simulated system: a
+        # predicted tie must resolve to the FCFS-equivalent plan even when
+        # the caller lists the batching spec first.
+        ts = tenants_for(("mobilenetv2", 3.0), ("squeezenet", 3.0))
+        base_plan, base_obj = hill_climb(ts, HW, K_MAX)
+        plan, obj = hill_climb(
+            ts, HW, K_MAX, discipline_space=(SWAP_BATCH8, FCFS)
+        )
+        assert obj == base_obj
+        assert plan.discipline == FCFS
+        assert plan == base_plan
+        # Same for a priority spec the mean objective cannot separate from
+        # FCFS: the tie must not commit the starvation-capable discipline.
+        pri = DisciplineSpec("priority", weights=(1.0, 0.0))
+        plan2, obj2 = hill_climb(
+            ts, HW, K_MAX, discipline_space=(pri, SWAP_BATCH8, FCFS)
+        )
+        assert plan2.discipline == FCFS
+        assert obj2 == base_obj
+        # Without FCFS in the space, the first-listed non-batching spec
+        # represents the (identically-priced) non-batching group.
+        plan3, _ = hill_climb(ts, HW, K_MAX, discipline_space=(pri,))
+        assert plan3.discipline == pri
+
+    def test_joint_search_commits_batching_when_it_wins(self):
+        ts, _ = _swap_pair()
+        base_plan, base_obj = hill_climb(ts, HW, K_MAX)
+        space = (
+            FCFS,
+            DisciplineSpec("swap_batch", batch_cap=4),
+            SWAP_BATCH8,
+        )
+        plan, obj = hill_climb(ts, HW, K_MAX, discipline_space=space)
+        # On the swap-thrashing pair amortization strictly improves the
+        # predicted objective, so the joint optimum batches.
+        assert plan.discipline.batches
+        assert obj < base_obj
+
+    def test_fixed_discipline_climb_carries_spec(self):
+        ts, _ = _swap_pair()
+        plan, _ = hill_climb(ts, HW, K_MAX, discipline=SWAP_BATCH8)
+        assert plan.discipline == SWAP_BATCH8
+
+    def test_run_adaptive_co_optimizes_discipline(self):
+        profiles = [paper_profile("efficientnet"), paper_profile("gpunet")]
+        trace = poisson_trace([10.0, 10.0], 150.0, seed=5)
+        space = (FCFS, SWAP_BATCH8)
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            initial_rates=(10.0, 10.0),
+            discipline_space=space,
+        )
+        assert all(p.discipline in space for p in res.plans)
+        assert sum(len(l) for l in res.sim.latencies) > 0
+        # On this mix the joint search should commit batching at least once.
+        assert any(p.discipline.batches for p in res.plans)
+
+    def test_run_adaptive_accepts_kwargs_planner(self):
+        # A **kwargs wrapper around hill_climb accepts discipline_space
+        # without naming it; the support check must not reject it.
+        def wrapper(*args, **kwargs):
+            return hill_climb(*args, **kwargs)
+
+        profiles = [paper_profile("mnasnet")]
+        trace = poisson_trace([2.0], 40.0, seed=6)
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            discipline_space=(FCFS,),
+            planner=wrapper,
+            initial_rates=(2.0,),
+        )
+        assert all(p.discipline == FCFS for p in res.plans)
+
+    def test_run_adaptive_rejects_unsupporting_planner(self):
+        def naive_planner(tenants, platform, k_max):
+            return hill_climb(tenants, platform, k_max)
+
+        profiles = [paper_profile("mnasnet")]
+        trace = poisson_trace([2.0], 50.0, seed=6)
+        with pytest.raises(ValueError):
+            run_adaptive(
+                profiles,
+                trace,
+                HW,
+                K_MAX,
+                discipline_space=(FCFS,),
+                planner=naive_planner,
+            )
+
+
+class TestMidFlightDisciplineSwitch:
+    def test_des_switch_conserves_requests(self):
+        profiles = [paper_profile("efficientnet"), paper_profile("gpunet")]
+        plans = [
+            Plan((6, 5), (0, 0)),
+            Plan((6, 5), (0, 0), SWAP_BATCH8),
+            Plan((6, 5), (0, 0), DisciplineSpec("priority", weights=(1.0, 0.0))),
+            Plan((6, 5), (0, 0)),
+        ]
+        reqs = poisson_trace([8.0, 8.0], 40.0, seed=7)
+        des = DiscreteEventSimulator(profiles, plans[0], HW)
+        next_switch, pi = 10.0, 1
+        for r in reqs:
+            while r.arrival >= next_switch:
+                des.advance_to(next_switch)
+                des.set_plan(plans[pi % len(plans)], now=next_switch)
+                pi += 1
+                next_switch += 10.0
+            des.offer(r)
+        des.drain()
+        assert sum(len(l) for l in des.latencies) == len(reqs)
+        assert all(l >= 0.0 for ls in des.latencies for l in ls)
+
+    def test_stepper_switch_conserves_requests(self):
+        profiles = [paper_profile("efficientnet"), paper_profile("gpunet")]
+        plans = [
+            Plan((6, 5), (0, 0), SWAP_BATCH8),
+            Plan((6, 5), (0, 0)),  # back to FCFS with work in flight
+            Plan((6, 5), (0, 0), SWAP_BATCH8),
+        ]
+        reqs = poisson_trace([8.0, 8.0], 30.0, seed=8)
+        sim = RuntimeSimulator(profiles, plans[0], HW)
+        next_switch, pi = 10.0, 1
+        for r in reqs:
+            while r.arrival >= next_switch:
+                sim.advance_to(next_switch)
+                sim.set_plan(plans[pi % len(plans)], now=next_switch)
+                pi += 1
+                next_switch += 10.0
+            sim.offer(r)
+        sim.drain()
+        assert sum(len(l) for l in sim.latencies) == len(reqs)
+
+    def test_step_rejected_under_non_fcfs(self):
+        sim = RuntimeSimulator(
+            [paper_profile("mnasnet")], Plan((7,), (0,), SWAP_BATCH8), HW
+        )
+        with pytest.raises(ValueError):
+            sim.step(Request(0, 0.0))

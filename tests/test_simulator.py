@@ -148,9 +148,27 @@ class TestSimResultMetrics:
         with pytest.raises(ValueError):
             res.request_weighted_mean([1.0])
 
-    def test_request_weighted_mean_zero_rates(self):
+    def test_request_weighted_mean_zero_rates_is_nan(self):
+        # All-zero weights leave the rate-weighted mean undefined -- nan per
+        # the unknown-not-zero convention (the pre-fix 0.0 silently ranked
+        # below every real latency).
         res = _result_with([[1.0], [2.0]])
-        assert res.request_weighted_mean([0.0, 0.0]) == 0.0
+        assert math.isnan(res.request_weighted_mean([0.0, 0.0]))
+
+    def test_observed_miss_rate_no_tpu_visits_is_nan(self):
+        # "No TPU visits" is unknown (nan); "visited, never missed" is 0.0.
+        res = _result_with([[1.0], [2.0]])
+        assert res.tpu_requests == [0, 0]
+        assert math.isnan(res.observed_miss_rate(0))
+        visited = SimResult(
+            latencies=[[1.0]],
+            arrivals=[[0.0]],
+            tpu_busy=0.0,
+            duration=1.0,
+            misses=[0],
+            tpu_requests=[5],
+        )
+        assert visited.observed_miss_rate(0) == 0.0
 
     def test_request_weighted_mean_skips_unobserved_models(self):
         # A tenant with no recorded samples (all arrivals in warmup) has an
@@ -201,6 +219,9 @@ class TestSimulatorVsAnalytic:
         ts = tenants_for(("mobilenetv2", 3.0), ("squeezenet", 3.0))
         plan = Plan((5, 2), (0, 0))
         sim, pred = self._compare(ts, plan)
+        # Both tenants visited the TPU and never missed -- a true 0.0, which
+        # the nan convention distinguishes from "never visited".
+        assert sim.tpu_requests[0] > 0 and sim.tpu_requests[1] > 0
         assert sim.observed_miss_rate(0) == 0.0
         assert sim.observed_miss_rate(1) == 0.0
         assert pred.alphas == (0.0, 0.0)

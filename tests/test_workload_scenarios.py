@@ -80,10 +80,24 @@ class TestGeneratorProperties:
     def test_deterministic_well_formed(self, rates, duration):
         reqs = deterministic_trace(rates, duration)
         _assert_trace_well_formed(reqs, len(rates), duration)
-        # Exact count: floor(duration * rate) arrivals per model.
+        # Every in-horizon arrival is kept: the count per model is within
+        # one of duration * rate (the phase offset decides which side of
+        # floor(duration * rate) it lands on; the pre-fix floor() draw
+        # could silently drop the last in-horizon arrival).
         for i, lam in enumerate(rates):
             n = sum(1 for r in reqs if r.model_idx == i)
-            assert n <= math.floor(duration * lam)
+            assert abs(n - duration * lam) <= 1.0
+
+    def test_deterministic_keeps_last_in_horizon_arrival(self):
+        # Regression for the floor() over-draw bug: with lam=1, duration=10.9
+        # the single stream's phase is (0+1)/(1+1) = 0.5, so arrivals sit at
+        # 0.5, 1.5, ..., 10.5 -- eleven of them, but floor(10.9) = 10 draws
+        # silently dropped the t=10.5 arrival.
+        trace = deterministic_trace([1.0], 10.9)
+        times = trace.arrival.tolist()
+        assert len(times) == 11
+        assert times[-1] == 10.5
+        assert all(t < 10.9 for t in times)
 
     def test_deterministic_equal_rates_never_collide(self):
         # Per-stream phase offsets keep equal-rate streams disjoint; a
@@ -243,6 +257,135 @@ class TestJsonReplay:
         a = simulate(ts, plan, HW, trace, backend="des")
         b = simulate(ts, plan, HW, replay, backend="des")
         assert a.latencies == b.latencies
+
+
+class TestTraceProtocol:
+    """Edge cases of the ``Trace`` sequence protocol -- the replay contract
+    every simulator driver leans on (``__getitem__``/``__iter__``/``__eq__``
+    must behave exactly like the ``list[Request]`` they replaced)."""
+
+    def _trace(self, seed=0):
+        return with_service_jitter(
+            poisson_trace([3.0, 1.0], 40.0, seed=seed), sigma=0.4, seed=seed + 1
+        )
+
+    @given(seed=st.integers(0, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_getitem_matches_list_semantics(self, seed):
+        tr = self._trace(seed)
+        as_list = tr.to_requests()
+        n = len(tr)
+        assert n == len(as_list)
+        for i in (0, 1, n - 1, -1, -2, -n):
+            assert tr[i] == as_list[i]
+        with pytest.raises(IndexError):
+            tr[n]
+        with pytest.raises(IndexError):
+            tr[-n - 1]
+
+    @given(
+        seed=st.integers(0, 50),
+        start=st.integers(-5, 5),
+        stop=st.integers(-5, 5),
+        step=st.integers(-3, 3),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_slices_match_list_semantics(self, seed, start, stop, step):
+        if step == 0:
+            step = None
+        tr = self._trace(seed)
+        as_list = tr.to_requests()
+        sl = slice(start, stop, step)
+        assert tr[sl].to_requests() == as_list[sl]
+
+    def test_empty_and_step_slices(self):
+        tr = self._trace()
+        assert len(tr[5:5]) == 0
+        assert tr[5:5] == []
+        assert tr[:] == tr
+        half = tr[::2]
+        assert half.is_sorted  # positive-step slice of a sorted trace
+        rev = tr[::-1]
+        assert rev.to_requests() == tr.to_requests()[::-1]
+        # A reversed nonempty trace with distinct stamps is not sorted; the
+        # flag must be recomputed, not inherited.
+        if len(tr) > 1 and tr.arrival[0] != tr.arrival[-1]:
+            assert not rev.is_sorted
+            assert rev.sorted_by_arrival() == tr
+
+    def test_zero_length_trace(self):
+        import numpy as np
+
+        empty = poisson_trace([0.0], 10.0)
+        assert len(empty) == 0
+        assert list(empty) == []
+        assert empty == []
+        assert empty.is_sorted
+        assert empty.scale_is_unit
+        assert empty.sorted_by_arrival() is empty
+        assert len(empty[0:0]) == 0
+        assert trace_from_json(trace_to_json(empty)) == empty
+        sliced = self._trace()[3:3]
+        assert np.array_equal(sliced.arrival, np.empty(0))
+
+    def test_eq_against_request_sequences_and_mismatches(self):
+        tr = self._trace()
+        reqs = tr.to_requests()
+        assert tr == reqs
+        assert tr == tuple(reqs)
+        assert tr != reqs[:-1]
+        assert tr != [*reqs[:-1], Request(0, reqs[-1].arrival + 1.0)]
+        assert (tr == "not a trace") is False
+        assert tr != object()
+        jit = with_service_jitter(tr, sigma=0.3, seed=99)
+        assert tr != jit  # same arrivals, different service scales
+
+
+class TestGeneratorJsonRoundTrip:
+    """Every generator's output must survive ``trace_to_json`` /
+    ``trace_from_json`` bit-identically -- the replay contract had coverage
+    only for Poisson(+jitter) traces before; MMPP/diurnal/churn replay
+    drives re-runs of every model_vs_sim scenario row."""
+
+    @given(seed=st.integers(0, 30))
+    @settings(max_examples=8, deadline=None)
+    def test_every_generator_round_trips_bitwise(self, seed):
+        import numpy as np
+
+        duration = 60.0
+        rates = [2.0, 1.0]
+        traces = {
+            "poisson": poisson_trace(rates, duration, seed=seed),
+            "deterministic": deterministic_trace(rates, duration),
+            "dynamic": dynamic_trace(
+                [
+                    RatePhase(0.0, 30.0, (2.0, 0.5)),
+                    RatePhase(30.0, 60.0, (0.5, 2.0)),
+                ],
+                seed=seed,
+            ),
+            "mmpp": mmpp_trace(
+                rates, duration, burst_factor=3.0, mean_normal=20.0,
+                mean_burst=8.0, seed=seed,
+            ),
+            "diurnal": diurnal_trace(
+                rates, duration, amplitude=0.7, period=30.0, seed=seed
+            ),
+            "churn": tenant_churn_trace(
+                rates, duration, mean_session=25.0, mean_absence=15.0,
+                seed=seed,
+            ).requests,
+            "jitter": with_service_jitter(
+                mmpp_trace(rates, duration, seed=seed), sigma=0.9,
+                seed=seed + 1,
+            ),
+        }
+        for name, tr in traces.items():
+            back = trace_from_json(trace_to_json(tr))
+            assert np.array_equal(back.model_idx, tr.model_idx), name
+            assert np.array_equal(back.arrival, tr.arrival), name
+            assert np.array_equal(back.service_scale, tr.service_scale), name
+            assert back == tr, name
 
 
 class TestDynamicPhases:
