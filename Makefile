@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke bench-sched
+.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -36,3 +36,10 @@ bench-smoke:
 # swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
 bench-sched:
 	$(PYTHON) -m benchmarks.scheduling --out BENCH_scheduling.json
+
+# Full JAX replica-engine throughput sweep (self-checks statistical
+# equivalence vs the NumPy stepper before timing); records
+# BENCH_jax_throughput.json. CPU-jax fallback numbers unless an
+# accelerator-backed jax is installed -- the JSON says which.
+bench-jax:
+	$(PYTHON) -m benchmarks.jax_throughput --out BENCH_jax_throughput.json

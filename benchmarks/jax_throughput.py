@@ -1,0 +1,271 @@
+"""JAX Monte-Carlo replica-sweep throughput vs the NumPy stepper.
+
+The workload is the paper's Monte-Carlo robustness sweep: R service-jitter
+replicas of one collab8 arrival trace (shared arrival order, per-model
+service scales -- measurement-uncertainty MC over the profiled service
+times).  Three engines price it:
+
+* ``jax_replicas`` -- ``JaxStepper.run_trace_replicas``: routing, miss
+  replay, and enqueue clocks hoisted once, all R busy-period recurrences
+  resolved in a handful of fused jitted scans (float32, statistical-
+  equivalence contract);
+* ``numpy_replicas`` -- the vectorized NumPy stepper (``run_trace``)
+  looped over replicas: the bitwise-pinned fast path, paying the full
+  per-replica pipeline R times;
+* ``numpy_scalar_replicas`` -- the scalar per-request reference driver
+  (``vectorize=False``), the seed semantics baseline.  Timed on one
+  replica and extrapolated x R (its per-replica cost is constant); the
+  row says so.
+
+Self-check before timing, as in ``sim_throughput``: the replica engine's
+per-replica per-model mean latencies must match per-replica NumPy
+``simulate`` runs within float32 tolerance (and integer observables
+exactly) before any timing is recorded.
+
+Honesty note (the recorded ``BENCH_jax_throughput.json``): on a CPU-only
+jax install (``platform: "cpu"``, the CI fallback) the vectorized-stepper
+speedup lands around 3-4x on a single core -- both engines are memory-
+bound on the same recurrences, and XLA:CPU buys no extra parallelism.
+The ISSUE's >= 5x target presumes an accelerator-backed jax; the scalar
+reference comparison (the same baseline the sim_throughput headline is
+defined against) clears it by an order of magnitude either way.  The
+headline records both, never a blended number.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import HW, Row
+from benchmarks.sim_throughput import _mixes
+from repro.serving.simulator import make_backend, simulate
+from repro.serving.workload import Trace
+
+# Per-tenant offered rates: squeezenet's 56 ms full-TPU service saturates
+# the collab8 mix at the symmetric sim_throughput rates, so the MC sweep
+# runs the asymmetric split that lands at ~0.6 TPU utilization -- queueing
+# is live (delays matter) but stable (the sweep prices a servable system).
+_RATES = [2.4] * 4 + [15.0] * 4
+
+
+def _collab8():
+    ts, plan, _ = _mixes()["collab8"]
+    return ts, plan
+
+
+def _trace_for(size: int, seed: int) -> Trace:
+    rng = np.random.default_rng(seed)
+    lam = float(sum(_RATES))
+    arr = np.cumsum(rng.exponential(1.0 / lam, size))
+    mi = rng.choice(
+        len(_RATES), size=size, p=np.asarray(_RATES) / lam
+    ).astype(np.int64)
+    return Trace(mi, arr)
+
+
+def _scales_for(n_replicas: int, n_models: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    return rng.uniform(0.8, 1.25, size=(n_replicas, n_models))
+
+
+def _self_check(ts, plan, seed: int) -> None:
+    """Statistical equivalence on a small instance, before any timing."""
+    profs = [t.profile for t in ts]
+    trace = _trace_for(5_000, seed)
+    scales = _scales_for(3, len(profs), seed)
+    sim = make_backend("jax", profs, plan, HW)
+    stats = sim.run_trace_replicas(trace, scales)
+    for r in range(scales.shape[0]):
+        tr = Trace(trace.model_idx, trace.arrival, scales[r][trace.model_idx])
+        ref = simulate(ts, plan, HW, tr, warmup_frac=0.0)
+        assert list(stats.misses) == ref.misses, "miss pattern diverged"
+        for m in range(len(profs)):
+            assert stats.counts[m] == len(ref.latencies[m])
+            rm = ref.mean_latency(m)
+            if not abs(stats.mean_latency[r, m] - rm) <= 1e-3 * rm + 1e-9:
+                raise AssertionError(
+                    f"replica {r} model {m}: jax mean "
+                    f"{stats.mean_latency[r, m]} vs numpy {rm}"
+                )
+
+
+def measure(
+    *,
+    sizes: list[int],
+    n_replicas: int = 32,
+    seed: int = 0,
+    check: bool = True,
+    reps: int = 2,
+) -> dict:
+    import jax
+
+    ts, plan = _collab8()
+    profs = [t.profile for t in ts]
+    if check:
+        _self_check(ts, plan, seed)
+
+    rows: list[dict] = []
+    for size in sizes:
+        trace = _trace_for(size, seed)
+        scales = _scales_for(n_replicas, len(profs), seed)
+        mi = trace.model_idx
+
+        sim = make_backend("jax", profs, plan, HW)
+        t0 = time.perf_counter()
+        sim.run_trace_replicas(trace, scales)  # compile + first run
+        first = time.perf_counter() - t0
+        dt_jax = math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sim.run_trace_replicas(trace, scales)
+            dt_jax = min(dt_jax, time.perf_counter() - t0)
+
+        dt_np = math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for r in range(n_replicas):
+                tr = Trace(mi, trace.arrival, scales[r][mi])
+                simulate(ts, plan, HW, tr, warmup_frac=0.0)
+            dt_np = min(dt_np, time.perf_counter() - t0)
+
+        # Scalar reference: one replica, extrapolated (constant per-replica
+        # cost; running all R at 1M rows would take minutes for no extra
+        # information).
+        tr0 = Trace(mi, trace.arrival, scales[0][mi])
+        dt_sc1 = math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            simulate(ts, plan, HW, tr0, warmup_frac=0.0, vectorize=False)
+            dt_sc1 = min(dt_sc1, time.perf_counter() - t0)
+        dt_sc = dt_sc1 * n_replicas
+
+        for engine, dt, note in (
+            ("jax_replicas", dt_jax, f"compile_first_run={first:.3f}s"),
+            ("numpy_replicas", dt_np, "vectorized run_trace per replica"),
+            (
+                "numpy_scalar_replicas",
+                dt_sc,
+                f"extrapolated: one replica timed ({dt_sc1:.3f}s) x R",
+            ),
+        ):
+            rows.append(
+                {
+                    "mix": "collab8",
+                    "engine": engine,
+                    "n_requests": size,
+                    "n_replicas": n_replicas,
+                    "seconds": dt,
+                    "replica_requests_per_sec": size * n_replicas / dt,
+                    "note": note,
+                }
+            )
+
+    def largest(engine: str) -> dict | None:
+        sel = sorted(
+            (r for r in rows if r["engine"] == engine),
+            key=lambda r: r["n_requests"],
+        )
+        return sel[-1] if sel else None
+
+    jx, vec, sc = (
+        largest("jax_replicas"),
+        largest("numpy_replicas"),
+        largest("numpy_scalar_replicas"),
+    )
+    headline: dict = {}
+    if jx and vec:
+        headline["n_requests"] = jx["n_requests"]
+        headline["n_replicas"] = jx["n_replicas"]
+        headline["speedup_vs_vectorized_stepper"] = (
+            vec["seconds"] / jx["seconds"]
+        )
+    if jx and sc:
+        headline["speedup_vs_scalar_stepper"] = sc["seconds"] / jx["seconds"]
+
+    platform = jax.default_backend()
+    return {
+        "benchmark": "jax_throughput",
+        "sizes": sizes,
+        "n_replicas": n_replicas,
+        "seed": seed,
+        "reps": reps,
+        "equivalence_checked": bool(check),
+        "platform": platform,
+        "cpu_fallback": platform == "cpu",
+        "note": (
+            "speedup_vs_vectorized_stepper is the like-for-like engine "
+            "comparison; on the cpu jax fallback it sits well below the "
+            "accelerator target (see benchmarks/README.md). "
+            "speedup_vs_scalar_stepper is against the seed scalar "
+            "reference driver."
+        ),
+        "headline": headline,
+        "rows": rows,
+    }
+
+
+def _rows_of(report: dict) -> list[Row]:
+    return [
+        Row(
+            f"jax_throughput/{r['mix']}/{r['engine']}"
+            f"/n{r['n_requests']}xR{r['n_replicas']}",
+            1e6 * r["seconds"] / (r["n_requests"] * r["n_replicas"]),
+            f"replica_reqs_per_sec={r['replica_requests_per_sec']:.0f}",
+        )
+        for r in report["rows"]
+    ]
+
+
+def run() -> list[Row]:
+    """benchmarks.run harness entry point: the smoke-sized sweep."""
+    return _rows_of(measure(sizes=[10_000], n_replicas=8, reps=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="10k-request traces, R=8: CI sanity, not a perf record",
+    )
+    ap.add_argument(
+        "--sizes",
+        type=lambda s: [int(x) for x in s.split(",")],
+        default=None,
+    )
+    ap.add_argument("--replicas", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_jax_throughput.json")
+    args = ap.parse_args()
+    sizes = args.sizes if args.sizes is not None else (
+        [10_000] if args.smoke else [100_000, 1_000_000]
+    )
+    n_replicas = args.replicas if args.replicas is not None else (
+        8 if args.smoke else 32
+    )
+    reps = args.reps if args.reps is not None else (1 if args.smoke else 2)
+    report = measure(
+        sizes=sizes, n_replicas=n_replicas, seed=args.seed, reps=reps
+    )
+    report["smoke"] = bool(args.smoke)
+    print("name,us_per_call,derived")
+    for row in _rows_of(report):
+        print(row.csv())
+    head = dict(report["headline"])
+    n_head = head.pop("n_requests", None)
+    r_head = head.pop("n_replicas", None)
+    for key, v in head.items():
+        print(f"# headline {key}: {v:.2f}x (at n={n_head}, R={r_head}, "
+              f"platform={report['platform']})")
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+
+
+if __name__ == "__main__":
+    main()

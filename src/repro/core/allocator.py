@@ -185,6 +185,7 @@ def hill_climb(
     prune: bool = True,
     discipline: DisciplineSpec = FCFS,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    evaluator=None,
 ) -> tuple[Plan, float]:
     """Algorithm 1: greedy hill-climbing resource allocation.
 
@@ -237,8 +238,26 @@ def hill_climb(
       FCFS objective, so they share one climb and a space of only such
       specs returns the FCFS plan unchanged.
 
+    JAX scoring (``evaluator``):
+
+    * ``evaluator`` plugs a ``repro.core.jax_eval.JaxPlanEvaluator`` (built
+      for exactly these tenants/rates/platform) into the batched walk: every
+      iteration scores the *whole* fixed-shape move frontier in one jitted
+      device call (invalid and infeasible moves ride along as copies of the
+      incumbent and are masked to ``inf`` on the host, so one compiled
+      shape serves the entire climb).  The NumPy batched path stays the
+      bitwise reference; the evaluator runs in float32 under the
+      statistical-equivalence contract -- committed plans are identical
+      unless two candidates tie within float32 round-off.
+
     Returns the final (Plan, predicted objective).
     """
+    if evaluator is not None:
+        if not evaluator.matches(tenants, platform):
+            raise ValueError(
+                "evaluator was built for different tenants/rates/platform"
+            )
+        batch = True
     if batch is None:
         batch = init_plan is not None or len(tenants) >= _BATCH_MIN_TENANTS
     if discipline_space is not None:
@@ -282,6 +301,7 @@ def hill_climb(
                 init_plan=init_plan,
                 prune=prune,
                 discipline=spec,
+                evaluator=evaluator,
             )
             if best is None or cand[1] < best[1]:
                 best = cand
@@ -298,7 +318,12 @@ def hill_climb(
             discipline=discipline,
         )
     n = len(tenants)
-    etab = _ensure_eval_tables(tables, tenants, platform, k_max)
+    etab = _ensure_eval_tables(
+        evaluator.et if evaluator is not None else tables,
+        tenants,
+        platform,
+        k_max,
+    )
     rates = etab.rates[None, :]
     if prune:
         fronts = etab.base.frontiers
@@ -321,17 +346,27 @@ def hill_climb(
             pos[i] = np.searchsorted(f, init_plan.partition[i], side="right") - 1
     partition = fr[np.arange(n), pos]
     cores = np.array(prop_alloc(tenants, partition, k_max), dtype=np.int64)
-    l_curr = float(
-        latency.penalized_objective_batch(
-            tenants,
-            partition[None, :],
-            cores[None, :],
-            platform,
-            force_alpha_zero=force_alpha_zero,
-            tables=etab,
-            discipline=discipline,
-        )[0]
-    )
+    if evaluator is not None:
+        l_curr = float(
+            evaluator.penalized_objective_batch(
+                partition[None, :],
+                cores[None, :],
+                force_alpha_zero=force_alpha_zero,
+                discipline=discipline,
+            )[0]
+        )
+    else:
+        l_curr = float(
+            latency.penalized_objective_batch(
+                tenants,
+                partition[None, :],
+                cores[None, :],
+                platform,
+                force_alpha_zero=force_alpha_zero,
+                tables=etab,
+                discipline=discipline,
+            )[0]
+        )
 
     # Fixed move set in the scalar iteration order (m ascending, h in (1, 2))
     # so first-minimum argmin tie-breaks identically to the scalar scan; a
@@ -346,6 +381,36 @@ def hill_climb(
         valid = (cpos >= 0) & (cpos < flen[move_m])
         if not valid.any():
             break
+        if evaluator is not None:
+            # Fixed-shape frontier: every (m, h) move scored each iteration
+            # so the jitted evaluator compiles once per mix shape.  Invalid
+            # moves ride along as copies of the incumbent row and are
+            # masked out after scoring.
+            cpos_c = np.where(valid, cpos, pos[move_m])
+            parts = np.repeat(partition[None, :], len(move_m), axis=0)
+            parts[np.arange(len(move_m)), move_m] = fr[move_m, cpos_c]
+            k_cand, feasible = prop_alloc_batch(
+                tenants, parts, k_max, tables=etab.base, rates=rates
+            )
+            ok = valid & feasible
+            if not ok.any():
+                break
+            k_cand[~feasible] = cores
+            objs = evaluator.penalized_objective_batch(
+                parts,
+                k_cand,
+                force_alpha_zero=force_alpha_zero,
+                discipline=discipline,
+            )
+            objs[~ok] = np.inf
+            j = int(np.argmin(objs))  # first minimum, like the scalar scan
+            if not objs[j] < l_curr:
+                break
+            partition = parts[j]
+            cores = k_cand[j]
+            pos[move_m[j]] = cpos[j]
+            l_curr = float(objs[j])
+            continue
         vm, vpos = move_m[valid], cpos[valid]
         parts = np.repeat(partition[None, :], len(vm), axis=0)
         parts[np.arange(len(vm)), vm] = fr[vm, vpos]

@@ -1,0 +1,323 @@
+"""JAX-native batched plan evaluator: Eq. 1-5 / Eq. 10 on device.
+
+``JaxPlanEvaluator`` ports the ``EvalTables`` decomposition of the Eq. 5
+objective (see ``plan_tables.py``) to jitted JAX: scoring B candidate
+plans is two device gathers, two row-sums, and O(1) vector math -- one
+fused XLA call for a whole hill-climb neighbor frontier, or for a
+Monte-Carlo batch of rate draws.  ``hill_climb(evaluator=...)`` plugs it
+into Algorithm 1's batched walk.
+
+Contract (ROADMAP standing invariant): the NumPy evaluator
+(``latency.objective_batch`` et al.) is the bitwise-pinned reference;
+this one runs in float32 (no global ``jax_enable_x64`` -- the serving
+stack's float64 NumPy paths must stay untouched) and is *statistically
+equivalent*: objectives agree to ~1e-5 relative, and committed hill-climb
+plans are identical except where two candidates tie within float32
+round-off (~1e-7 relative -- orders of magnitude below any latency
+difference the paper's mixes produce; ``tests/test_jax_sim.py`` pins plan
+identity on the benchmark mixes).
+
+Both aggregation tails are ported exactly:
+
+* the FCFS tail with the Eq. 10 shared-occupancy collapse
+  ``(SL - Q/lam)`` / ``(U - V/lam)`` and the Pollaczek-Khinchine wait;
+* the ``swap_batch`` tail with the damped amortization fixed point --
+  same formulas, same 60-sweep damped loop, same masked 540-sweep
+  extension and unamortized-FCFS fallback as
+  ``queueing.swap_batch_amortization``, so the two implementations agree
+  wherever the fixed point converges (the extension is a ``lax.cond`` so
+  the common converged case never pays for it).
+
+The padded (p > P_i) table cells keep their NaN poison: a candidate row
+gathering an out-of-range partition point scores NaN, never a silently
+finite price.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan_tables import (
+    EvalTables,
+    PCOL_ACTIVE,
+    PCOL_LAM,
+    PCOL_Q,
+    PCOL_S1,
+    PCOL_S2,
+    PCOL_SL,
+    PCOL_U,
+    PCOL_V,
+    PCOL_WEIGHT,
+    PKCOL_OVERLOAD,
+    PKCOL_STATIC,
+)
+from repro.core.planner import FCFS, DisciplineSpec, TenantSpec
+from repro.hw.specs import Platform
+
+__all__ = ["JaxPlanEvaluator"]
+
+_WAIT_CAP = 1e12
+_PENALTY_BASE = 1e9  # mirrors latency._PENALTY_BASE
+
+
+@partial(
+    jax.jit,
+    static_argnames=("force_alpha_zero", "batches", "batch_cap", "staleness"),
+)
+def _objective_kernel(
+    pstack, pkstack, rates, svc_tab, tl_tab, sram_bytes,
+    P, K,
+    force_alpha_zero: bool, batches: bool, batch_cap: int, staleness: float,
+):
+    """(total, overload) for B candidate plans; [B, n] int32 P/K inputs.
+
+    One fused graph: gathers, per-tenant sums, and whichever aggregation
+    tail the (static) discipline flags select.
+    """
+    n = P.shape[1]
+    ti = jnp.arange(n)
+    A = pstack[ti, P].sum(axis=1)        # [B, 9]
+    F = pkstack[ti, P, K].sum(axis=1)    # [B, 2]
+    lam = A[:, PCOL_LAM]
+    S1 = A[:, PCOL_S1]
+    S2 = A[:, PCOL_S2]
+    zero_rate = (rates <= 0.0).any()
+
+    if batches and not force_alpha_zero:
+        # ---- swap_batch amortized tail --------------------------------
+        on = P > 0
+        r = jnp.where(on, rates[None, :], 0.0)
+        svc = jnp.where(on, svc_tab[ti, P], 0.0)
+        tl = jnp.where(on, tl_tab[ti, P], 0.0)
+        shared = (
+            (A[:, PCOL_WEIGHT] > sram_bytes)
+            & (A[:, PCOL_ACTIVE] > 1.0)
+            & (lam > 0.0)
+        )
+        safe_lam = jnp.where(lam > 0.0, lam, 1.0)
+        alphas = jnp.where(
+            shared[:, None] & on,
+            jnp.maximum(0.0, 1.0 - r / safe_lam[:, None]),
+            0.0,
+        )
+        p = jnp.where(lam[:, None] > 0.0, r / safe_lam[:, None], 0.0)
+        live = (alphas > 0.0) & (p < 1.0)
+        p = jnp.where(live, p, 0.0)
+        aT = r * alphas * tl
+        aU = aT * (2.0 * svc + tl)
+        Bc = int(batch_cap)
+
+        def sweep(wq):
+            wq_e = wq[..., None]
+            rw = r * wq_e
+            ratio = jnp.where(wq_e > 0.0, staleness / wq_e, jnp.inf)
+            fresh = 1.0 - jnp.exp(-ratio)
+            q = jnp.where(live, fresh * rw / (1.0 + rw), 0.0)
+            c = q + (1.0 - q) * p
+            run = jnp.where(
+                c < 1.0,
+                (1.0 - c**Bc) / (1.0 - c) + c ** (Bc - 1) * p / (1.0 - p),
+                float(Bc) + p / (1.0 - p),
+            )
+            g = jnp.where(live, 1.0 / ((1.0 - p) * run), 1.0)
+            sl = (g * aT).sum(axis=-1)
+            u = (g * aU).sum(axis=-1)
+            rho = S1 + sl
+            wq_next = jnp.where(
+                rho < 1.0, (S2 + u) / (2.0 * (1.0 - rho)), _WAIT_CAP
+            )
+            return wq_next, rho, g
+
+        wq0, rho_opt, _ = sweep(jnp.full(lam.shape, _WAIT_CAP))
+        wq = jax.lax.fori_loop(
+            0, 60, lambda _, w: 0.5 * (w + sweep(w)[0]), wq0
+        )
+        wait, rho, g = sweep(wq)
+
+        # Relative residual: float32 never resolves the 1e-12 absolute
+        # floor, so the effective tolerance is the 1e-6 relative part --
+        # converged lanes sit at ~1e-7 relative after the damped loop.
+        resid_bad = lambda f_wq, w: jnp.abs(f_wq - w) > (
+            1e-12 + 1e-6 * jnp.abs(w)
+        )
+        diverged = resid_bad(wait, wq)
+
+        def extend(args):
+            wq, wait, rho, g, diverged = args
+
+            def body(_, w):
+                return jnp.where(diverged, 0.5 * (w + sweep(w)[0]), w)
+
+            wq = jax.lax.fori_loop(0, 9 * 60, body, wq)
+            wait_x, rho_x, g_x = sweep(wq)
+            wait2 = jnp.where(diverged, wait_x, wait)
+            rho2 = jnp.where(diverged, rho_x, rho)
+            g2 = jnp.where(diverged[..., None], g_x, g)
+            still = resid_bad(wait2, wq)
+            # Period-2 orbits: unamortized FCFS fallback (g = 1).
+            sl_f = aT.sum(axis=-1)
+            u_f = aU.sum(axis=-1)
+            rho_f = S1 + sl_f
+            wait_f = jnp.where(
+                rho_f < 1.0, (S2 + u_f) / (2.0 * (1.0 - rho_f)), jnp.inf
+            )
+            wait2 = jnp.where(still, wait_f, wait2)
+            rho2 = jnp.where(still, rho_f, rho2)
+            g2 = jnp.where(still[..., None], 1.0, g2)
+            return wq, wait2, rho2, g2, diverged
+
+        wq, wait, rho, g = jax.lax.cond(
+            diverged.any(),
+            extend,
+            lambda args: args[:4] + (args[4],),
+            (wq, wait, rho, g, diverged),
+        )[:4]
+
+        unstable = rho_opt >= 1.0
+        wait = jnp.where(
+            unstable, jnp.inf, jnp.where(lam > 0.0, wait, 0.0)
+        )
+        alpha_eff = jnp.where(live, g * alphas, alphas)
+        swap_latency = (r * alpha_eff * tl).sum(axis=-1)
+        total = F[:, PKCOL_STATIC] + lam * wait + swap_latency
+        # Zero-rate NaN convention: a zero-rate tenant on an unstable TPU
+        # queue contributes 0 * inf = NaN in the scalar per-tenant sum.
+        zr_on_tpu = ((rates <= 0.0)[None, :] & (P > 0)).any(axis=1)
+        total = jnp.where(
+            zero_rate & zr_on_tpu & jnp.isinf(wait), jnp.nan, total
+        )
+        overload = jnp.maximum(0.0, rho - 1.0) + F[:, PKCOL_OVERLOAD]
+        return total, overload
+
+    # ---- FCFS tail ----------------------------------------------------
+    if force_alpha_zero:
+        swap_term = jnp.zeros_like(lam)
+        rho_tpu = S1
+        es2_num = S2
+    else:
+        shared = (
+            (A[:, PCOL_WEIGHT] > sram_bytes)
+            & (A[:, PCOL_ACTIVE] > 1.0)
+            & (lam > 0.0)
+        )
+        inv_lam = jnp.where(shared, 1.0 / jnp.where(lam > 0.0, lam, 1.0), 0.0)
+        swap_term = (A[:, PCOL_SL] - A[:, PCOL_Q] * inv_lam) * shared
+        rho_tpu = S1 + swap_term
+        es2_num = S2 + (A[:, PCOL_U] - A[:, PCOL_V] * inv_lam) * shared
+
+    tpu_wait = jnp.where(
+        rho_tpu >= 1.0, jnp.inf, es2_num / (2.0 * (1.0 - rho_tpu))
+    )
+    total = F[:, PKCOL_STATIC] + lam * tpu_wait + swap_term
+    zr_on_tpu = ((rates <= 0.0)[None, :] & (P > 0)).any(axis=1)
+    total = jnp.where(
+        zero_rate & zr_on_tpu & jnp.isinf(tpu_wait), jnp.nan, total
+    )
+    overload = jnp.maximum(0.0, rho_tpu - 1.0) + F[:, PKCOL_OVERLOAD]
+    return total, overload
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxPlanEvaluator:
+    """Device-resident batched Eq. 5 evaluator for one (mix, rates) pair.
+
+    Build once per re-plan (``EvalTables.to_jax()`` or
+    ``JaxPlanEvaluator.build``); every ``*_batch`` call is then one jitted
+    gather/sum/aggregate graph.  Rebuild when rates change, exactly like
+    ``EvalTables`` itself (the device transfer is a few kilobytes).
+    """
+
+    et: EvalTables
+    pstack: jax.Array     # [n, W, 9] float32
+    pkstack: jax.Array    # [n, W, K+1, 2] float32
+    rates: jax.Array      # [n] float32
+    svc_tab: jax.Array    # [n, W] float32
+    tl_tab: jax.Array     # [n, W] float32
+
+    @classmethod
+    def from_tables(cls, et: EvalTables) -> "JaxPlanEvaluator":
+        return cls(
+            et=et,
+            pstack=jnp.asarray(et.pstack, dtype=jnp.float32),
+            pkstack=jnp.asarray(et.pkstack, dtype=jnp.float32),
+            rates=jnp.asarray(et.rates, dtype=jnp.float32),
+            svc_tab=jnp.asarray(et.base.prefix_service, dtype=jnp.float32),
+            tl_tab=jnp.asarray(et.base.load, dtype=jnp.float32),
+        )
+
+    @classmethod
+    def build(
+        cls,
+        tenants: Sequence[TenantSpec],
+        platform: Platform,
+        k_max: int,
+        *,
+        tables=None,
+    ) -> "JaxPlanEvaluator":
+        base = getattr(tables, "base", tables)
+        et = (
+            tables
+            if isinstance(tables, EvalTables)
+            and tables.matches(tenants, platform)
+            else EvalTables.build(tenants, platform, k_max, base=base)
+        )
+        return cls.from_tables(et)
+
+    def matches(
+        self, tenants: Sequence[TenantSpec], platform: Platform | None = None
+    ) -> bool:
+        return self.et.matches(tenants, platform)
+
+    def _eval(self, partitions, cores, force_alpha_zero, discipline):
+        P = jnp.asarray(np.asarray(partitions, dtype=np.int32))
+        K = jnp.asarray(np.asarray(cores, dtype=np.int32))
+        if P.ndim != 2 or P.shape != K.shape:
+            raise ValueError(
+                f"expected [B, n] partitions/cores, got {P.shape}/{K.shape}"
+            )
+        total, overload = _objective_kernel(
+            self.pstack, self.pkstack, self.rates, self.svc_tab, self.tl_tab,
+            float(self.et.sram_bytes), P, K,
+            force_alpha_zero=bool(force_alpha_zero),
+            batches=bool(discipline.batches),
+            batch_cap=int(discipline.batch_cap),
+            staleness=float(discipline.staleness),
+        )
+        return total, overload
+
+    def objective_batch(
+        self,
+        partitions,
+        cores,
+        *,
+        force_alpha_zero: bool = False,
+        discipline: DisciplineSpec = FCFS,
+    ) -> np.ndarray:
+        """Eq. 5 objective for B plans; float32-on-device, float64 out."""
+        total, _ = self._eval(partitions, cores, force_alpha_zero, discipline)
+        return np.asarray(total, dtype=np.float64)
+
+    def penalized_objective_batch(
+        self,
+        partitions,
+        cores,
+        *,
+        force_alpha_zero: bool = False,
+        discipline: DisciplineSpec = FCFS,
+    ) -> np.ndarray:
+        """Batched ``latency.penalized_objective`` under the statistical
+        contract: infeasible plans priced at ``_PENALTY_BASE * (1 +
+        overload)``, exactly the NumPy convention."""
+        total, overload = self._eval(
+            partitions, cores, force_alpha_zero, discipline
+        )
+        total = np.asarray(total, dtype=np.float64)
+        overload = np.asarray(overload, dtype=np.float64)
+        feasible = (overload == 0.0) & np.isfinite(total)
+        return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))

@@ -276,3 +276,12 @@ class EvalTables:
         return self.base.matches(tenants, platform) and all(
             t.rate == r for t, r in zip(tenants, self.rates)
         )
+
+    def to_jax(self):
+        """Device-resident ``repro.core.jax_eval.JaxPlanEvaluator`` over
+        these tables (float32, statistical-equivalence contract; the NumPy
+        evaluator over ``self`` stays the bitwise reference).  Imported
+        lazily so this module keeps zero accelerator dependencies."""
+        from repro.core.jax_eval import JaxPlanEvaluator
+
+        return JaxPlanEvaluator.from_tables(self)

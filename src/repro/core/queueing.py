@@ -171,7 +171,11 @@ def swap_batch_amortization(
     (amortization lengthens with queueing, queueing shrinks with
     amortization): a damped iteration from the optimistic end, which both
     the scalar and the batched evaluator run with identical formulas and
-    iteration count so the two stay within round-off of each other.
+    iteration count so the two stay within round-off of each other.  At the
+    ``iters`` cap the residual is checked explicitly; elements where the
+    damped sweep failed to close (a period-2 orbit appears near saturation,
+    where the decreasing map's slope passes -3) fall back to the
+    unamortized FCFS swap term -- see the inline note at the check.
 
     Array contract: per-tenant inputs (``rates``/``alphas``/``t_load``/
     ``service``) reduce along their last axis; ``lam``/``s1``/``s2`` are
@@ -243,6 +247,49 @@ def swap_batch_amortization(
         wq_next, _, _ = sweep(wq)
         wq = 0.5 * (wq + wq_next)
     wait, rho, g = sweep(wq)
+    # Explicit convergence check at the iteration cap.  The sweep map is
+    # *decreasing* in wq (a longer backlog amortizes more, which shortens
+    # the wait), so the damped iterate h(w) = (w + f(w)) / 2 is contractive
+    # only while f' > -3; near saturation f' can approach and pass that and
+    # the orbit either converges too slowly for the cap or settles into a
+    # genuine period-2 cycle, where every reported value is an artifact of
+    # the iteration count.  Converged elements (every input outside a thin
+    # near-saturation shell) sit at float-epsilon residual after the damped
+    # loop, far inside the tolerance, and stay bitwise untouched by all of
+    # the handling below (updates are masked ``np.where`` writes and each
+    # element's iteration count depends only on its own values, so the
+    # batch == scalar invariant survives every branch).
+    resid_bad = lambda f_wq, w: np.abs(f_wq - w) > (1e-12 + 1e-6 * np.abs(w))
+    diverged = resid_bad(wait, wq)
+    if np.any(diverged):
+        # Slow-but-contractive elements (|h'| just under 1) close with a
+        # deterministic extension budget; lanes already converged are frozen
+        # by the mask, so their values never move.
+        for _ in range(9 * iters):
+            wq_next, _, _ = sweep(wq)
+            wq = np.where(diverged, 0.5 * (wq + wq_next), wq)
+        wait_x, rho_x, g_x = sweep(wq)
+        wait = np.where(diverged, wait_x, wait)
+        rho = np.where(diverged, rho_x, rho)
+        g = np.where(diverged[..., None], g_x, g)
+        diverged = resid_bad(wait, wq)
+    if np.any(diverged):
+        # Genuine non-convergence (a period-2 orbit): fall back to the
+        # *unamortized* swap term (g = 1, the plain FCFS Eq. 1/Eq. 10
+        # moments).  Amortization can only shorten the wait, so this is a
+        # safe conservative price -- it may report inf for a queue that
+        # batching would just barely stabilize, which is preferable to an
+        # oscillation artifact that depends on the iteration cap.
+        sl_f = aT.sum(axis=-1)
+        u_f = aU.sum(axis=-1)
+        rho_f = s1 + sl_f
+        with np.errstate(divide="ignore", invalid="ignore"):
+            wait_f = np.where(
+                rho_f < 1.0, (s2 + u_f) / (2.0 * (1.0 - rho_f)), np.inf
+            )
+        wait = np.where(diverged, wait_f, wait)
+        rho = np.where(diverged, rho_f, rho)
+        g = np.where(diverged[..., None], 1.0, g)
     unstable = rho_opt >= 1.0
     wait = np.where(unstable, np.inf, np.where(lam > 0.0, wait, 0.0))
     return wait, rho, np.where(live, g * alphas, alphas)

@@ -262,7 +262,11 @@ def run_adaptive(
                 compute_times.append(dt)
             next_replan += replan_period
 
-    if vectorize and backend == "stepper" and isinstance(reqs, Trace):
+    if (
+        vectorize
+        and backend in ("stepper", "jax")
+        and isinstance(reqs, Trace)
+    ):
         # Columnar fast path: between consecutive re-plan boundaries the
         # plan is constant, so each span resolves as one vectorized
         # run_trace segment.  Boundary firing and rate estimation see the

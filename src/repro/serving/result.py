@@ -80,11 +80,22 @@ class SimResult:
         Selection (``np.partition``), not a sort: million-request traces
         from the vectorized fast path make the full Python sort the most
         expensive line of a sweep.  Same order statistic, no float math.
+
+        The rank is computed in exact integer arithmetic:
+        ``ceil(99 n / 100) == (99 n + 99) // 100``, which is the
+        nearest-rank definition with no float product that could round
+        across an integer boundary at large ``n`` (``ceil(0.99 * n)``
+        agrees everywhere we could scan, but only by luck of the
+        double-precision grid -- the integer form is correct by
+        construction).  Boundary pins: n=1 and n=2 select the max
+        (rank 1 of n), n=99 and n=100 select the 98th/99th order
+        statistic (index 97/98), n=101 index 99.
         """
         ls = self.latencies[model_idx]
-        if not len(ls):
+        n = len(ls)
+        if not n:
             return math.nan
-        rank = math.ceil(0.99 * len(ls)) - 1
+        rank = (99 * n + 99) // 100 - 1
         return float(np.partition(np.asarray(ls), rank)[rank])
 
     def observed_miss_rate(self, model_idx: int) -> float:

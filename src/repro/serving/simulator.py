@@ -498,6 +498,19 @@ class RuntimeSimulator:
             self.arrivals[i].append(job[_DJ_ARR])
 
     # -- vectorized fast path -----------------------------------------------
+    def _lindley(
+        self, enqueue: np.ndarray, service: np.ndarray, free0: float
+    ) -> np.ndarray:
+        """Single-server FCFS completion times for one constant-plan span.
+
+        The one recurrence hook backends may re-implement: the NumPy
+        stepper uses the exact ``_server_ends`` fixpoint (bitwise-pinned
+        reference); ``serving.jax_stepper.JaxStepper`` overrides it with
+        a jitted float32 max-plus scan under the statistical-equivalence
+        contract.  Everything else in ``run_trace`` is shared.
+        """
+        return _server_ends(enqueue, service, free0)
+
     def _replay_lru(
         self, tm: np.ndarray, first: np.ndarray, last: np.ndarray
     ) -> tuple[np.ndarray, list[tuple[int, int]]]:
@@ -643,7 +656,7 @@ class RuntimeSimulator:
                 mi = np.flatnonzero(miss)
                 service[mi] += self._t_load_arr[tm[mi]]
             free0 = self.tpu_free
-            ends = _server_ends(enq, service, free0)
+            ends = self._lindley(enq, service, free0)
             # Cache handoff: each accessed model's last_used is the start of
             # its last access; untouched residents keep their old stamps.
             old_stamp = {g: lu for g, _, lu in self.cache.state()}
@@ -689,7 +702,7 @@ class RuntimeSimulator:
                 )
                 pool = self._cpu_pools[i]
                 if len(pool) == 1:
-                    ends_c = _server_ends(t_in, svc, pool[0])
+                    ends_c = self._lindley(t_in, svc, pool[0])
                     pool[0] = float(ends_c[-1])
                 else:
                     # Multi-server FCFS: replay the scalar heap ops exactly.
@@ -782,17 +795,28 @@ def make_backend(
     """Instantiate a serving-simulation backend by name.
 
     ``"stepper"`` is the sequential ``RuntimeSimulator``; ``"des"`` the
-    event-driven ``DiscreteEventSimulator`` (the validation ground truth).
+    event-driven ``DiscreteEventSimulator`` (the validation ground truth);
+    ``"jax"`` the ``JaxStepper`` -- the stepper with its Lindley
+    recurrences evaluated on-device (float32, statistically equivalent,
+    opt-in: nothing imports jax unless asked for).
     """
     if backend == "stepper":
         return RuntimeSimulator(profiles, plan, platform)
+    if backend == "jax":
+        # Local import: the default backends must not pay jax's import
+        # (or its compilation cache) unless the caller opted in.
+        from repro.serving.jax_stepper import JaxStepper
+
+        return JaxStepper(profiles, plan, platform)
     if backend == "des":
         # Local import: des.py imports the shared result/workload modules
         # only, so the dependency stays one-way at module-load time.
         from repro.serving.des import DiscreteEventSimulator
 
         return DiscreteEventSimulator(profiles, plan, platform)
-    raise ValueError(f"unknown backend {backend!r} (want 'stepper' or 'des')")
+    raise ValueError(
+        f"unknown backend {backend!r} (want 'stepper', 'des', or 'jax')"
+    )
 
 
 def ensure_sorted(requests: "Trace | Sequence[Request]"):
@@ -846,7 +870,7 @@ def simulate(
     reqs, horizon = sorted_trace_and_horizon(requests)
     warmup_t = horizon * warmup_frac
     if vectorize and isinstance(reqs, Trace):
-        if backend == "stepper":
+        if backend in ("stepper", "jax"):
             sim.run_trace(reqs, record_from=warmup_t)
         else:
             sim.offer_trace(reqs, record_from=warmup_t)

@@ -16,7 +16,12 @@ from repro.serving.controller import (
 )
 from repro.serving.engine import ExecutableModel, ServingEngine
 from repro.serving.simulator import simulate
-from repro.serving.workload import RatePhase, dynamic_trace, poisson_trace
+from repro.serving.workload import (
+    RatePhase,
+    Trace,
+    dynamic_trace,
+    poisson_trace,
+)
 
 HW = EDGE_TPU_PLATFORM
 K_MAX = HW.cpu.n_cores
@@ -136,6 +141,58 @@ class TestAdaptiveController:
         # Only requests arriving past the warmup horizon are recorded.
         horizon = max(r.arrival for r in trace)
         assert min(trimmed.sim.arrivals[0]) >= 0.5 * horizon
+
+    def test_replan_tick_tie_timestamp_determinism(self):
+        # Regression pin: an arrival landing *exactly* on a re-plan tick
+        # must be observed on a fixed side of the plan switch in both
+        # drivers.  Both resolve the boundary with a strict `<` cut
+        # (scalar: `fire_due_replans` fires before any arrival with
+        # `t >= next_replan` is observed; columnar: `searchsorted(...,
+        # side="left")` ends the span before the tying arrival), so the
+        # tying request is always served under the NEW plan and counted
+        # toward the NEW window.  Identical plans and a bitwise-identical
+        # SimResult across the two paths is the contract.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        rng = np.random.default_rng(7)
+        n = 400
+        arr = np.sort(rng.uniform(0.0, 120.0, n))
+        # Plant exact tie timestamps on the 30s re-plan grid.  Replacing
+        # the first arrival at or after each tick keeps the column sorted.
+        for tick in (30.0, 60.0, 90.0):
+            arr[np.searchsorted(arr, tick)] = tick
+        mi = rng.integers(0, 2, n)
+        trace = Trace(mi, arr)
+        assert {30.0, 60.0, 90.0} <= set(arr.tolist())
+
+        common = dict(
+            replan_period=30.0, window=30.0, initial_rates=(2.0, 2.0)
+        )
+        col = run_adaptive(profiles, trace, HW, K_MAX, vectorize=True,
+                           **common)
+        seq = run_adaptive(profiles, trace, HW, K_MAX, vectorize=False,
+                           **common)
+
+        assert col.replan_times == seq.replan_times
+        assert col.plans == seq.plans
+        assert len(col.plans) > 1  # the ticks actually re-planned
+        # Bitwise-identical observations: the columnar driver hands the
+        # estimator and simulator the same requests on the same side of
+        # every boundary as the scalar loop.  Sole documented exception
+        # (run_trace docstring, test_sim_fastpath.assert_bitwise_equal):
+        # the aggregate ``tpu_busy`` sums pairwise instead of
+        # sequentially, equal to round-off only.
+        assert col.sim.tpu_busy == pytest.approx(seq.sim.tpu_busy,
+                                                 rel=1e-12)
+        assert col.sim.duration == seq.sim.duration
+        assert col.sim.misses == seq.sim.misses
+        assert col.sim.tpu_requests == seq.sim.tpu_requests
+        for m in range(len(profiles)):
+            np.testing.assert_array_equal(
+                np.asarray(col.sim.latencies[m]),
+                np.asarray(seq.sim.latencies[m]))
+            np.testing.assert_array_equal(
+                np.asarray(col.sim.arrivals[m]),
+                np.asarray(seq.sim.arrivals[m]))
 
     def test_adaptive_utilization_never_exceeds_one(self):
         # Overload phase: the backlog drains past the last arrival; the

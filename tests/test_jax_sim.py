@@ -1,0 +1,321 @@
+"""Statistical-equivalence harness for the JAX simulation/plan-search paths.
+
+ROADMAP standing invariant: *JAX paths are statistically equivalent,
+NumPy paths stay bitwise-pinned*.  The ``backend="jax"`` stepper and the
+``JaxPlanEvaluator`` run their float recurrences in float32 (no global
+``jax_enable_x64`` -- flipping it would silently widen every jnp array in
+the process and mask precision bugs), while the NumPy reference is
+float64.  A float32 mantissa carries ~7 significant digits, so observed
+per-request delays agree to ~1e-7 *absolute seconds* (the kernels work in
+delay space exactly so that no absolute clock ever enters a float32
+register) and aggregate statistics (means, p99, objectives) to ~1e-5
+relative; order- and integer-valued observables (routing, SRAM misses,
+counts, committed hill-climb plans) have no rounding channel at all and
+must match exactly -- except where two hill-climb candidates tie within
+float32 round-off, which the paper's mixes never produce (pinned here).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from benchmarks.sim_throughput import _mixes
+from repro.configs.paper_models import paper_profile
+from repro.core import latency
+from repro.core.allocator import hill_climb, prop_alloc
+from repro.core.plan_tables import EvalTables
+from repro.core.planner import FCFS, DisciplineSpec, Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM as HW
+from repro.serving.controller import run_adaptive
+from repro.serving.jax_stepper import JaxStepper, lindley_ends
+from repro.serving.simulator import RuntimeSimulator, _server_ends, make_backend, simulate
+from repro.serving.workload import Trace
+
+SWAP_BATCH = DisciplineSpec(kind="swap_batch", batch_cap=64)
+
+
+def _mix(name):
+    ts, plan, _ = _mixes()[name]
+    return ts, plan
+
+
+def _poisson_mix_trace(rates, n_req, seed):
+    """Merged-Poisson trace with per-model rates (sorted, unit scale)."""
+    rng = np.random.default_rng(seed)
+    lam = float(sum(rates))
+    arr = np.cumsum(rng.exponential(1.0 / lam, n_req))
+    mi = rng.choice(
+        len(rates), size=n_req, p=np.asarray(rates) / lam
+    ).astype(np.int64)
+    return Trace(mi, arr)
+
+
+# ---------------------------------------------------------------------------
+# lindley_ends: the drop-in FCFS kernel
+# ---------------------------------------------------------------------------
+class TestLindleyEnds:
+    def test_empty(self):
+        got = lindley_ends(np.empty(0), np.empty(0), 0.5)
+        assert got.shape == (0,)
+
+    @pytest.mark.parametrize("n", [1, 2, 7, 1000, 4097])
+    def test_matches_server_ends_in_delay_space(self, n):
+        rng = np.random.default_rng(n)
+        enq = np.cumsum(rng.exponential(0.01, n))
+        svc = rng.exponential(0.008, n)
+        ref = _server_ends(enq, svc, 0.005)
+        got = lindley_ends(enq, svc, 0.005)
+        assert got.shape == ref.shape
+        # Absolute tolerance on the *delays*: float32 resolves the small
+        # delay-space quantities to ~1e-7 s regardless of how large the
+        # absolute clock has grown.
+        np.testing.assert_allclose(got - enq, ref - enq, atol=2e-6, rtol=0)
+
+    def test_saturated_queue(self):
+        # rho > 1: delays grow linearly; still small relative error.
+        rng = np.random.default_rng(3)
+        n = 5000
+        enq = np.cumsum(rng.exponential(0.005, n))
+        svc = rng.exponential(0.008, n)
+        ref = _server_ends(enq, svc, 0.0)
+        got = lindley_ends(enq, svc, 0.0)
+        np.testing.assert_allclose(
+            got - enq, ref - enq, rtol=1e-5, atol=2e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# backend="jax": full simulate() path
+# ---------------------------------------------------------------------------
+class TestJaxBackend:
+    def test_make_backend_dispatch(self):
+        ts, plan = _mix("collab8")
+        profs = [t.profile for t in ts]
+        sim = make_backend("jax", profs, plan, HW)
+        assert isinstance(sim, JaxStepper)
+        assert isinstance(sim, RuntimeSimulator)
+        with pytest.raises(ValueError, match="'jax'"):
+            make_backend("nope", profs, plan, HW)
+
+    @pytest.mark.parametrize("mix", ["collab8", "swap2", "thrash16"])
+    def test_statistical_equivalence_vs_stepper(self, mix):
+        ts, plan = _mix(mix)
+        trace = _poisson_mix_trace([2.0] * len(ts), 6000, seed=11)
+        ref = simulate(ts, plan, HW, trace, warmup_frac=0.0)
+        got = simulate(ts, plan, HW, trace, warmup_frac=0.0, backend="jax")
+        # Integer observables: no rounding channel, must be exact.
+        assert got.misses == ref.misses
+        assert got.tpu_requests == ref.tpu_requests
+        for m in range(len(ts)):
+            assert len(got.latencies[m]) == len(ref.latencies[m])
+            np.testing.assert_array_equal(got.arrivals[m], ref.arrivals[m])
+            # Float observables: statistical tolerance.
+            assert got.mean_latency(m) == pytest.approx(
+                ref.mean_latency(m), rel=1e-4, abs=1e-6
+            )
+            assert got.p99(m) == pytest.approx(
+                ref.p99(m), rel=1e-4, abs=1e-6
+            )
+
+    def test_run_adaptive_jax_backend_matches_replans(self):
+        # Re-plan boundaries and committed plans depend only on arrival
+        # timestamps (rate estimation), never on simulated latencies: the
+        # jax backend must reproduce them identically.
+        profiles = [paper_profile("mnasnet"), paper_profile("inceptionv4")]
+        rng = np.random.default_rng(5)
+        arr = np.sort(rng.uniform(0.0, 90.0, 300))
+        mi = rng.integers(0, 2, size=300).astype(np.int64)
+        trace = Trace(mi, arr)
+        ref = run_adaptive(
+            profiles, trace, HW, 4, replan_period=30.0,
+            initial_rates=(2.0, 2.0),
+        )
+        got = run_adaptive(
+            profiles, trace, HW, 4, replan_period=30.0,
+            initial_rates=(2.0, 2.0), backend="jax",
+        )
+        assert got.replan_times == ref.replan_times
+        assert got.plans == ref.plans
+        for m in range(2):
+            a = np.asarray(ref.sim.latencies[m])
+            b = np.asarray(got.sim.latencies[m])
+            np.testing.assert_allclose(b, a, atol=2e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo replica engine
+# ---------------------------------------------------------------------------
+class TestReplicaEngine:
+    def _setup(self, n_req=5000, n_rep=3, seed=21):
+        ts, plan = _mix("collab8")
+        profs = [t.profile for t in ts]
+        trace = _poisson_mix_trace([2.4] * 4 + [15.0] * 4, n_req, seed)
+        rng = np.random.default_rng(seed + 1)
+        scales = rng.uniform(0.8, 1.25, size=(n_rep, len(profs)))
+        return ts, profs, plan, trace, scales
+
+    def test_matches_per_replica_numpy_simulate(self):
+        ts, profs, plan, trace, scales = self._setup()
+        sim = make_backend("jax", profs, plan, HW)
+        stats = sim.run_trace_replicas(trace, scales)
+        for r in range(scales.shape[0]):
+            tr = Trace(
+                trace.model_idx,
+                trace.arrival,
+                scales[r][trace.model_idx],
+            )
+            ref = simulate(ts, plan, HW, tr, warmup_frac=0.0)
+            for m in range(len(profs)):
+                assert stats.mean_latency[r, m] == pytest.approx(
+                    ref.mean_latency(m), rel=2e-4
+                )
+                assert stats.counts[m] == len(ref.latencies[m])
+            assert list(stats.misses) == ref.misses
+            assert stats.tpu_busy[r] == pytest.approx(
+                ref.tpu_busy, rel=1e-4
+            )
+
+    def test_replica_engine_is_read_only(self):
+        _, profs, plan, trace, scales = self._setup(n_req=1000)
+        sim = make_backend("jax", profs, plan, HW)
+        sim.run_trace_replicas(trace, scales)
+        assert sim.tpu_free == 0.0 and sim.tpu_busy == 0.0
+        assert all(len(ls) == 0 for ls in sim.latencies)
+        # A fresh-state engine can therefore rerun identically.
+        a = sim.run_trace_replicas(trace, scales)
+        b = sim.run_trace_replicas(trace, scales)
+        np.testing.assert_array_equal(a.mean_latency, b.mean_latency)
+
+    def test_guards(self):
+        ts, profs, plan, trace, scales = self._setup(n_req=200)
+        sim = make_backend("jax", profs, plan, HW)
+        with pytest.raises(ValueError, match="n_replicas"):
+            sim.run_trace_replicas(trace, scales[0])
+        jitter = Trace(
+            trace.model_idx, trace.arrival,
+            np.full(len(trace), 1.0 + 1e-9),
+        )
+        with pytest.raises(ValueError, match="unit-scale"):
+            sim.run_trace_replicas(jitter, scales)
+        dirty = make_backend("jax", profs, plan, HW)
+        dirty.run_trace(trace)
+        with pytest.raises(ValueError, match="fresh"):
+            dirty.run_trace_replicas(trace, scales)
+        sb_plan = Plan(plan.partition, plan.cores, SWAP_BATCH)
+        disc_sim = make_backend("jax", profs, sb_plan, HW)
+        with pytest.raises(ValueError, match="FCFS"):
+            disc_sim.run_trace_replicas(trace, scales)
+
+    def test_empty_trace(self):
+        _, profs, plan, _, scales = self._setup(n_req=200)
+        sim = make_backend("jax", profs, plan, HW)
+        stats = sim.run_trace_replicas(
+            Trace(np.empty(0, np.int64), np.empty(0)), scales
+        )
+        assert stats.mean_latency.shape == (3, len(profs))
+        assert stats.counts.sum() == 0 and stats.misses.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# JaxPlanEvaluator
+# ---------------------------------------------------------------------------
+class TestJaxPlanEvaluator:
+    def _tenants(self, name, seed=1):
+        ts, _ = _mix(name)
+        rng = np.random.default_rng(seed)
+        return [
+            TenantSpec(t.profile, float(r))
+            for t, r in zip(ts, rng.uniform(0.5, 4.0, len(ts)))
+        ]
+
+    def _feasible_plans(self, ts, k_max, n_plans=48, seed=2):
+        rng = np.random.default_rng(seed)
+        n = len(ts)
+        p_max = np.array([t.profile.num_partition_points for t in ts])
+        P = rng.integers(0, p_max + 1, size=(n_plans, n))
+        K = np.zeros((n_plans, n), dtype=np.int64)
+        keep = np.ones(n_plans, dtype=bool)
+        for b in range(n_plans):
+            try:
+                K[b] = prop_alloc(ts, P[b], k_max)
+            except ValueError:
+                keep[b] = False
+        return P[keep], K[keep]
+
+    @pytest.mark.parametrize("mix", ["collab8", "swap2", "thrash16"])
+    @pytest.mark.parametrize(
+        "disc", [FCFS, SWAP_BATCH], ids=["fcfs", "swap_batch"]
+    )
+    def test_objective_matches_numpy_batch(self, mix, disc):
+        ts = self._tenants(mix)
+        k_max = max(4, len(ts))
+        et = EvalTables.build(ts, HW, k_max)
+        ev = et.to_jax()
+        P, K = self._feasible_plans(ts, k_max)
+        ref = latency.objective_batch(ts, P, K, HW, tables=et, discipline=disc)
+        got = ev.objective_batch(P, K, discipline=disc)
+        assert np.array_equal(np.isinf(ref), np.isinf(got))
+        finite = np.isfinite(ref)
+        assert finite.any()
+        np.testing.assert_allclose(got[finite], ref[finite], rtol=5e-5)
+
+    def test_alpha_zero_and_penalized(self):
+        ts = self._tenants("collab8")
+        k_max = max(4, len(ts))
+        et = EvalTables.build(ts, HW, k_max)
+        ev = et.to_jax()
+        P, K = self._feasible_plans(ts, k_max)
+        ref = latency.objective_batch(
+            ts, P, K, HW, tables=et, force_alpha_zero=True
+        )
+        got = ev.objective_batch(P, K, force_alpha_zero=True)
+        finite = np.isfinite(ref)
+        np.testing.assert_allclose(got[finite], ref[finite], rtol=5e-5)
+        refp = latency.penalized_objective_batch(ts, P, K, HW, tables=et)
+        gotp = ev.penalized_objective_batch(P, K)
+        # Penalized values are finite by construction; the penalty band
+        # (1e9 * (1 + overload)) must agree on which plans it prices.
+        assert np.array_equal(refp >= 1e9, gotp >= 1e9)
+        ok = refp < 1e9
+        np.testing.assert_allclose(gotp[ok], refp[ok], rtol=5e-5)
+
+    @pytest.mark.parametrize("mix", ["collab8", "swap2", "thrash16"])
+    def test_hill_climb_plans_identical(self, mix):
+        # The ISSUE acceptance pin: committed plans identical on the
+        # benchmark mixes (float32 ties would be the only legal divergence
+        # channel, and these mixes have none).
+        ts = self._tenants(mix)
+        k_max = max(4, len(ts))
+        et = EvalTables.build(ts, HW, k_max)
+        ev = et.to_jax()
+        p_ref, o_ref = hill_climb(ts, HW, k_max, tables=et, batch=True)
+        p_jax, o_jax = hill_climb(ts, HW, k_max, evaluator=ev)
+        assert p_ref == p_jax
+        assert o_jax == pytest.approx(o_ref, rel=1e-4)
+        # Warm start through the evaluator too.
+        pw_ref, _ = hill_climb(
+            ts, HW, k_max, tables=et, batch=True, init_plan=p_ref
+        )
+        pw_jax, _ = hill_climb(ts, HW, k_max, evaluator=ev, init_plan=p_ref)
+        assert pw_ref == pw_jax
+
+    def test_hill_climb_discipline_space_with_evaluator(self):
+        ts = self._tenants("swap2")
+        k_max = 4
+        et = EvalTables.build(ts, HW, k_max)
+        ev = et.to_jax()
+        space = (FCFS, SWAP_BATCH)
+        p_ref, _ = hill_climb(
+            ts, HW, k_max, tables=et, batch=True, discipline_space=space
+        )
+        p_jax, _ = hill_climb(
+            ts, HW, k_max, evaluator=ev, discipline_space=space
+        )
+        assert p_ref == p_jax
+
+    def test_evaluator_mismatch_raises(self):
+        ts = self._tenants("swap2")
+        other = [TenantSpec(t.profile, t.rate * 2.0) for t in ts]
+        ev = EvalTables.build(other, HW, 4).to_jax()
+        with pytest.raises(ValueError, match="evaluator"):
+            hill_climb(ts, HW, 4, evaluator=ev)

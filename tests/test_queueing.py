@@ -1,10 +1,17 @@
 """Unit + property tests for the queueing primitives (Eq. 1, 3)."""
 import math
 
+import numpy as np
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
-from repro.core.queueing import mdk_wait, mg1_metrics, mg1_wait, mixture_moments
+from repro.core.queueing import (
+    mdk_wait,
+    mg1_metrics,
+    mg1_wait,
+    mixture_moments,
+    swap_batch_amortization,
+)
 
 
 class TestMg1Metrics:
@@ -135,3 +142,111 @@ class TestMixture:
         m1, m2 = mixture_moments(ws, vs)
         assert m2 >= m1 * m1 - 1e-9  # E[X^2] >= E[X]^2
         assert min(vs) - 1e-9 <= m1 <= max(vs) + 1e-9
+
+
+class TestSwapBatchConvergence:
+    """Pinned regressions for the ``swap_batch_amortization`` damped fixed
+    point: near saturation the damped sweep ``wq <- (wq + f(wq)) / 2`` can
+    settle into a period-2 orbit instead of converging (``f`` is decreasing
+    and steeper than ``-3`` when the amortized rho crosses 1), and the
+    pre-fix code silently returned whichever orbit point iteration 60
+    landed on -- a finite, iteration-count-dependent artifact on an
+    unstable queue.  The fix adds an explicit residual check, a masked
+    extension budget, and a safe fallback to the unamortized (FCFS,
+    ``alpha_eff == alphas``) swap term.
+    """
+
+    # First failing input found by random sweep (trial 850 of the hunt):
+    # amortized sweep oscillates between ~0.47 and ~0.84 forever while the
+    # unamortized queue is plainly unstable (rho ~ 1.40).  Pre-fix:
+    # iters=60 -> 0.5825..., iters=400 -> 1.0486... (both finite, both
+    # wrong, and mutually inconsistent).
+    LAM = 176.9585475992824
+    RATES = [11.31098336620574, 114.22011537545326,
+             23.329313473017407, 28.09813538460596]
+    SVC = [0.006091372276501745, 0.005070261443390194,
+           0.0043662468016955145, 0.007511505197715382]
+    ALPHAS = [0.9360811697447973, 0.3545374500128614,
+              0.8681650940883286, 0.8412162861540128]
+    TLOAD = [0.007437672736638669, 0.002672193386986607,
+             0.0028641736152308856, 0.008035388247537939]
+    BATCH_CAP = 64
+
+    def _pinned_args(self):
+        rates = np.asarray(self.RATES)
+        svc = np.asarray(self.SVC)
+        s1 = float((rates * svc).sum())
+        s2 = float((rates * svc * svc).sum())
+        return (self.LAM, s1, s2, rates, np.asarray(self.ALPHAS),
+                np.asarray(self.TLOAD), svc, self.BATCH_CAP)
+
+    def test_oscillating_input_falls_back_to_unamortized(self):
+        wait, rho, alpha_eff = swap_batch_amortization(*self._pinned_args())
+        # The unamortized queue has rho ~ 1.396: the only safe answer is
+        # the FCFS one -- infinite wait, no amortization credit.
+        assert math.isinf(wait)
+        assert rho == pytest.approx(1.395846882946971)
+        np.testing.assert_array_equal(alpha_eff, np.asarray(self.ALPHAS))
+
+    def test_result_is_iteration_count_independent(self):
+        # Pre-fix the answer depended on where in the 2-cycle the loop
+        # stopped; post-fix the residual check fires for any budget and
+        # every budget agrees bitwise.
+        args = self._pinned_args()
+        w60, rho60, g60 = swap_batch_amortization(*args, iters=60)
+        w400, rho400, g400 = swap_batch_amortization(*args, iters=400)
+        assert w60 == w400 and rho60 == rho400
+        np.testing.assert_array_equal(g60, g400)
+
+    def test_batch_matches_scalar_through_fallback(self):
+        # A batch mixing a diverging row with a benign converging row must
+        # reproduce each scalar call bitwise: the fallback is a masked
+        # per-element write, not a whole-batch branch.
+        lam0, s1_0, s2_0, rates0, alphas0, tl0, svc0, cap = self._pinned_args()
+        rates1 = np.array([2.0, 3.0, 4.0, 1.0])
+        svc1 = np.array([0.01, 0.02, 0.005, 0.008])
+        alphas1 = np.array([0.5, 0.4, 0.3, 0.2])
+        tl1 = np.array([0.001, 0.002, 0.003, 0.004])
+        lam1 = 10.0
+        s1_1 = float((rates1 * svc1).sum())
+        s2_1 = float((rates1 * svc1 * svc1).sum())
+
+        wb, rhob, gb = swap_batch_amortization(
+            np.array([lam0, lam1]),
+            np.array([s1_0, s1_1]),
+            np.array([s2_0, s2_1]),
+            np.stack([rates0, rates1]),
+            np.stack([alphas0, alphas1]),
+            np.stack([tl0, tl1]),
+            np.stack([svc0, svc1]),
+            cap,
+        )
+        w0, rho0, g0 = swap_batch_amortization(
+            lam0, s1_0, s2_0, rates0, alphas0, tl0, svc0, cap)
+        w1, rho1, g1 = swap_batch_amortization(
+            lam1, s1_1, s2_1, rates1, alphas1, tl1, svc1, cap)
+        assert wb[0] == w0 and rhob[0] == rho0
+        assert wb[1] == w1 and rhob[1] == rho1
+        np.testing.assert_array_equal(gb[0], g0)
+        np.testing.assert_array_equal(gb[1], g1)
+        # The benign row still converges to its finite amortized wait --
+        # the fallback never leaks onto lanes that converged.
+        assert math.isfinite(wb[1]) and wb[1] > 0.0
+
+    def test_benign_inputs_bitwise_unchanged(self):
+        # Sanity: a comfortably-stable input takes the original 60-iter
+        # path (residual check passes, no extension, no fallback) and the
+        # amortized wait beats the plain FCFS wait it amortizes.
+        rates = np.array([3.0, 2.0])
+        svc = np.array([0.01, 0.02])
+        lam = 5.0
+        s1 = float((rates * svc).sum())
+        s2 = float((rates * svc * svc).sum())
+        alphas = np.array([0.4, 0.6])
+        tl = np.array([0.05, 0.05])
+        wait, rho, alpha_eff = swap_batch_amortization(
+            lam, s1, s2, rates, alphas, tl, svc, 8)
+        assert math.isfinite(wait) and wait > 0.0
+        assert rho < 1.0
+        # Amortization can only shed swap work, never add it.
+        assert np.all(alpha_eff <= alphas + 1e-12)

@@ -3,6 +3,7 @@ including cross-validation of the analytic model against the DES (the
 in-silico analogue of the paper's Figs. 5-6 validation)."""
 import math
 
+import numpy as np
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
@@ -114,6 +115,30 @@ class TestSimResultMetrics:
         assert _result_with([[5.0]]).p99(0) == 5.0
         res = _result_with([[3.0, 1.0, 2.0]])
         assert res.p99(0) == 3.0  # ceil(2.97)-1 = idx 2 of sorted
+
+    def test_p99_nearest_rank_boundaries(self):
+        # Nearest-rank boundary pins around the n=100 grid, where a float
+        # 0.99*n index is one rounding error away from an off-by-one.  The
+        # exact-integer rank is ceil(99n/100) = (99n+99)//100:
+        #   n=1   -> rank 1   (the only sample)
+        #   n=2   -> rank 2   (the max: covering 99% of 2 needs both)
+        #   n=99  -> rank 99  (still the max: ceil(98.01) = 99)
+        #   n=100 -> rank 99  (index 98 -- the FIRST n where p99 < max)
+        #   n=101 -> rank 100 (index 99: ceil(99.99), again below max)
+        for n, expected in [(1, 1.0), (2, 2.0), (99, 99.0),
+                            (100, 99.0), (101, 100.0)]:
+            res = _result_with([[float(i) for i in range(1, n + 1)]])
+            assert res.p99(0) == expected, f"n={n}"
+        # Single-request model on the array (vectorized-stepper) path too.
+        res = _result_with([np.asarray([7.0])])
+        assert res.p99(0) == 7.0
+
+    def test_p99_integer_rank_matches_float_ceil_definition(self):
+        # The integer rank must agree with the scalar nearest-rank
+        # reference (math.ceil on the float product) on every small n and
+        # on rounding-hostile larger counts.
+        for n in list(range(1, 512)) + [9_999, 10_000, 10_001, 999_881]:
+            assert (99 * n + 99) // 100 - 1 == math.ceil(0.99 * n) - 1, n
 
     def test_zero_completed_requests_is_nan_not_zero(self):
         # A model with no completed requests has an *unknown* latency, not a
