@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax
+.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -24,13 +24,16 @@ test-slow:
 # + the simulation-core throughput smoke (also self-checks that every fast
 #   path still matches its reference before timing it)
 # + the scheduling-discipline sweep smoke (self-checks fcfs == the frozen
-#   DES baseline before timing).
+#   DES baseline before timing)
+# + the fleet-scaling smoke (self-checks the N=1 fleet degenerate case is
+#   bitwise the single-device API before timing).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
 	$(PYTHON) -m benchmarks.model_vs_sim --smoke
 	$(PYTHON) -m benchmarks.sim_throughput --smoke --out BENCH_sim_throughput.smoke.json
 	$(PYTHON) -m benchmarks.scheduling --smoke --out BENCH_scheduling.smoke.json
+	$(PYTHON) -m benchmarks.fleet_scaling --smoke --out BENCH_fleet_scaling.smoke.json
 
 # Full scheduling-discipline sweep (swap-amortization vs FCFS on the
 # swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
@@ -43,3 +46,10 @@ bench-sched:
 # accelerator-backed jax is installed -- the JSON says which.
 bench-jax:
 	$(PYTHON) -m benchmarks.jax_throughput --out BENCH_jax_throughput.json
+
+# Full fleet-scaling sweep: fleet planner vs round-robin placement on the
+# 4-device heterogeneous mix + the 64-device x 64-tenant re-plan timing
+# (self-checks the bitwise N=1 degenerate pin first); records
+# BENCH_fleet_scaling.json.
+bench-fleet:
+	$(PYTHON) -m benchmarks.fleet_scaling --out BENCH_fleet_scaling.json

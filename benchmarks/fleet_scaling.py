@@ -1,0 +1,282 @@
+"""Fleet-scale plan search vs naive placement: the N-device sweep.
+
+Quantifies what the two-level fleet planner (``repro.core.fleet``) buys
+over naive placement, and that fleet re-planning stays inside the
+controller's latency budget as the fleet grows:
+
+* **Placement quality** -- an 8-tenant paper-model mix on a 4-device
+  heterogeneous fleet (fast/reference/small/tiny device classes: distinct
+  SRAM, swap bandwidth, core counts, and TPU/CPU speed factors).
+  ``fleet_hill_climb`` (load-balanced packing + per-device climbs + the
+  migration improvement loop) is simulated head-to-head against
+  ``round_robin_fleet_plan`` (tenant ``i`` on device ``i % N``, then the
+  *same* per-device hill climb -- so the comparison isolates the placement
+  decision).  The headline is the simulated request-weighted mean-latency
+  reduction; the acceptance bar is >= 20%.
+* **Re-plan latency** -- a 64-device x 64-tenant fleet: cold plan (packing
+  + improvement loop) and the controller-path *warm* re-plan (placement
+  fixed, N warm per-device climbs against class-shared ``PlanTables``)
+  after a rate drift.  The acceptance bar is warm < 250 ms.
+
+Before anything is timed, the N=1 degenerate case is self-checked: a
+single-device unit-speed fleet must reproduce ``hill_climb``'s plan and
+``simulate``'s result **bitwise** (the ROADMAP fleet invariant) -- a sweep
+whose degenerate case drifted from the single-device reference would be
+meaningless.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fleet_scaling [--smoke]
+        [--duration SEC] [--seed N] [--out BENCH_fleet_scaling.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import HW, Row
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import hill_climb
+from repro.core.fleet import (
+    DeviceSpec,
+    FleetTablesCache,
+    fleet_hill_climb,
+    round_robin_fleet_plan,
+    validate_fleet_plan,
+)
+from repro.core.planner import TenantSpec
+from repro.serving.fleet import simulate_fleet
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+
+# The 4-device heterogeneous mix: two full-spec boxes (one overclocked),
+# one mid-tier and one weak device (half/quarter SRAM and swap bandwidth,
+# two cores, slower TPU and CPU).  Round-robin placement lands two of the
+# eight tenants on each regardless of capability -- the gap the planner
+# must close.
+def hetero_fleet() -> list[DeviceSpec]:
+    return [
+        DeviceSpec("fast", 8 << 20, 400e6, 4, tpu_speed=1.2),
+        DeviceSpec("ref", 8 << 20, 400e6, 4),
+        DeviceSpec("small", 4 << 20, 200e6, 2, tpu_speed=0.6, cpu_speed=0.7),
+        DeviceSpec("tiny", 2 << 20, 100e6, 2, tpu_speed=0.4, cpu_speed=0.5),
+    ]
+
+
+TENANT_NAMES = [
+    "squeezenet",
+    "mobilenetv2",
+    "efficientnet",
+    "mnasnet",
+    "gpunet",
+    "densenet201",
+    "resnet50v2",
+    "xception",
+]
+
+
+def tenant_mix() -> list[TenantSpec]:
+    # Rates climb with model size: the heavy tenants carry the most traffic,
+    # so round-robin's blind spreading parks hot heavyweights on the weak
+    # devices -- exactly the gap placement search must close.  Round-robin
+    # stays stable (finite latencies), so the win percentage is meaningful.
+    return [
+        TenantSpec(paper_profile(n), 2.0 + 0.5 * i)
+        for i, n in enumerate(TENANT_NAMES)
+    ]
+
+
+def self_check_degenerate(tenants, trace) -> None:
+    """N=1 unit-speed fleet == the single-device API, bitwise."""
+    dev = DeviceSpec.from_platform(HW, cpu_cores=len(tenants))
+    fleet_plan, fleet_obj = fleet_hill_climb(tenants, [dev])
+    plan, obj = hill_climb(tenants, HW, len(tenants))
+    if fleet_plan.device_plans[0] != plan or fleet_obj != obj:
+        raise AssertionError(
+            "N=1 fleet_hill_climb drifted from hill_climb: "
+            f"{fleet_plan.device_plans[0]} vs {plan}"
+        )
+    ref = simulate(tenants, plan, HW, trace)
+    got = simulate_fleet(tenants, fleet_plan, [dev], trace)
+    for i in range(len(tenants)):
+        if not np.array_equal(
+            np.asarray(ref.latencies[i]), np.asarray(got.latencies[i])
+        ):
+            raise AssertionError(f"N=1 simulate_fleet drifted (model {i})")
+    if (
+        ref.misses != got.misses
+        or ref.tpu_requests != got.tpu_requests
+        or ref.tpu_busy != got.tpu_busy
+        or ref.duration != got.duration
+    ):
+        raise AssertionError("N=1 simulate_fleet counters drifted")
+
+
+def placement_quality(duration: float, seed: int) -> dict:
+    tenants = tenant_mix()
+    fleet = hetero_fleet()
+    rates = [t.rate for t in tenants]
+    trace = poisson_trace(rates, duration, seed=seed)
+
+    t0 = time.perf_counter()
+    fleet_plan, fleet_obj = fleet_hill_climb(tenants, fleet)
+    plan_seconds = time.perf_counter() - t0
+    rr_plan, rr_obj = round_robin_fleet_plan(tenants, fleet)
+    validate_fleet_plan(fleet_plan, tenants, fleet)
+    validate_fleet_plan(rr_plan, tenants, fleet)
+
+    res_fleet = simulate_fleet(tenants, fleet_plan, fleet, trace)
+    res_rr = simulate_fleet(tenants, rr_plan, fleet, trace)
+    mean_fleet = res_fleet.request_weighted_mean(rates)
+    mean_rr = res_rr.request_weighted_mean(rates)
+    win_pct = 100.0 * (1.0 - mean_fleet / mean_rr)
+    return {
+        "n_devices": len(fleet),
+        "n_tenants": len(tenants),
+        "trace_requests": len(trace),
+        "planner_mean_s": mean_fleet,
+        "round_robin_mean_s": mean_rr,
+        "planner_p99_s": max(
+            res_fleet.p99(i) for i in range(len(tenants))
+        ),
+        "round_robin_p99_s": max(res_rr.p99(i) for i in range(len(tenants))),
+        "win_pct": win_pct,
+        "plan_seconds": plan_seconds,
+        "placement": [p[0] for p in fleet_plan.placement],
+        "rr_placement": [p[0] for p in rr_plan.placement],
+        "planner_tpu_utilization": res_fleet.tpu_utilization,
+        "round_robin_tpu_utilization": res_rr.tpu_utilization,
+    }
+
+
+def replan_scaling(n_devices: int, n_tenants: int) -> dict:
+    """Cold vs warm fleet re-plan wall time at (n_devices, n_tenants)."""
+    classes = hetero_fleet()
+    fleet = [
+        DeviceSpec(
+            f"d{i}",
+            classes[i % 4].sram_bytes,
+            classes[i % 4].swap_bw,
+            classes[i % 4].cpu_cores,
+            tpu_speed=classes[i % 4].tpu_speed,
+            cpu_speed=classes[i % 4].cpu_speed,
+        )
+        for i in range(n_devices)
+    ]
+    tenants = [
+        TenantSpec(
+            paper_profile(TENANT_NAMES[i % len(TENANT_NAMES)]),
+            1.0 + 0.1 * (i % 7),
+        )
+        for i in range(n_tenants)
+    ]
+    cache = FleetTablesCache()
+    t0 = time.perf_counter()
+    cold_plan, _ = fleet_hill_climb(tenants, fleet, tables=cache)
+    cold_s = time.perf_counter() - t0
+    # The controller path: rates drifted, placement held, N warm climbs.
+    drifted = [TenantSpec(t.profile, t.rate * 1.15) for t in tenants]
+    t0 = time.perf_counter()
+    warm_plan, _ = fleet_hill_climb(
+        drifted, fleet, init=cold_plan, tables=cache
+    )
+    warm_s = time.perf_counter() - t0
+    validate_fleet_plan(warm_plan, drifted, fleet)
+    return {
+        "n_devices": n_devices,
+        "n_tenants": n_tenants,
+        "cold_ms": cold_s * 1e3,
+        "warm_ms": warm_s * 1e3,
+    }
+
+
+def run_sweep(*, duration: float = 200.0, seed: int = 5) -> dict:
+    check_trace = poisson_trace(
+        [t.rate for t in tenant_mix()[:4]], min(duration, 120.0), seed=seed + 1
+    )
+    self_check_degenerate(tenant_mix()[:4], check_trace)
+
+    quality = placement_quality(duration, seed)
+    scaling = [
+        replan_scaling(4, 8),
+        replan_scaling(16, 32),
+        replan_scaling(64, 64),
+    ]
+    big = scaling[-1]
+    return {
+        "benchmark": "fleet_scaling",
+        "self_check": "n1_degenerate_bitwise_ok",
+        "quality": quality,
+        "replan_scaling": scaling,
+        "headline": {
+            "win_pct_vs_round_robin": quality["win_pct"],
+            "win_target_pct": 20.0,
+            "replan_64x64_warm_ms": big["warm_ms"],
+            "replan_target_ms": 250.0,
+        },
+    }
+
+
+def _rows_of(report: dict) -> list[Row]:
+    q = report["quality"]
+    rows = [
+        Row(
+            f"fleet_scaling/placement/{q['n_devices']}dev_{q['n_tenants']}ten",
+            q["planner_mean_s"] * 1e6,
+            f"win_vs_rr_pct={q['win_pct']:.1f};"
+            f"rr_mean_ms={q['round_robin_mean_s']*1e3:.1f};"
+            f"util={q['planner_tpu_utilization']:.3f}",
+        )
+    ]
+    rows += [
+        Row(
+            f"fleet_scaling/replan/{s['n_devices']}dev_{s['n_tenants']}ten",
+            s["warm_ms"] * 1e3,
+            f"cold_ms={s['cold_ms']:.1f};warm_ms={s['warm_ms']:.1f}",
+        )
+        for s in report["replan_scaling"]
+    ]
+    return rows
+
+
+def run() -> list[Row]:
+    """benchmarks.run harness entry point: the smoke-sized sweep."""
+    return _rows_of(run_sweep(duration=120.0))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="short traces: CI sanity (self-check + shape), not a record",
+    )
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_fleet_scaling.json")
+    args = ap.parse_args()
+    duration = args.duration if args.duration is not None else (
+        120.0 if args.smoke else 600.0
+    )
+    report = run_sweep(duration=duration, seed=args.seed)
+    report["smoke"] = bool(args.smoke)
+    print("name,us_per_call,derived")
+    for row in _rows_of(report):
+        print(row.csv())
+    h = report["headline"]
+    print(
+        f"# headline: fleet planner cuts mean latency "
+        f"{h['win_pct_vs_round_robin']:.1f}% vs round-robin placement "
+        f"(target >= {h['win_target_pct']:.0f}%); 64x64 warm re-plan "
+        f"{h['replan_64x64_warm_ms']:.1f} ms "
+        f"(target < {h['replan_target_ms']:.0f} ms)"
+    )
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,53 +1,56 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure or subsystem sweep.
 
 Prints ``name,us_per_call,derived`` CSV.  Usage:
 
-    PYTHONPATH=src python -m benchmarks.run            # all figures
-    PYTHONPATH=src python -m benchmarks.run fig7       # one figure
+    PYTHONPATH=src python -m benchmarks.run            # all benchmarks
+    PYTHONPATH=src python -m benchmarks.run fig7       # one benchmark
 """
 from __future__ import annotations
 
+import importlib
 import sys
 import time
 
-from benchmarks import (
-    alg_overhead,
-    alg_scaling,
-    alpha_ablation,
-    fig1_intra_swap,
-    fig2_inter_swap,
-    fig3_segment_speedup,
-    fig5_validation_single,
-    fig6_validation_multi,
-    fig7_baselines,
-    fig8_dynamic,
-    model_vs_sim,
-    scheduling,
-    sim_throughput,
-)
-
+# name -> module path.  Resolved lazily: heavyweight modules (jax_throughput
+# imports jax and pays its compilation cache) load only when selected, so
+# `python -m benchmarks.run fig1` stays light.
 MODULES = {
-    "fig1": fig1_intra_swap,
-    "fig2": fig2_inter_swap,
-    "fig3": fig3_segment_speedup,
-    "fig5": fig5_validation_single,
-    "fig6": fig6_validation_multi,
-    "fig7": fig7_baselines,
-    "fig8": fig8_dynamic,
-    "alg_overhead": alg_overhead,
-    "alg_scaling": alg_scaling,
-    "alpha_ablation": alpha_ablation,
-    "model_vs_sim": model_vs_sim,
-    "scheduling": scheduling,
-    "sim_throughput": sim_throughput,
+    "fig1": "benchmarks.fig1_intra_swap",
+    "fig2": "benchmarks.fig2_inter_swap",
+    "fig3": "benchmarks.fig3_segment_speedup",
+    "fig5": "benchmarks.fig5_validation_single",
+    "fig6": "benchmarks.fig6_validation_multi",
+    "fig7": "benchmarks.fig7_baselines",
+    "fig8": "benchmarks.fig8_dynamic",
+    "alg_overhead": "benchmarks.alg_overhead",
+    "alg_scaling": "benchmarks.alg_scaling",
+    "alpha_ablation": "benchmarks.alpha_ablation",
+    "model_vs_sim": "benchmarks.model_vs_sim",
+    "scheduling": "benchmarks.scheduling",
+    "sim_throughput": "benchmarks.sim_throughput",
+    "jax_throughput": "benchmarks.jax_throughput",
+    "fleet_scaling": "benchmarks.fleet_scaling",
 }
+
+
+def resolve(key: str):
+    """Import the benchmark module registered under ``key``; a typo names
+    every valid choice instead of dying on a bare KeyError."""
+    try:
+        path = MODULES[key]
+    except KeyError:
+        valid = ", ".join(sorted(MODULES))
+        raise SystemExit(
+            f"unknown benchmark {key!r}: valid benchmarks are {valid}"
+        ) from None
+    return importlib.import_module(path)
 
 
 def main() -> None:
     selected = sys.argv[1:] or list(MODULES)
     print("name,us_per_call,derived")
     for key in selected:
-        mod = MODULES[key]
+        mod = resolve(key)
         t0 = time.perf_counter()
         for row in mod.run():
             print(row.csv())

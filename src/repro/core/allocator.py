@@ -172,6 +172,11 @@ def _ensure_eval_tables(
     )
 
 
+# Public alias: the fleet planner applies the same cache-validity policy
+# when it warm-climbs each device against per-device-class tables.
+ensure_eval_tables = _ensure_eval_tables
+
+
 def hill_climb(
     tenants: Sequence[TenantSpec],
     platform: Platform,

@@ -175,6 +175,18 @@ class PlanTables:
             t.profile is p for t, p in zip(tenants, self.profiles)
         )
 
+    def matches_profiles(
+        self, profiles: Sequence[ModelProfile], platform: Platform | None = None
+    ) -> bool:
+        """`matches` on raw profiles (no rates attached) -- the fleet cache
+        keys tables on (device class, hosted profiles) where tenant specs
+        don't exist yet.  Same `is` identity contract as `matches`."""
+        if platform is not None and platform != self.platform:
+            return False
+        return len(profiles) == len(self.profiles) and all(
+            q is p for q, p in zip(profiles, self.profiles)
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class EvalTables:

@@ -199,6 +199,39 @@ class ModelProfile:
             return self.input_bytes
         return self.segments[p - 1].out_bytes
 
+    @functools.lru_cache(maxsize=64)
+    def scaled(self, tpu_speed: float = 1.0, cpu_speed: float = 1.0) -> "ModelProfile":
+        """This profile re-timed for a device running its accelerator at
+        ``tpu_speed`` x and its host cores at ``cpu_speed`` x the profiled
+        reference (service times divide by the factor; sizes are unchanged).
+
+        The fleet layer views a heterogeneous device through the profiles it
+        hosts: everything downstream -- the analytic model, both simulators,
+        the plan tables -- consumes profiled *times*, so speed factors enter
+        here once and nowhere else.  Cached per (self, factors), so repeated
+        calls return the *same object* -- the identity that lets
+        ``PlanTables``/``EvalTables`` caches built for a device class match
+        across re-plans.  Factor 1.0x1.0 returns ``self`` unchanged, which
+        is what pins the single-device degenerate case bitwise.
+        """
+        if tpu_speed == 1.0 and cpu_speed == 1.0:
+            return self
+        if tpu_speed <= 0 or cpu_speed <= 0:
+            raise ValueError("speed factors must be positive")
+        segments = tuple(
+            dataclasses.replace(
+                s,
+                tpu_time=s.tpu_time / tpu_speed,
+                cpu_time_1core=s.cpu_time_1core / cpu_speed,
+            )
+            for s in self.segments
+        )
+        return ModelProfile(
+            name=f"{self.name}@x{tpu_speed:g}/{cpu_speed:g}",
+            segments=segments,
+            input_bytes=self.input_bytes,
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
@@ -329,3 +362,41 @@ def load_time(profile: ModelProfile, p: int, platform: Platform) -> float:
     """
     resident = min(profile.prefix_weight_bytes(p), platform.sram_bytes)
     return resident / platform.swap_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteTables:
+    """Per-model service/transfer tables a runtime derives from one plan.
+
+    Both simulators (`serving.simulator.RuntimeSimulator._derive` and
+    `serving.des.DiscreteEventSimulator.set_plan`) need exactly these six
+    lists; deriving them in one place keeps the two bitwise-identical by
+    construction.  Plain Python floats/ints, same expressions the
+    simulators historically used -- the pinned fast-path tests see the
+    exact same values.
+    """
+
+    prefix_bytes: list[int]   # resident-candidate prefix weight bytes
+    s_tpu: list[float]        # prefix service incl. intra-swap streaming
+    t_load: list[float]       # inter-model swap-in on an SRAM miss
+    s_cpu: list[float]        # 1-core CPU suffix service time
+    in_xfer: list[float]      # input tensor host->TPU transfer
+    out_xfer: list[float]     # boundary tensor TPU->host transfer
+
+
+def route_tables(
+    profiles: Sequence[ModelProfile], plan: Plan, platform: Platform
+) -> RouteTables:
+    """Derive the per-model routing tables for ``plan`` on ``platform``."""
+    pf, pl, p = profiles, platform, plan.partition
+    return RouteTables(
+        prefix_bytes=[f.prefix_weight_bytes(q) for f, q in zip(pf, p)],
+        s_tpu=[prefix_service_time(f, q, pl) for f, q in zip(pf, p)],
+        t_load=[load_time(f, q, pl) for f, q in zip(pf, p)],
+        s_cpu=[
+            f.suffix_cpu_time(q, 1) if q < f.num_partition_points else 0.0
+            for f, q in zip(pf, p)
+        ],
+        in_xfer=[f.input_bytes / pl.swap_bw for f in pf],
+        out_xfer=[f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)],
+    )

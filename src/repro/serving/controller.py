@@ -130,6 +130,7 @@ def run_adaptive(
     cold_fallback_margin: float | None = 0.05,
     cold_fallback_window: int = 5,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    fleet: Sequence | None = None,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
 
@@ -163,7 +164,42 @@ def run_adaptive(
     mid-flight along with the rest of the configuration.  ``None`` (the
     default) keeps the planner untouched: plain FCFS, bit-identical to the
     pre-discipline controller.
+
+    ``fleet`` switches the controller to fleet mode: a sequence of
+    ``repro.core.fleet.DeviceSpec`` replaces ``platform`` (which is then
+    ignored -- each device carries its own), ``k_max`` caps every device's
+    core budget on top of its own ``cpu_cores``, per-device plans re-plan
+    warm each period while tenant placement moves only on sustained load
+    imbalance, and the return value is a
+    ``repro.serving.fleet.FleetAdaptiveResult``.  Knobs the fleet
+    controller does not implement (a custom ``planner``, the single-device
+    cold-fallback guard) raise / are superseded by the imbalance gate; call
+    ``run_adaptive_fleet`` directly for the fleet-specific knobs.
     """
+    if fleet is not None:
+        if planner is not hill_climb:
+            raise ValueError(
+                "fleet mode plans with fleet_hill_climb; a custom planner= "
+                "is not supported (use run_adaptive_fleet directly)"
+            )
+        # Lazy import: the single-device controller must not depend on the
+        # fleet layer at module load (serving.fleet imports this module).
+        from repro.serving.fleet import run_adaptive_fleet
+
+        return run_adaptive_fleet(
+            profiles,
+            requests,
+            fleet,
+            k_max=k_max,
+            replan_period=replan_period,
+            window=window,
+            initial_rates=initial_rates,
+            min_rate=min_rate,
+            warmup_frac=warmup_frac,
+            backend=backend,
+            vectorize=vectorize,
+            discipline_space=discipline_space,
+        )
     n = len(profiles)
     est = SlidingRateEstimator(n, window=window)
 

@@ -56,8 +56,7 @@ from typing import Sequence
 from repro.core.planner import (
     ModelProfile,
     Plan,
-    load_time,
-    prefix_service_time,
+    route_tables,
 )
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
@@ -165,17 +164,13 @@ class DiscreteEventSimulator:
             self._run_model = None
             self._run_len = 0
         self._plan = plan
-        pf, pl = self.profiles, self.platform
-        p = plan.partition
-        self._prefix_bytes = [f.prefix_weight_bytes(q) for f, q in zip(pf, p)]
-        self._s_tpu = [prefix_service_time(f, q, pl) for f, q in zip(pf, p)]
-        self._t_load = [load_time(f, q, pl) for f, q in zip(pf, p)]
-        self._s_cpu = [
-            f.suffix_cpu_time(q, 1) if q < f.num_partition_points else 0.0
-            for f, q in zip(pf, p)
-        ]
-        self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
-        self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+        rt = route_tables(self.profiles, plan, self.platform)
+        self._prefix_bytes = rt.prefix_bytes
+        self._s_tpu = rt.s_tpu
+        self._t_load = rt.t_load
+        self._s_cpu = rt.s_cpu
+        self._in_xfer = rt.in_xfer
+        self._out_xfer = rt.out_xfer
         # Suffix-bearing jobs always have somewhere to run, even if a plan
         # change dropped the model's allocation to 0 cores mid-flight (the
         # stepper sizes its pools max(k, 1) for the same reason).

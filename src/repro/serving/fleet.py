@@ -1,0 +1,338 @@
+"""Fleet serving: N per-device simulators driven off one split trace.
+
+``simulate_fleet`` is the fleet analogue of ``simulate``: the request trace
+is split by tenant placement (``workload.route_trace``), each device runs
+its own independent simulator (stepper, DES, or jax -- same pluggable
+backends) under its full-width device plan, and the per-device results
+merge into one ``FleetSimResult`` (request-pooled means, merged
+nearest-rank p99).
+
+``run_adaptive_fleet`` is the fleet analogue of ``run_adaptive``: one
+global sliding-window rate estimator, periodic per-device warm re-plans
+(placement held fixed), and a *sustained-imbalance* trigger that re-runs
+the full placement search only when the offered per-device load has stayed
+skewed for several consecutive re-plan windows -- placement churn is
+expensive for the serving tier (model redeploys), so a single bursty
+window must not move tenants.
+
+Degenerate case contract: a 1-device unit-speed fleet built
+``DeviceSpec.from_platform(platform)`` makes ``simulate_fleet`` replay the
+exact single-device ``simulate`` path -- same trace object, same simulator
+construction, bitwise-identical ``SimResult`` fields
+(``tests/test_fleet.py`` pins this for both backends).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.fleet import (
+    DeviceSpec,
+    FleetPlan,
+    FleetTablesCache,
+    fleet_hill_climb,
+)
+from repro.core.planner import (
+    DisciplineSpec,
+    ModelProfile,
+    Plan,
+    TenantSpec,
+    prefix_service_time,
+)
+from repro.serving.result import FleetSimResult, SimResult, merge_fleet_results
+from repro.serving.simulator import make_backend, sorted_trace_and_horizon
+from repro.serving.workload import Request, Trace, as_trace, route_trace
+from repro.serving.controller import SlidingRateEstimator
+
+
+def _device_sims(
+    profiles: Sequence[ModelProfile],
+    fleet_plan: FleetPlan,
+    fleet: Sequence[DeviceSpec],
+    backend: str,
+):
+    """One simulator per device: full-width scaled profiles, device plan."""
+    return [
+        make_backend(
+            backend,
+            dev.scaled_profiles(profiles),
+            fleet_plan.device_plans[d],
+            dev.platform,
+        )
+        for d, dev in enumerate(fleet)
+    ]
+
+
+def _drive(sim, sub, backend: str, warmup_t: float, vectorize: bool) -> None:
+    """Feed one device's sub-trace through its simulator (the same driver
+    dispatch ``simulate`` uses)."""
+    if vectorize and isinstance(sub, Trace):
+        if backend in ("stepper", "jax"):
+            sim.run_trace(sub, record_from=warmup_t)
+        else:
+            sim.offer_trace(sub, record_from=warmup_t)
+    else:
+        for req in sub:
+            sim.offer(req, record=req.arrival >= warmup_t)
+
+
+def simulate_fleet(
+    tenants: Sequence[TenantSpec],
+    fleet_plan: FleetPlan,
+    fleet: Sequence[DeviceSpec],
+    requests: "Trace | Sequence[Request]",
+    *,
+    warmup_frac: float = 0.05,
+    backend: str = "stepper",
+    vectorize: bool = True,
+    route_seed: int = 0,
+) -> FleetSimResult:
+    """Run a static fleet plan over a request trace.
+
+    The trace is split by placement/routing into per-device sub-traces
+    (global model indices preserved), each device simulates independently
+    -- devices share nothing at runtime, which is what makes the fleet
+    embarrassingly parallel -- and the results merge.  Warmup and duration
+    are *global*: the warmup cutoff comes from the fleet-wide horizon and
+    every device's duration extends to at least that horizon, so per-device
+    metrics weight into the merged view on one clock.
+    """
+    if len(fleet) != fleet_plan.n_devices:
+        raise ValueError(
+            f"fleet has {len(fleet)} devices, plan {fleet_plan.n_devices}"
+        )
+    profiles = [t.profile for t in tenants]
+    reqs, horizon = sorted_trace_and_horizon(requests)
+    warmup_t = horizon * warmup_frac
+    subs = route_trace(
+        reqs,
+        fleet_plan.placement,
+        fleet_plan.routing,
+        len(fleet),
+        seed=route_seed,
+    )
+    results: list[SimResult] = []
+    for sim, sub in zip(_device_sims(profiles, fleet_plan, fleet, backend), subs):
+        _drive(sim, sub, backend, warmup_t, vectorize)
+        results.append(sim.result(max(horizon, sim.drain())))
+    return merge_fleet_results(results)
+
+
+def offered_device_loads(
+    tenants: Sequence[TenantSpec],
+    fleet_plan: FleetPlan,
+    fleet: Sequence[DeviceSpec],
+    rates: Sequence[float],
+) -> list[float]:
+    """Offered TPU utilization per device under the current plan.
+
+    ``rho_d = sum_i w_id * lambda_i * s_TPU(p_id)`` with ``s_TPU`` from the
+    device's scaled profile on its platform -- the same Eq. 1 ingredient
+    the analytic model uses, so the imbalance trigger and the planner agree
+    on what "load" means.
+    """
+    loads = [0.0] * len(fleet)
+    for i, t in enumerate(tenants):
+        for dev_idx, w in zip(fleet_plan.placement[i], fleet_plan.routing[i]):
+            dev = fleet[dev_idx]
+            prof = t.profile.scaled(dev.tpu_speed, dev.cpu_speed)
+            p = fleet_plan.device_plans[dev_idx].partition[i]
+            loads[dev_idx] += (
+                w * rates[i] * prefix_service_time(prof, p, dev.platform)
+            )
+    return loads
+
+
+@dataclasses.dataclass
+class FleetAdaptiveResult:
+    """``run_adaptive_fleet`` outcome: merged metrics + the plan history."""
+
+    sim: FleetSimResult
+    replan_times: list[float]
+    fleet_plans: list[FleetPlan]
+    plan_compute_seconds: list[float]
+    plan_objectives: list[float] = dataclasses.field(default_factory=list)
+    # Boundaries where sustained imbalance triggered a full placement
+    # re-plan (a subset of ``replan_times``).
+    placement_replan_times: list[float] = dataclasses.field(default_factory=list)
+
+
+def run_adaptive_fleet(
+    profiles: Sequence[ModelProfile],
+    requests: "Trace | Sequence[Request]",
+    fleet: Sequence[DeviceSpec],
+    *,
+    k_max: int | None = None,
+    replan_period: float = 30.0,
+    window: float = 30.0,
+    initial_rates: Sequence[float] | None = None,
+    min_rate: float = 0.05,
+    warmup_frac: float = 0.05,
+    backend: str = "stepper",
+    vectorize: bool = True,
+    imbalance_threshold: float = 0.5,
+    imbalance_patience: int = 3,
+    discipline_space: Sequence[DisciplineSpec] | None = None,
+    route_seed: int = 0,
+) -> FleetAdaptiveResult:
+    """Adaptive fleet serving: local re-plans, imbalance-gated placement.
+
+    Every ``replan_period`` the global rate estimates feed N *warm*
+    per-device climbs (placement and routing fixed -- ``fleet_hill_climb``
+    with ``init=incumbent``), exactly as the single-device controller
+    warm-starts ``hill_climb``.  The full placement search re-runs only on
+    *sustained* imbalance: when the spread of offered per-device TPU
+    utilization (``max - min`` of ``offered_device_loads``) exceeds
+    ``imbalance_threshold`` for ``imbalance_patience`` consecutive re-plan
+    boundaries, a cold ``fleet_hill_climb`` (placement included) runs and
+    the better of warm/cold commits.  One bursty window never migrates
+    tenants; a persistent skew does.
+
+    Requests arriving between boundaries are routed by the *current*
+    placement; each device's queued work drains under the plan its requests
+    were bound at (both backends bind routes at arrival).  Per-span routing
+    draws (split-placement tenants only) are seeded by span index on top of
+    ``route_seed``, so a replayed trace routes identically.
+    """
+    if not fleet:
+        raise ValueError("fleet must contain at least one device")
+    n = len(profiles)
+    est = SlidingRateEstimator(n, window=window)
+    cache = FleetTablesCache()
+
+    def plan_for(
+        rates: Sequence[float],
+        incumbent: FleetPlan | None,
+        now: float,
+    ) -> tuple[FleetPlan, float, float, bool]:
+        """(plan, objective, seconds, placement_replanned)"""
+        tenants = [
+            TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
+        ]
+        t0 = time.perf_counter()
+        if incumbent is None:
+            plan, obj = fleet_hill_climb(
+                tenants,
+                fleet,
+                k_max=k_max,
+                tables=cache,
+                discipline_space=discipline_space,
+            )
+            return plan, obj, time.perf_counter() - t0, False
+        plan, obj = fleet_hill_climb(
+            tenants,
+            fleet,
+            k_max=k_max,
+            init=incumbent,
+            tables=cache,
+            discipline_space=discipline_space,
+        )
+        moved = False
+        if imbalance_streak >= imbalance_patience:
+            cold_plan, cold_obj = fleet_hill_climb(
+                tenants,
+                fleet,
+                k_max=k_max,
+                tables=cache,
+                discipline_space=discipline_space,
+            )
+            if cold_obj < obj:
+                plan, obj = cold_plan, cold_obj
+                moved = True
+        return plan, obj, time.perf_counter() - t0, moved
+
+    rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
+    imbalance_streak = 0
+    fleet_plan, obj, dt, _ = plan_for(rates0, None, 0.0)
+    sims = _device_sims(profiles, fleet_plan, fleet, backend)
+
+    replan_times = [0.0]
+    fleet_plans = [fleet_plan]
+    objectives = [obj]
+    compute_times = [dt]
+    placement_replans: list[float] = []
+
+    reqs, horizon = sorted_trace_and_horizon(requests)
+    warmup_t = horizon * warmup_frac
+    next_replan = replan_period
+    span_idx = 0
+
+    def fire_due_replans(t: float) -> None:
+        nonlocal next_replan, fleet_plan, imbalance_streak
+        while t >= next_replan:
+            for sim in sims:
+                sim.advance_to(next_replan)
+            rates = est.rates(next_replan)
+            if any(r > 0 for r in rates):
+                clamped = [max(r, min_rate) for r in rates]
+                tenants = [
+                    TenantSpec(p, r) for p, r in zip(profiles, clamped)
+                ]
+                loads = offered_device_loads(
+                    tenants, fleet_plan, fleet, clamped
+                )
+                spread = max(loads) - min(loads)
+                imbalance_streak = (
+                    imbalance_streak + 1
+                    if spread > imbalance_threshold
+                    else 0
+                )
+                new_plan, obj, dt, moved = plan_for(
+                    rates, fleet_plan, next_replan
+                )
+                if moved:
+                    placement_replans.append(next_replan)
+                    imbalance_streak = 0
+                for d, sim in enumerate(sims):
+                    if new_plan.device_plans[d] != fleet_plan.device_plans[d]:
+                        sim.set_plan(new_plan.device_plans[d], now=next_replan)
+                fleet_plan = new_plan
+                replan_times.append(next_replan)
+                fleet_plans.append(new_plan)
+                objectives.append(obj)
+                compute_times.append(dt)
+            next_replan += replan_period
+
+    trace = as_trace(reqs)
+    arrival = trace.arrival
+    n_req = len(trace)
+    idx = 0
+    while idx < n_req:
+        fire_due_replans(float(arrival[idx]))
+        j = int(np.searchsorted(arrival, next_replan, side="left"))
+        seg = trace[idx:j]
+        est.observe_batch(seg.model_idx, seg.arrival)
+        subs = route_trace(
+            seg,
+            fleet_plan.placement,
+            fleet_plan.routing,
+            len(fleet),
+            seed=route_seed + span_idx,
+        )
+        for sim, sub in zip(sims, subs):
+            _drive(sim, sub, backend, warmup_t, vectorize)
+        span_idx += 1
+        idx = j
+
+    results = [
+        sim.result(max(horizon, sim.drain())) for sim in sims
+    ]
+    return FleetAdaptiveResult(
+        sim=merge_fleet_results(results),
+        replan_times=replan_times,
+        fleet_plans=fleet_plans,
+        plan_compute_seconds=compute_times,
+        plan_objectives=objectives,
+        placement_replan_times=placement_replans,
+    )
+
+
+__all__ = [
+    "FleetAdaptiveResult",
+    "offered_device_loads",
+    "run_adaptive_fleet",
+    "simulate_fleet",
+]

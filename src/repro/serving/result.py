@@ -109,3 +109,98 @@ class SimResult:
     @property
     def tpu_utilization(self) -> float:
         return self.tpu_busy / self.duration if self.duration > 0 else 0.0
+
+
+@dataclasses.dataclass
+class FleetSimResult(SimResult):
+    """Fleet-wide metrics merged from N per-device ``SimResult``s.
+
+    The merged view pools every device's samples per model, so
+    ``mean_latency`` is the request-weighted mean across the fleet and
+    ``p99`` the nearest-rank percentile over the pooled samples (the
+    *merged* p99, not a percentile of per-device percentiles -- the pooled
+    order statistic is what an external client of the whole fleet
+    observes).  Per-model sample order is device-major, not time-sorted;
+    every ``SimResult`` metric is order-free.  ``per_device`` keeps the
+    constituent results for drill-down.
+    """
+
+    per_device: list[SimResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.per_device)
+
+    @property
+    def tpu_utilization(self) -> float:
+        """Mean per-TPU utilization: aggregate busy time normalized by
+        N devices' wall-clock (a 4-device fleet at 0.25 each reads 0.25,
+        not 1.0)."""
+        denom = self.duration * max(1, self.n_devices)
+        return self.tpu_busy / denom if denom > 0 else 0.0
+
+
+def _merge_columns(cols: list[Sequence[float]]) -> Sequence[float]:
+    """Pool one model's per-device sample columns.
+
+    All-list inputs concatenate as lists (the scalar backends' native form,
+    and exactly the device's own objects when only one column is nonempty);
+    anything else pools through ``np.concatenate``.
+    """
+    filled = [c for c in cols if len(c)]
+    if not filled:
+        return cols[0] if cols else []
+    if len(filled) == 1:
+        return filled[0]
+    if all(isinstance(c, list) for c in filled):
+        out: list[float] = []
+        for c in filled:
+            out.extend(c)
+        return out
+    return np.concatenate([np.asarray(c, dtype=np.float64) for c in filled])
+
+
+def merge_fleet_results(per_device: Sequence[SimResult]) -> FleetSimResult:
+    """Merge per-device results into the fleet-wide ``FleetSimResult``.
+
+    Per-model latencies/arrivals pool across devices; ``misses`` and
+    ``tpu_requests`` add elementwise; ``tpu_busy`` adds; ``duration`` is the
+    fleet wall-clock (max over devices).  The single-device merge reuses
+    the device's own column objects -- the bitwise N=1 contract.
+    """
+    if not per_device:
+        raise ValueError("merge_fleet_results needs at least one result")
+    n_models = len(per_device[0].latencies)
+    for r in per_device:
+        if len(r.latencies) != n_models:
+            raise ValueError("per-device results cover different model counts")
+    if len(per_device) == 1:
+        r = per_device[0]
+        return FleetSimResult(
+            latencies=r.latencies,
+            arrivals=r.arrivals,
+            tpu_busy=r.tpu_busy,
+            duration=r.duration,
+            misses=r.misses,
+            tpu_requests=r.tpu_requests,
+            per_device=list(per_device),
+        )
+    return FleetSimResult(
+        latencies=[
+            _merge_columns([r.latencies[i] for r in per_device])
+            for i in range(n_models)
+        ],
+        arrivals=[
+            _merge_columns([r.arrivals[i] for r in per_device])
+            for i in range(n_models)
+        ],
+        tpu_busy=sum(r.tpu_busy for r in per_device),
+        duration=max(r.duration for r in per_device),
+        misses=[
+            sum(r.misses[i] for r in per_device) for i in range(n_models)
+        ],
+        tpu_requests=[
+            sum(r.tpu_requests[i] for r in per_device) for i in range(n_models)
+        ],
+        per_device=list(per_device),
+    )

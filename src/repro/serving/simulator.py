@@ -48,8 +48,7 @@ import numpy as np
 from repro.core.planner import (
     ModelProfile,
     Plan,
-    load_time,
-    prefix_service_time,
+    route_tables,
     TenantSpec,
 )
 from repro.hw.specs import Platform
@@ -290,17 +289,15 @@ class RuntimeSimulator:
         self._cpu_pools = new_pools
 
     def _derive(self, plan: Plan) -> None:
-        pf, pl = self.profiles, self.platform
+        pf = self.profiles
         p = plan.partition
-        self._prefix_bytes = [f.prefix_weight_bytes(q) for f, q in zip(pf, p)]
-        self._s_tpu = [prefix_service_time(f, q, pl) for f, q in zip(pf, p)]
-        self._t_load = [load_time(f, q, pl) for f, q in zip(pf, p)]
-        self._s_cpu = [
-            f.suffix_cpu_time(q, 1) if q < f.num_partition_points else 0.0
-            for f, q in zip(pf, p)
-        ]
-        self._in_xfer = [f.input_bytes / pl.swap_bw for f in pf]
-        self._out_xfer = [f.boundary_bytes(q) / pl.swap_bw for f, q in zip(pf, p)]
+        rt = route_tables(pf, plan, self.platform)
+        self._prefix_bytes = rt.prefix_bytes
+        self._s_tpu = rt.s_tpu
+        self._t_load = rt.t_load
+        self._s_cpu = rt.s_cpu
+        self._in_xfer = rt.in_xfer
+        self._out_xfer = rt.out_xfer
         # Columnar mirrors of the per-model tables for the vectorized path
         # (same float values -- np.array of python floats is exact).
         self._part_arr = np.array(p, dtype=np.int64)
@@ -786,6 +783,36 @@ def _flat(parts: list):
     )
 
 
+def _stepper_factory(profiles, plan, platform):
+    return RuntimeSimulator(profiles, plan, platform)
+
+
+def _jax_factory(profiles, plan, platform):
+    # Local import: the default backends must not pay jax's import
+    # (or its compilation cache) unless the caller opted in.
+    from repro.serving.jax_stepper import JaxStepper
+
+    return JaxStepper(profiles, plan, platform)
+
+
+def _des_factory(profiles, plan, platform):
+    # Local import: des.py imports the shared result/workload modules
+    # only, so the dependency stays one-way at module-load time.
+    from repro.serving.des import DiscreteEventSimulator
+
+    return DiscreteEventSimulator(profiles, plan, platform)
+
+
+# Name -> lazy constructor.  The registry is the single source of truth for
+# what `backend=` accepts everywhere (simulate / run_adaptive / the fleet
+# layer); the error path lists its keys so a typo names every valid choice.
+_BACKENDS = {
+    "stepper": _stepper_factory,
+    "des": _des_factory,
+    "jax": _jax_factory,
+}
+
+
 def make_backend(
     backend: str,
     profiles: Sequence[ModelProfile],
@@ -800,23 +827,14 @@ def make_backend(
     recurrences evaluated on-device (float32, statistically equivalent,
     opt-in: nothing imports jax unless asked for).
     """
-    if backend == "stepper":
-        return RuntimeSimulator(profiles, plan, platform)
-    if backend == "jax":
-        # Local import: the default backends must not pay jax's import
-        # (or its compilation cache) unless the caller opted in.
-        from repro.serving.jax_stepper import JaxStepper
-
-        return JaxStepper(profiles, plan, platform)
-    if backend == "des":
-        # Local import: des.py imports the shared result/workload modules
-        # only, so the dependency stays one-way at module-load time.
-        from repro.serving.des import DiscreteEventSimulator
-
-        return DiscreteEventSimulator(profiles, plan, platform)
-    raise ValueError(
-        f"unknown backend {backend!r} (want 'stepper', 'des', or 'jax')"
-    )
+    try:
+        factory = _BACKENDS[backend]
+    except KeyError:
+        valid = ", ".join(repr(k) for k in _BACKENDS)
+        raise ValueError(
+            f"unknown backend {backend!r}: valid backends are {valid}"
+        ) from None
+    return factory(profiles, plan, platform)
 
 
 def ensure_sorted(requests: "Trace | Sequence[Request]"):

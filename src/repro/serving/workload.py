@@ -491,6 +491,92 @@ def tenant_churn_trace(
     return ChurnTrace(requests=_merge_streams(streams), active=tuple(schedule))
 
 
+# -- fleet routing ------------------------------------------------------------
+
+def route_trace(
+    requests: "Trace | Sequence[Request]",
+    placement: Sequence[Sequence[int]],
+    routing: Sequence[Sequence[float]],
+    n_devices: int,
+    *,
+    seed: int = 0,
+) -> list[Trace]:
+    """Split one trace into per-device columnar traces by tenant placement.
+
+    ``placement[i]`` / ``routing[i]`` follow the ``FleetPlan`` contract: the
+    devices tenant ``i`` may run on and the matching routing weights.  Every
+    request keeps its *global* ``model_idx`` (device plans are full-width,
+    so per-device simulators replay the splits without re-indexing), its
+    arrival stamp, and its service scale; the returned traces partition the
+    input exactly -- ``sum(len(t) for t in out) == len(trace)``.
+
+    Single-placement tenants split deterministically (a pure boolean mask,
+    preserving arrival order, so each sub-trace inherits sortedness).
+    Tenants placed on several devices draw i.i.d. device choices from their
+    routing weights with a ``seed``-keyed generator -- same trace + same
+    seed is the same split, which keeps the JSON replay contract intact:
+    replaying ``trace_from_json(trace_to_json(t))`` routes bit-identically.
+
+    The degenerate single-device fleet returns ``[trace]`` itself (the
+    bitwise N=1 contract: not a copy, the same object).
+    """
+    trace = as_trace(requests)
+    if n_devices <= 0:
+        raise ValueError("n_devices must be positive")
+    if len(placement) != len(routing):
+        raise ValueError("placement and routing must have equal length")
+    if n_devices == 1 and all(tuple(p) == (0,) for p in placement):
+        return [trace]
+
+    mi = trace.model_idx
+    n = len(trace)
+    dev = np.full(n, -1, dtype=np.int64)
+    rng: np.random.Generator | None = None
+    for i, (devs, wts) in enumerate(zip(placement, routing)):
+        if not devs:
+            raise ValueError(f"tenant {i} placed on no device")
+        if any(not 0 <= d < n_devices for d in devs):
+            raise ValueError(f"tenant {i} placement {tuple(devs)} out of range")
+        mask = mi == i
+        if len(devs) == 1:
+            dev[mask] = devs[0]
+            continue
+        if len(wts) != len(devs):
+            raise ValueError(f"tenant {i}: weights/placement length mismatch")
+        if rng is None:
+            rng = np.random.default_rng(seed)
+        cum = np.cumsum(np.asarray(wts, dtype=np.float64))
+        if not cum.size or cum[-1] <= 0:
+            raise ValueError(f"tenant {i}: routing weights sum to zero")
+        cum /= cum[-1]
+        choice = np.searchsorted(cum, rng.random(int(mask.sum())), side="right")
+        dev[mask] = np.asarray(devs, dtype=np.int64)[
+            np.minimum(choice, len(devs) - 1)
+        ]
+    unplaced = dev < 0
+    if unplaced.any():
+        bad = np.unique(mi[unplaced]).tolist()
+        raise ValueError(f"trace contains unplaced model indices {bad}")
+
+    out = []
+    for d in range(n_devices):
+        mask = dev == d
+        out.append(
+            Trace(
+                # Boolean-mask gathers allocate fresh arrays: zero-copy-safe.
+                trace.model_idx[mask],
+                trace.arrival[mask],
+                trace.service_scale[mask],
+                # A subsequence of a sorted trace is sorted; unknown stays
+                # unknown (never claim False -- the subset may well be sorted).
+                _sorted=True if trace._sorted else None,
+                _unit=True if trace._unit else None,
+                _own=True,
+            )
+        )
+    return out
+
+
 # -- deterministic trace replay ---------------------------------------------
 
 def trace_to_json(requests: "Trace | Sequence[Request]") -> str:

@@ -1,0 +1,593 @@
+"""Fleet-scale plan space: two-level planner, trace router, merged results.
+
+Invariants enforced here (recorded in ROADMAP.md):
+
+* **N=1 degenerate pin (bitwise)**: a single-device unit-speed fleet built
+  from ``DeviceSpec.from_platform`` is the single-device API, exactly --
+  ``fleet_hill_climb`` returns ``hill_climb``'s plan and objective,
+  ``simulate_fleet`` returns ``simulate``'s latencies/counters bitwise on
+  both the stepper and the DES, and ``run_adaptive_fleet`` replays
+  ``run_adaptive(cold_fallback_margin=None)``'s plan history and merged
+  latencies bitwise.
+* ``route_trace`` partitions its input exactly (every request lands on
+  exactly one device, global model indices and arrival stamps preserved),
+  is deterministic in its seed, and commutes with the JSON replay contract.
+* ``validate_fleet_plan`` rejects malformed fleet plans (bad partition
+  index, cores over a device's budget, tenant placed on no device, routing
+  weights off unity) with informative errors.
+* ``merge_fleet_results`` pools per-device metrics on one clock and is the
+  identity (same column objects) for a one-device fleet.
+* Sustained offered-load imbalance -- and only *sustained* imbalance --
+  triggers a placement re-plan in ``run_adaptive_fleet``.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import hill_climb
+from repro.core.fleet import (
+    DeviceSpec,
+    FleetPlan,
+    FleetTablesCache,
+    fleet_hill_climb,
+    round_robin_fleet_plan,
+    validate_fleet_plan,
+)
+from repro.core.planner import Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import run_adaptive
+from repro.serving.fleet import (
+    offered_device_loads,
+    run_adaptive_fleet,
+    simulate_fleet,
+)
+from repro.serving.result import SimResult, merge_fleet_results
+from repro.serving.scheduling import FCFS
+from repro.serving.simulator import make_backend, simulate
+from repro.serving.workload import (
+    RatePhase,
+    dynamic_trace,
+    poisson_trace,
+    route_trace,
+    trace_from_json,
+    trace_to_json,
+)
+
+HW = EDGE_TPU_PLATFORM
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def small_mix():
+    return tenants_for(
+        ("squeezenet", 4.0), ("mobilenetv2", 3.0), ("mnasnet", 2.0)
+    )
+
+
+def hetero_fleet():
+    return [
+        DeviceSpec("fast", 8 << 20, 400e6, 4, tpu_speed=1.2),
+        DeviceSpec("ref", 8 << 20, 400e6, 4),
+        DeviceSpec("small", 4 << 20, 200e6, 2, tpu_speed=0.6, cpu_speed=0.7),
+        DeviceSpec("tiny", 2 << 20, 100e6, 2, tpu_speed=0.4, cpu_speed=0.5),
+    ]
+
+
+def eight_tenants():
+    names = [
+        "squeezenet", "mobilenetv2", "efficientnet", "mnasnet",
+        "gpunet", "densenet201", "resnet50v2", "xception",
+    ]
+    return [
+        TenantSpec(paper_profile(n), 2.0 + 0.5 * i)
+        for i, n in enumerate(names)
+    ]
+
+
+def unit_device(n_cores: int) -> DeviceSpec:
+    return DeviceSpec.from_platform(HW, cpu_cores=n_cores)
+
+
+def assert_results_bitwise(ref: SimResult, got: SimResult):
+    assert len(ref.latencies) == len(got.latencies)
+    for i in range(len(ref.latencies)):
+        a = np.asarray(ref.latencies[i], dtype=np.float64)
+        b = np.asarray(got.latencies[i], dtype=np.float64)
+        assert np.array_equal(a, b), f"model {i} latencies drifted"
+        a = np.asarray(ref.arrivals[i], dtype=np.float64)
+        b = np.asarray(got.arrivals[i], dtype=np.float64)
+        assert np.array_equal(a, b), f"model {i} arrivals drifted"
+    assert ref.misses == got.misses
+    assert ref.tpu_requests == got.tpu_requests
+    assert ref.tpu_busy == got.tpu_busy
+    assert ref.duration == got.duration
+
+
+# ---------------------------------------------------------------------------
+# DeviceSpec
+
+
+class TestDeviceSpec:
+    def test_from_platform_preserves_platform_object(self):
+        dev = unit_device(len(small_mix()))
+        assert dev.platform is HW
+        assert dev.sram_bytes == HW.sram_bytes
+        assert dev.swap_bw == HW.swap_bw
+
+    def test_synthesized_platform_matches_spec(self):
+        dev = DeviceSpec("d", 4 << 20, 200e6, 2)
+        assert dev.platform.sram_bytes == 4 << 20
+        assert dev.platform.swap_bw == 200e6
+        assert dev.platform.cpu.n_cores == 2
+
+    def test_equal_class_devices_share_platform_equality(self):
+        a = DeviceSpec("a", 4 << 20, 200e6, 2, tpu_speed=0.5)
+        b = DeviceSpec("b", 4 << 20, 200e6, 2, tpu_speed=0.5)
+        assert a.class_key == b.class_key
+        assert a.platform == b.platform
+
+    def test_scaled_profiles_identity_at_unit_speed(self):
+        dev = DeviceSpec("d", 8 << 20, 400e6, 4)
+        profiles = [t.profile for t in small_mix()]
+        assert all(a is b for a, b in zip(dev.scaled_profiles(profiles), profiles))
+
+    def test_scaled_profile_retimes(self):
+        dev = DeviceSpec("d", 8 << 20, 400e6, 4, tpu_speed=2.0, cpu_speed=0.5)
+        base = paper_profile("mnasnet")
+        scaled = dev.scaled_profiles([base])[0]
+        for s0, s1 in zip(base.segments, scaled.segments):
+            assert s1.tpu_time == s0.tpu_time / 2.0
+            assert s1.cpu_time_1core == s0.cpu_time_1core / 0.5
+            assert s1.weight_bytes == s0.weight_bytes
+
+    def test_invalid_spec_rejected(self):
+        with pytest.raises(ValueError):
+            DeviceSpec("d", -1, 400e6, 4)
+        with pytest.raises(ValueError):
+            DeviceSpec("d", 8 << 20, -1.0, 4)
+        with pytest.raises(ValueError):
+            DeviceSpec("d", 8 << 20, 400e6, -1)
+        with pytest.raises(ValueError):
+            DeviceSpec("d", 8 << 20, 400e6, 4, tpu_speed=0.0)
+
+
+# ---------------------------------------------------------------------------
+# N=1 degenerate pins
+
+
+class TestDegenerateFleet:
+    def test_plan_and_objective_bitwise(self):
+        ts = small_mix()
+        fp, fobj = fleet_hill_climb(ts, [unit_device(len(ts))])
+        plan, obj = hill_climb(ts, HW, len(ts))
+        assert fp.device_plans[0] == plan
+        assert fobj == obj
+        assert fp.placement == tuple((0,) for _ in ts)
+        assert fp.routing == tuple((1.0,) for _ in ts)
+
+    @pytest.mark.parametrize("backend", ["stepper", "des"])
+    def test_simulate_fleet_bitwise(self, backend):
+        ts = small_mix()
+        dev = unit_device(len(ts))
+        fp, _ = fleet_hill_climb(ts, [dev])
+        plan, _ = hill_climb(ts, HW, len(ts))
+        trace = poisson_trace([t.rate for t in ts], 60.0, seed=3)
+        ref = simulate(ts, plan, HW, trace, backend=backend)
+        got = simulate_fleet(ts, fp, [dev], trace, backend=backend)
+        assert_results_bitwise(ref, got)
+        assert got.n_devices == 1
+        assert got.tpu_utilization == ref.tpu_utilization
+
+    def test_adaptive_fleet_replays_single_device_controller(self):
+        ts = small_mix()
+        profiles = [t.profile for t in ts]
+        trace = dynamic_trace(
+            [
+                RatePhase(0.0, 60.0, (4.0, 1.0, 1.0)),
+                RatePhase(60.0, 120.0, (1.0, 1.0, 4.0)),
+            ],
+            seed=11,
+        )
+        ref = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            len(ts),
+            replan_period=20.0,
+            cold_fallback_margin=None,
+        )
+        got = run_adaptive_fleet(
+            profiles, trace, [unit_device(len(ts))], replan_period=20.0
+        )
+        assert got.replan_times == ref.replan_times
+        assert [fp.device_plans[0] for fp in got.fleet_plans] == ref.plans
+        assert_results_bitwise(ref.sim, got.sim)
+
+
+# ---------------------------------------------------------------------------
+# Fleet planner
+
+
+class TestFleetHillClimb:
+    def test_placement_beats_round_robin_on_hetero_fleet(self):
+        ts = eight_tenants()
+        fleet = hetero_fleet()
+        cache = FleetTablesCache()
+        fp, fobj = fleet_hill_climb(ts, fleet, tables=cache)
+        rr, robj = round_robin_fleet_plan(ts, fleet, tables=cache)
+        validate_fleet_plan(fp, ts, fleet)
+        validate_fleet_plan(rr, ts, fleet)
+        assert fobj < robj
+
+    def test_warm_replan_keeps_placement(self):
+        ts = eight_tenants()
+        fleet = hetero_fleet()
+        cache = FleetTablesCache()
+        cold, _ = fleet_hill_climb(ts, fleet, tables=cache)
+        drifted = [TenantSpec(t.profile, t.rate * 1.3) for t in ts]
+        warm, wobj = fleet_hill_climb(drifted, fleet, init=cold, tables=cache)
+        assert warm.placement == cold.placement
+        assert warm.routing == cold.routing
+        assert math.isfinite(wobj)
+        validate_fleet_plan(warm, drifted, fleet)
+
+    def test_capacity_exhausted_raises(self):
+        ts = eight_tenants()
+        fleet = [DeviceSpec("a", 8 << 20, 400e6, 3), DeviceSpec("b", 8 << 20, 400e6, 3)]
+        with pytest.raises(ValueError, match="cannot host"):
+            fleet_hill_climb(ts, fleet)
+
+    def test_empty_fleet_raises(self):
+        with pytest.raises(ValueError):
+            fleet_hill_climb(small_mix(), [])
+
+    def test_unplaced_tenant_rows_are_inert(self):
+        ts = eight_tenants()
+        fleet = hetero_fleet()
+        fp, _ = fleet_hill_climb(ts, fleet)
+        for d, plan in enumerate(fp.device_plans):
+            for i, t in enumerate(ts):
+                if d not in fp.placement[i]:
+                    assert plan.partition[i] == len(t.profile.segments)
+                    assert plan.cores[i] == 0
+
+    def test_tables_cache_reused_across_replans(self):
+        ts = small_mix()
+        fleet = [
+            DeviceSpec("a", 4 << 20, 200e6, 4),
+            DeviceSpec("b", 4 << 20, 200e6, 4),
+        ]
+        cache = FleetTablesCache()
+        plan0, _ = fleet_hill_climb(ts, fleet, tables=cache)
+        built = len(cache._tables)
+        assert built >= 1
+        # A warm re-plan over the same (class, mix) builds no new tables:
+        # identity-keyed profiles hit the existing entries.
+        drifted = [TenantSpec(t.profile, t.rate * 1.2) for t in ts]
+        fleet_hill_climb(drifted, fleet, init=plan0, tables=cache)
+        assert len(cache._tables) == built
+
+
+# ---------------------------------------------------------------------------
+# validate_fleet_plan rejection paths (property-tested)
+
+
+def _valid_fleet_and_plan(n_tenants=3):
+    ts = small_mix()[:n_tenants]
+    fleet = [DeviceSpec("a", 8 << 20, 400e6, 4), DeviceSpec("b", 8 << 20, 400e6, 4)]
+    fp, _ = fleet_hill_climb(ts, fleet)
+    return ts, fleet, fp
+
+
+class TestValidateFleetPlanRejections:
+    def test_valid_plan_accepted(self):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        validate_fleet_plan(fp, ts, fleet)
+
+    @given(st.integers(min_value=0, max_value=2))
+    @settings(max_examples=10)
+    def test_bad_partition_index_rejected(self, tenant_idx):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        dev = fp.placement[tenant_idx][0]
+        plan = fp.device_plans[dev]
+        bad_p = len(ts[tenant_idx].profile.segments) + 1
+        partition = tuple(
+            bad_p if i == tenant_idx else p for i, p in enumerate(plan.partition)
+        )
+        bad = FleetPlan(
+            placement=fp.placement,
+            routing=fp.routing,
+            device_plans=tuple(
+                Plan(partition, pl.cores, pl.discipline) if d == dev else pl
+                for d, pl in enumerate(fp.device_plans)
+            ),
+        )
+        with pytest.raises(ValueError):
+            validate_fleet_plan(bad, ts, fleet)
+
+    @given(st.integers(min_value=5, max_value=12))
+    @settings(max_examples=10)
+    def test_cores_over_device_budget_rejected(self, total_cores):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        dev = fp.placement[0][0]
+        plan = fp.device_plans[dev]
+        # Inflate tenant 0's cores so the device total exceeds cpu_cores=4.
+        cores = tuple(
+            total_cores if i == 0 else c for i, c in enumerate(plan.cores)
+        )
+        partition = tuple(
+            0 if i == 0 else p for i, p in enumerate(plan.partition)
+        )
+        bad = FleetPlan(
+            placement=tuple(
+                (dev,) if i == 0 else p for i, p in enumerate(fp.placement)
+            ),
+            routing=fp.routing,
+            device_plans=tuple(
+                Plan(partition, cores, pl.discipline) if d == dev else pl
+                for d, pl in enumerate(fp.device_plans)
+            ),
+        )
+        with pytest.raises(ValueError):
+            validate_fleet_plan(bad, ts, fleet)
+
+    @given(st.integers(min_value=0, max_value=2))
+    @settings(max_examples=10)
+    def test_tenant_placed_on_no_device_rejected(self, tenant_idx):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        bad = FleetPlan(
+            placement=tuple(
+                () if i == tenant_idx else p for i, p in enumerate(fp.placement)
+            ),
+            routing=tuple(
+                () if i == tenant_idx else r for i, r in enumerate(fp.routing)
+            ),
+            device_plans=fp.device_plans,
+        )
+        with pytest.raises(ValueError, match="no device"):
+            validate_fleet_plan(bad, ts, fleet)
+
+    @given(st.floats(min_value=0.05, max_value=0.9))
+    @settings(max_examples=10)
+    def test_routing_weights_off_unity_rejected(self, w):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        bad = FleetPlan(
+            placement=fp.placement,
+            routing=tuple(
+                (w,) if i == 0 else r for i, r in enumerate(fp.routing)
+            ),
+            device_plans=fp.device_plans,
+        )
+        with pytest.raises(ValueError, match="sum"):
+            validate_fleet_plan(bad, ts, fleet)
+
+    def test_out_of_range_device_rejected(self):
+        ts, fleet, fp = _valid_fleet_and_plan()
+        bad = FleetPlan(
+            placement=tuple(
+                (7,) if i == 0 else p for i, p in enumerate(fp.placement)
+            ),
+            routing=fp.routing,
+            device_plans=fp.device_plans,
+        )
+        with pytest.raises(ValueError):
+            validate_fleet_plan(bad, ts, fleet)
+
+
+# ---------------------------------------------------------------------------
+# route_trace
+
+
+class TestRouteTrace:
+    def _placed(self, n_tenants, n_devices):
+        placement = tuple((i % n_devices,) for i in range(n_tenants))
+        routing = tuple((1.0,) for _ in range(n_tenants))
+        return placement, routing
+
+    @given(st.integers(min_value=1, max_value=4), st.integers(min_value=0, max_value=99))
+    @settings(max_examples=15)
+    def test_partitions_exactly(self, n_devices, seed):
+        rates = [3.0, 2.0, 1.0, 1.0, 0.5]
+        trace = poisson_trace(rates, 40.0, seed=seed)
+        placement, routing = self._placed(len(rates), n_devices)
+        subs = route_trace(trace, placement, routing, n_devices)
+        assert sum(len(s) for s in subs) == len(trace)
+        for d, sub in enumerate(subs):
+            for m in np.unique(np.asarray(sub.model_idx)):
+                assert placement[int(m)] == (d,)
+        merged = np.sort(np.concatenate([np.asarray(s.arrival) for s in subs]))
+        assert np.array_equal(merged, np.sort(np.asarray(trace.arrival)))
+
+    def test_single_device_identity(self):
+        trace = poisson_trace([2.0, 1.0], 30.0, seed=0)
+        subs = route_trace(trace, ((0,), (0,)), ((1.0,), (1.0,)), 1)
+        assert subs[0] is trace
+
+    def test_multi_placement_split_is_seed_deterministic(self):
+        trace = poisson_trace([5.0], 60.0, seed=2)
+        placement, routing = ((0, 1),), ((0.5, 0.5),)
+        a = route_trace(trace, placement, routing, 2, seed=9)
+        b = route_trace(trace, placement, routing, 2, seed=9)
+        c = route_trace(trace, placement, routing, 2, seed=10)
+        for s0, s1 in zip(a, b):
+            assert np.array_equal(np.asarray(s0.arrival), np.asarray(s1.arrival))
+        assert any(
+            not np.array_equal(np.asarray(s0.arrival), np.asarray(s1.arrival))
+            for s0, s1 in zip(a, c)
+        )
+        assert sum(len(s) for s in a) == len(trace)
+
+    def test_json_replay_routes_bitwise(self):
+        trace = poisson_trace([3.0, 2.0], 50.0, seed=4)
+        replay = trace_from_json(trace_to_json(trace))
+        placement, routing = ((0, 1), (1,)), ((0.3, 0.7), (1.0,))
+        a = route_trace(trace, placement, routing, 2, seed=1)
+        b = route_trace(replay, placement, routing, 2, seed=1)
+        for s0, s1 in zip(a, b):
+            assert np.array_equal(np.asarray(s0.model_idx), np.asarray(s1.model_idx))
+            assert np.array_equal(np.asarray(s0.arrival), np.asarray(s1.arrival))
+
+    def test_unplaced_model_in_trace_raises(self):
+        trace = poisson_trace([1.0, 1.0], 30.0, seed=0)
+        with pytest.raises(ValueError, match="unplaced"):
+            route_trace(trace, ((0,),), ((1.0,),), 2)
+
+
+# ---------------------------------------------------------------------------
+# merge_fleet_results
+
+
+def _sim_result(latencies, arrivals, duration=10.0, misses=None):
+    n = len(latencies)
+    return SimResult(
+        latencies=[list(l) for l in latencies],
+        arrivals=[list(a) for a in arrivals],
+        tpu_busy=sum(float(np.sum(l)) for l in latencies),
+        duration=duration,
+        misses=misses or [0] * n,
+        tpu_requests=[len(l) for l in latencies],
+    )
+
+
+class TestMergeFleetResults:
+    def test_single_device_is_identity(self):
+        r = _sim_result([[0.1, 0.2], [0.3]], [[1.0, 2.0], [1.5]])
+        merged = merge_fleet_results([r])
+        assert merged.latencies[0] is r.latencies[0]
+        assert merged.duration == r.duration
+        assert merged.n_devices == 1
+
+    def test_pools_latencies_and_sums_counters(self):
+        a = _sim_result([[0.1], []], [[1.0], []], duration=10.0, misses=[1, 0])
+        b = _sim_result([[], [0.2, 0.4]], [[], [2.0, 3.0]], duration=12.0, misses=[0, 2])
+        merged = merge_fleet_results([a, b])
+        assert merged.n_devices == 2
+        assert list(np.asarray(merged.latencies[0])) == [0.1]
+        assert list(np.asarray(merged.latencies[1])) == [0.2, 0.4]
+        assert merged.misses == [1, 2]
+        assert merged.tpu_requests == [1, 2]
+        assert merged.duration == 12.0
+        assert merged.tpu_busy == pytest.approx(a.tpu_busy + b.tpu_busy)
+
+    def test_fleet_utilization_normalizes_by_devices(self):
+        a = _sim_result([[1.0]], [[0.0]], duration=10.0)
+        b = _sim_result([[1.0]], [[0.0]], duration=10.0)
+        merged = merge_fleet_results([a, b])
+        assert merged.tpu_utilization == pytest.approx(2.0 / (10.0 * 2))
+
+    def test_mismatched_model_counts_raise(self):
+        a = _sim_result([[0.1]], [[1.0]])
+        b = _sim_result([[0.1], [0.2]], [[1.0], [2.0]])
+        with pytest.raises(ValueError):
+            merge_fleet_results([a, b])
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            merge_fleet_results([])
+
+
+# ---------------------------------------------------------------------------
+# Adaptive fleet controller
+
+
+class TestAdaptiveFleet:
+    def test_imbalance_triggers_placement_replan(self):
+        ts = eight_tenants()
+        profiles = [t.profile for t in ts]
+        fleet = hetero_fleet()
+        base = tuple(1.0 for _ in ts)
+        spike_late = tuple(
+            8.0 if i >= 6 else 0.3 for i in range(len(ts))
+        )
+        trace = dynamic_trace(
+            [RatePhase(0.0, 80.0, base), RatePhase(80.0, 240.0, spike_late)],
+            seed=13,
+        )
+        res = run_adaptive_fleet(
+            profiles,
+            trace,
+            fleet,
+            replan_period=20.0,
+            imbalance_threshold=0.15,
+            imbalance_patience=2,
+        )
+        assert res.placement_replan_times, "sustained skew never re-placed"
+        assert set(res.placement_replan_times) <= set(res.replan_times)
+        # One plan per boundary (the initial plan's boundary is t=0).
+        assert len(res.fleet_plans) == len(res.replan_times)
+
+    def test_no_imbalance_no_placement_replan(self):
+        ts = small_mix()
+        profiles = [t.profile for t in ts]
+        fleet = [
+            DeviceSpec("a", 8 << 20, 400e6, 4),
+            DeviceSpec("b", 8 << 20, 400e6, 4),
+        ]
+        trace = poisson_trace([t.rate for t in ts], 120.0, seed=7)
+        res = run_adaptive_fleet(
+            profiles, trace, fleet, replan_period=30.0, imbalance_threshold=10.0
+        )
+        assert res.placement_replan_times == []
+        placements = {fp.placement for fp in res.fleet_plans}
+        assert len(placements) == 1
+
+    def test_controller_fleet_kwarg_delegates(self):
+        ts = small_mix()
+        profiles = [t.profile for t in ts]
+        trace = poisson_trace([t.rate for t in ts], 60.0, seed=1)
+        dev = unit_device(len(ts))
+        via_controller = run_adaptive(
+            profiles, trace, HW, len(ts), replan_period=30.0, fleet=[dev]
+        )
+        direct = run_adaptive_fleet(profiles, trace, [dev], replan_period=30.0)
+        assert via_controller.replan_times == direct.replan_times
+        assert_results_bitwise(via_controller.sim, direct.sim)
+
+    def test_controller_fleet_rejects_custom_planner(self):
+        ts = small_mix()
+        profiles = [t.profile for t in ts]
+        trace = poisson_trace([t.rate for t in ts], 10.0, seed=1)
+        with pytest.raises(ValueError, match="fleet"):
+            run_adaptive(
+                profiles,
+                trace,
+                HW,
+                len(ts),
+                planner=lambda *a, **k: (None, 0.0),
+                fleet=[unit_device(len(ts))],
+            )
+
+    def test_offered_loads_shape_and_scaling(self):
+        ts = small_mix()
+        fleet = [
+            DeviceSpec("a", 8 << 20, 400e6, 4),
+            DeviceSpec("b", 8 << 20, 400e6, 4, tpu_speed=2.0),
+        ]
+        fp, _ = fleet_hill_climb(ts, fleet)
+        loads = offered_device_loads(ts, fp, fleet, [t.rate for t in ts])
+        assert len(loads) == 2
+        assert all(l >= 0.0 for l in loads)
+
+
+# ---------------------------------------------------------------------------
+# make_backend registry (satellite regression)
+
+
+class TestMakeBackendErrors:
+    def test_unknown_backend_lists_valid_names(self):
+        ts = small_mix()
+        plan, _ = hill_climb(ts, HW, len(ts))
+        profiles = [t.profile for t in ts]
+        with pytest.raises(ValueError) as ei:
+            make_backend("qpu", profiles, plan, HW)
+        msg = str(ei.value)
+        assert "'qpu'" in msg
+        for name in ("stepper", "des", "jax"):
+            assert f"'{name}'" in msg
