@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet
+.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet bench-predictive
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -26,7 +26,9 @@ test-slow:
 # + the scheduling-discipline sweep smoke (self-checks fcfs == the frozen
 #   DES baseline before timing)
 # + the fleet-scaling smoke (self-checks the N=1 fleet degenerate case is
-#   bitwise the single-device API before timing).
+#   bitwise the single-device API before timing)
+# + the predictive re-planning smoke (self-checks the no-forecaster/no-cache
+#   path is bitwise the reactive controller before timing).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
@@ -34,6 +36,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.sim_throughput --smoke --out BENCH_sim_throughput.smoke.json
 	$(PYTHON) -m benchmarks.scheduling --smoke --out BENCH_scheduling.smoke.json
 	$(PYTHON) -m benchmarks.fleet_scaling --smoke --out BENCH_fleet_scaling.smoke.json
+	$(PYTHON) -m benchmarks.predictive --smoke --out BENCH_predictive.smoke.json
 
 # Full scheduling-discipline sweep (swap-amortization vs FCFS on the
 # swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
@@ -53,3 +56,9 @@ bench-jax:
 # BENCH_fleet_scaling.json.
 bench-fleet:
 	$(PYTHON) -m benchmarks.fleet_scaling --out BENCH_fleet_scaling.json
+
+# Full predictive re-planning sweep: reactive vs forecaster-driven
+# controllers on MMPP/diurnal drift + plan-memoization hit economics
+# (self-checks the bitwise opt-in pin first); records BENCH_predictive.json.
+bench-predictive:
+	$(PYTHON) -m benchmarks.predictive --out BENCH_predictive.json

@@ -30,6 +30,7 @@ MODULES = {
     "sim_throughput": "benchmarks.sim_throughput",
     "jax_throughput": "benchmarks.jax_throughput",
     "fleet_scaling": "benchmarks.fleet_scaling",
+    "predictive": "benchmarks.predictive",
 }
 
 

@@ -40,6 +40,7 @@ import math
 from typing import Sequence
 
 from repro.core.allocator import ensure_eval_tables, hill_climb
+from repro.core.latency import penalized_objective
 from repro.core.plan_tables import PlanTables
 from repro.core.planner import (
     FCFS,
@@ -414,6 +415,7 @@ def fleet_hill_climb(
     k_max: int | None = None,
     init: FleetPlan | None = None,
     replan_placement: bool | None = None,
+    warm_start: bool = True,
     tables: FleetTablesCache | None = None,
     discipline: DisciplineSpec = FCFS,
     discipline_space: Sequence[DisciplineSpec] | None = None,
@@ -433,6 +435,10 @@ def fleet_hill_climb(
     device warm-starts ``hill_climb`` from its incumbent plan against the
     new rates.  This is the controller's periodic re-plan: N independent
     warm climbs against class-shared tables, no placement churn.
+    ``warm_start=False`` keeps the placement/routing of ``init`` but
+    re-climbs every device cold (all-CPU start, Algorithm 1) -- the
+    fleet analogue of the single-device cold fallback, for escaping a
+    drifted warm basin without migrating tenants.
 
     ``k_max=None`` gives every device its own ``cpu_cores`` budget; an int
     caps all devices.  ``tables`` carries ``PlanTables`` across calls (one
@@ -477,7 +483,11 @@ def fleet_hill_climb(
                 tenants,
                 k_caps[d],
                 cache,
-                init_sub=_restrict(init.device_plans[d], members[d]),
+                init_sub=(
+                    _restrict(init.device_plans[d], members[d])
+                    if warm_start
+                    else None
+                ),
                 discipline=discipline,
                 discipline_space=discipline_space,
             )
@@ -607,11 +617,55 @@ def round_robin_fleet_plan(
     )
 
 
+def fleet_plan_objective(
+    tenants: Sequence[TenantSpec],
+    fleet_plan: FleetPlan,
+    fleet: Sequence[DeviceSpec],
+) -> float:
+    """Re-score an existing ``FleetPlan`` under fresh tenant rates.
+
+    Sum of per-device Eq. 5 penalized objectives -- the same total
+    ``fleet_hill_climb`` reports for the plan it returns (up to batched-vs-
+    scalar float noise), but without any search: each device's placed
+    subset is projected out with ``_restrict`` and scored directly with
+    ``penalized_objective`` on the device-scaled profiles and the routed
+    share of each tenant's rate.  This is the verify step of the fleet
+    plan cache (``core/plan_cache.py``): one cheap evaluation decides
+    whether a memoized plan is still within margin of its stored quality.
+    """
+    if fleet_plan.n_tenants != len(tenants) or fleet_plan.n_devices != len(
+        fleet
+    ):
+        raise ValueError("fleet plan shape does not match tenants/fleet")
+    total = 0.0
+    for d, dev in enumerate(fleet):
+        members = [
+            i
+            for i in range(len(tenants))
+            if d in fleet_plan.placement[i]
+        ]
+        if not members:
+            continue
+        sub = [
+            TenantSpec(
+                tenants[i].profile.scaled(dev.tpu_speed, dev.cpu_speed),
+                tenants[i].rate
+                * fleet_plan.routing[i][fleet_plan.placement[i].index(d)],
+            )
+            for i in members
+        ]
+        total += penalized_objective(
+            sub, _restrict(fleet_plan.device_plans[d], members), dev.platform
+        )
+    return float(total)
+
+
 __all__ = [
     "DeviceSpec",
     "FleetPlan",
     "FleetTablesCache",
     "fleet_hill_climb",
+    "fleet_plan_objective",
     "round_robin_fleet_plan",
     "validate_fleet_plan",
 ]

@@ -1,0 +1,337 @@
+"""Plan memoization: LRU cache over quantized rate states, verify-then-reuse.
+
+Diurnal and bursty workloads revisit the same traffic states over and over
+(the morning mix looks like yesterday's morning mix), yet the reactive
+controller pays a fresh ``hill_climb`` at every re-plan boundary.  This
+module memoizes plans keyed on the *quantized* rate vector plus the mix
+fingerprint, so a recurring state re-plans with one cache probe instead of
+a search.
+
+Key design points:
+
+* **Quantized keys.**  Rates are snapped to a multiplicative grid
+  (``quantize_rates``): two vectors whose per-model rates agree within the
+  relative cell width ``rel`` share a key.  The grid is logarithmic, so
+  0.10 vs 0.11 req/s land together while 1 vs 2 req/s do not; rates at or
+  below ``idle_floor`` share one idle cell.
+
+* **Verify-then-reuse.**  Quantization means a hit's stored plan was
+  optimized for *nearby* rates, not these exact rates, and the plan space
+  is rugged enough that "nearby" can occasionally be bad (e.g. the cell
+  straddles a stability boundary).  Every hit is therefore delta-evaluated:
+  one ``penalized_objective`` call re-scores the cached plan under the
+  fresh exact rates, and the plan is reused only when its normalized
+  objective (obj / total rate, the controller's Eq. 10 trend statistic) is
+  within ``margin`` of the quality recorded when it was stored -- and
+  finite, and below the infeasibility penalty floor.  Anything else is a
+  *reject*: the caller falls back to its normal warm ``hill_climb`` and
+  the fresh result overwrites the entry.  A hit costs one plan evaluation
+  (~100 us at 64 tenants) instead of a search.
+
+* **Opt-in.**  ``run_adaptive(plan_cache=None)`` -- the default -- never
+  constructs or consults a cache; the no-cache path is bitwise the
+  reactive controller (standing invariant, self-checked by
+  ``benchmarks/predictive.py`` before any timing).
+
+``PlanCache`` serves the single-device controller; ``FleetPlanCache`` is
+the same machinery for ``run_adaptive_fleet``, with the verify step
+delegated to ``fleet_plan_objective`` and fleet identity (device class
+keys) folded into the key.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.latency import _PENALTY_BASE, penalized_objective
+from repro.core.planner import DisciplineSpec, Plan, TenantSpec
+from repro.hw.specs import Platform
+
+#: Default relative width of one quantization cell (10% in rate).
+DEFAULT_REL = 0.10
+#: Rates at or below this (req/s) collapse into a single "idle" cell.
+IDLE_FLOOR = 1e-3
+
+
+def quantize_rates(
+    rates: Sequence[float],
+    rel: float = DEFAULT_REL,
+    *,
+    idle_floor: float = IDLE_FLOOR,
+) -> tuple[int, ...]:
+    """Snap a rate vector onto a multiplicative grid of width ``rel``.
+
+    Each rate maps to ``round(log(r / idle_floor) / log(1 + rel))`` -- a
+    geometric bucket index -- so two rates within about ``rel`` of each
+    other share a bucket at any traffic scale.  Rates at or below
+    ``idle_floor`` (including exact zero) map to the sentinel ``-1``.
+    """
+    if rel <= 0:
+        raise ValueError("rel must be positive")
+    step = math.log1p(rel)
+    out = []
+    for r in rates:
+        if r <= idle_floor:
+            out.append(-1)
+        else:
+            out.append(int(round(math.log(r / idle_floor) / step)))
+    return tuple(out)
+
+
+def mix_fingerprint(tenants: Sequence[TenantSpec]) -> tuple:
+    """Order-sensitive structural identity of a tenant mix's models."""
+    return tuple(t.profile.fingerprint for t in tenants)
+
+
+def _space_key(
+    discipline_space: Sequence[DisciplineSpec] | None,
+) -> tuple | None:
+    return None if discipline_space is None else tuple(discipline_space)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Lookup counters: a *reject* is a key hit whose plan failed verify."""
+
+    hits: int = 0
+    misses: int = 0
+    rejects: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses + self.rejects
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "rejects": self.rejects,
+            "hit_rate": self.hit_rate,
+        }
+
+
+@dataclasses.dataclass
+class _Entry:
+    plan: Plan
+    norm_objective: float  # obj / tot_rate at store time (finite by contract)
+
+
+class _LruMixin:
+    """Shared LRU bookkeeping for the single-device and fleet caches."""
+
+    def __init__(self, capacity: int, rel: float, margin: float):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if margin < 0:
+            raise ValueError("margin must be non-negative")
+        self.capacity = int(capacity)
+        self.rel = float(rel)
+        self.margin = float(margin)
+        self.stats = CacheStats()
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def _get(self, key):
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+        return entry
+
+    def _put(self, key, entry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def _admit(self, entry, objective: float, tot_rate: float):
+        """Verify-then-reuse decision shared by both caches.
+
+        ``objective`` is the cached plan re-scored under the fresh rates.
+        Returns the (plan, objective) pair to reuse, or ``None`` for a
+        reject.  Non-finite or penalty-range objectives never pass: an
+        infeasible cached plan is worthless no matter what was stored
+        (nan-means-unknown convention -- see ``serving/controller.py``).
+        """
+        if not math.isfinite(objective) or objective >= _PENALTY_BASE:
+            return None
+        if tot_rate > 0:
+            norm = objective / tot_rate
+            if norm > (1.0 + self.margin) * entry.norm_objective:
+                return None
+        return entry.plan, float(objective)
+
+
+class PlanCache(_LruMixin):
+    """LRU plan memoization for the single-device adaptive controller.
+
+    ``lookup`` returns ``(plan, objective)`` on a verified hit or ``None``
+    (miss or reject) -- the caller then runs its warm ``hill_climb`` and
+    ``store``s the result, refreshing the cell.  See the module docstring
+    for the key structure and verify semantics.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 256,
+        *,
+        rel: float = DEFAULT_REL,
+        margin: float = 0.10,
+    ):
+        super().__init__(capacity, rel, margin)
+
+    def _key(
+        self,
+        tenants: Sequence[TenantSpec],
+        platform: Platform,
+        k_max: int,
+        discipline_space: Sequence[DisciplineSpec] | None,
+    ) -> tuple:
+        return (
+            quantize_rates([t.rate for t in tenants], self.rel),
+            mix_fingerprint(tenants),
+            platform,
+            int(k_max),
+            _space_key(discipline_space),
+        )
+
+    def lookup(
+        self,
+        tenants: Sequence[TenantSpec],
+        platform: Platform,
+        k_max: int,
+        *,
+        discipline_space: Sequence[DisciplineSpec] | None = None,
+    ) -> tuple[Plan, float] | None:
+        entry = self._get(self._key(tenants, platform, k_max, discipline_space))
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        obj = penalized_objective(tenants, entry.plan, platform)
+        hit = self._admit(entry, obj, sum(t.rate for t in tenants))
+        if hit is None:
+            self.stats.rejects += 1
+            return None
+        self.stats.hits += 1
+        return hit
+
+    def store(
+        self,
+        tenants: Sequence[TenantSpec],
+        platform: Platform,
+        k_max: int,
+        plan: Plan,
+        objective: float,
+        *,
+        discipline_space: Sequence[DisciplineSpec] | None = None,
+    ) -> None:
+        """Record a freshly planned state; silently skips unusable entries
+        (idle mix, infeasible/non-finite objective)."""
+        tot_rate = sum(t.rate for t in tenants)
+        if not tot_rate > 0:
+            return
+        norm = objective / tot_rate
+        if not math.isfinite(norm) or objective >= _PENALTY_BASE:
+            return
+        self._put(
+            self._key(tenants, platform, k_max, discipline_space),
+            _Entry(plan, norm),
+        )
+
+
+class FleetPlanCache(_LruMixin):
+    """LRU memoization of ``FleetPlan``s for ``run_adaptive_fleet``.
+
+    Same quantize / fingerprint / verify-then-reuse scheme as
+    ``PlanCache``; the key additionally folds in each device's
+    ``class_key`` (speeds, platform) so heterogeneous fleets never share
+    entries, and the verify step re-scores the whole fleet plan with
+    ``fleet_plan_objective``.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 256,
+        *,
+        rel: float = DEFAULT_REL,
+        margin: float = 0.10,
+    ):
+        super().__init__(capacity, rel, margin)
+
+    def _key(
+        self,
+        tenants: Sequence[TenantSpec],
+        fleet: Sequence,
+        k_max: int | None,
+        discipline_space: Sequence[DisciplineSpec] | None,
+    ) -> tuple:
+        return (
+            quantize_rates([t.rate for t in tenants], self.rel),
+            mix_fingerprint(tenants),
+            tuple(d.class_key for d in fleet),
+            None if k_max is None else int(k_max),
+            _space_key(discipline_space),
+        )
+
+    def lookup(
+        self,
+        tenants: Sequence[TenantSpec],
+        fleet: Sequence,
+        *,
+        k_max: int | None = None,
+        discipline_space: Sequence[DisciplineSpec] | None = None,
+    ):
+        from repro.core.fleet import fleet_plan_objective
+
+        entry = self._get(self._key(tenants, fleet, k_max, discipline_space))
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        obj = fleet_plan_objective(tenants, entry.plan, fleet)
+        hit = self._admit(entry, obj, sum(t.rate for t in tenants))
+        if hit is None:
+            self.stats.rejects += 1
+            return None
+        self.stats.hits += 1
+        return hit
+
+    def store(
+        self,
+        tenants: Sequence[TenantSpec],
+        fleet: Sequence,
+        fleet_plan,
+        objective: float,
+        *,
+        k_max: int | None = None,
+        discipline_space: Sequence[DisciplineSpec] | None = None,
+    ) -> None:
+        tot_rate = sum(t.rate for t in tenants)
+        if not tot_rate > 0:
+            return
+        norm = objective / tot_rate
+        if not math.isfinite(norm) or objective >= _PENALTY_BASE:
+            return
+        self._put(
+            self._key(tenants, fleet, k_max, discipline_space),
+            _Entry(fleet_plan, norm),
+        )
+
+
+__all__ = [
+    "CacheStats",
+    "FleetPlanCache",
+    "PlanCache",
+    "mix_fingerprint",
+    "quantize_rates",
+]

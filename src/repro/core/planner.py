@@ -58,6 +58,18 @@ class ModelProfile:
     def total_flops(self) -> float:
         return sum(s.flops for s in self.segments)
 
+    @functools.cached_property
+    def fingerprint(self) -> tuple:
+        """Structural identity for memoization keys.
+
+        Name, I/O size, and the full per-segment cost table: two profiles
+        with equal fingerprints yield identical objectives for any plan, so
+        the plan cache (``core/plan_cache.py``) keys tenant mixes on this
+        rather than on object identity.  ``Segment`` is a frozen dataclass,
+        so the tuple is hashable and the hash is cached with the property.
+        """
+        return (self.name, self.input_bytes, self.segments)
+
     # --- cached cumulative tables (hot path of the online allocator) -----
     @functools.cached_property
     def _cum_weight(self) -> np.ndarray:

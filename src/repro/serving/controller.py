@@ -16,9 +16,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import inspect
+import math
 import statistics
 import time
-from typing import Callable, Sequence
+from typing import TYPE_CHECKING, Callable, Sequence
 
 import numpy as np
 
@@ -30,12 +31,43 @@ from repro.serving.result import SimResult
 from repro.serving.simulator import make_backend, sorted_trace_and_horizon
 from repro.serving.workload import Request, Trace
 
+if TYPE_CHECKING:
+    from repro.core.plan_cache import PlanCache
+    from repro.serving.forecast import RateForecaster
+
+# ``run_adaptive``'s cold-fallback default is 0.05 in single-device mode but
+# must NOT leak into fleet mode (the fleet guard is opt-in; the delegation
+# contract pins run_adaptive(fleet=...) defaults bitwise against
+# run_adaptive_fleet defaults).  The sentinel tells the defaults apart from
+# an explicit caller value, which forwards verbatim.
+_UNSET_MARGIN = object()
+
 
 class SlidingRateEstimator:
-    """lambda-hat per model from a sliding window of arrival timestamps."""
+    """lambda-hat per model from a sliding window of arrival timestamps.
 
-    def __init__(self, n_models: int, window: float = 30.0):
+    ``decay`` (seconds, default ``None`` = off) switches the estimate from
+    the uniform stamp count ``N / horizon`` to an exponentially weighted
+    one: each stamp at age ``a`` contributes ``exp(-a / decay)`` and the
+    total is normalized by ``decay * (1 - exp(-horizon / decay))``, which
+    keeps the estimator unbiased for stationary Poisson arrivals while
+    fixing the burst-decay bias of the uniform window -- after a burst
+    ends, the uniform estimate stays inflated until the last burst stamp
+    ages out (up to a full ``window``), whereas the weighted estimate
+    relaxes as ``exp(-t_since_burst / decay)``.  ``decay=None`` is bitwise
+    the original estimator.
+    """
+
+    def __init__(
+        self,
+        n_models: int,
+        window: float = 30.0,
+        decay: float | None = None,
+    ):
+        if decay is not None and decay <= 0:
+            raise ValueError("decay must be positive (or None to disable)")
         self.window = window
+        self.decay = decay
         self._stamps: list[collections.deque[float]] = [
             collections.deque() for _ in range(n_models)
         ]
@@ -67,6 +99,11 @@ class SlidingRateEstimator:
         # systematically underestimate lambda-hat on early re-plans.
         horizon = min(self.window, now)
         cutoff = now - self.window
+        tau = self.decay
+        # Normalizer of the decayed estimate: the integral of the weight
+        # kernel over the observed horizon, so a stationary Poisson stream
+        # of rate lambda has expectation lambda regardless of tau.
+        denom = tau * -math.expm1(-horizon / tau) if tau is not None else 0.0
         out = []
         for dq in self._stamps:
             # Strict < keeps a stamp sitting exactly on the window boundary
@@ -75,7 +112,13 @@ class SlidingRateEstimator:
             # evicted by one call and missed by the next.
             while dq and dq[0] < cutoff:
                 dq.popleft()
-            out.append(len(dq) / horizon if horizon > 0 else 0.0)
+            if tau is None:
+                out.append(len(dq) / horizon if horizon > 0 else 0.0)
+            elif denom > 0:
+                w = sum(math.exp((t - now) / tau) for t in dq)
+                out.append(w / denom)
+            else:
+                out.append(0.0)
         return out
 
 
@@ -95,8 +138,14 @@ def _should_cold_fallback(
     luckiest recent estimate would fire the guard on every swing.  False
     positives (the load genuinely rose) cost one cold climb and nothing
     else -- the better of the two plans is kept either way.
+
+    Nan-means-unknown convention (PR 5): a non-finite normalized objective
+    carries no trend information (an idle boundary or a degenerate
+    evaluation), so it neither fires the guard nor -- at the call sites --
+    enters the history deque.  Callers guard ``tot_rate > 0`` before
+    dividing, so no division by zero can reach this function.
     """
-    if not history:
+    if not history or not math.isfinite(norm_objective):
         return False
     return norm_objective > (1.0 + margin) * statistics.median(history)
 
@@ -121,15 +170,18 @@ def run_adaptive(
     *,
     replan_period: float = 30.0,
     window: float = 30.0,
+    rate_decay: float | None = None,
     initial_rates: Sequence[float] | None = None,
     planner: Callable[..., tuple[Plan, float]] = hill_climb,
     min_rate: float = 0.05,
     warmup_frac: float = 0.05,
     backend: str = "stepper",
     vectorize: bool = True,
-    cold_fallback_margin: float | None = 0.05,
+    cold_fallback_margin: float | None = _UNSET_MARGIN,  # type: ignore[assignment]
     cold_fallback_window: int = 5,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    forecaster: "RateForecaster | None" = None,
+    plan_cache: "PlanCache | None" = None,
     fleet: Sequence | None = None,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
@@ -165,16 +217,40 @@ def run_adaptive(
     default) keeps the planner untouched: plain FCFS, bit-identical to the
     pre-discipline controller.
 
+    ``rate_decay`` (seconds) switches the sliding-window estimator to
+    exponential-decay weighting (see ``SlidingRateEstimator``); ``None``
+    (the default) keeps the original uniform window, bitwise.
+
+    ``forecaster`` (opt-in) makes each re-plan predictive: the controller
+    feeds the forecaster every boundary's rate estimate and, when it is
+    warmed up, plans against the *forecast* rate vector one re-plan period
+    ahead instead of the trailing-window estimate -- the plan switch lands
+    before a forecastable burst rather than one window after it.
+    Boundaries where the forecaster returns ``None`` fall back to the
+    reactive estimate, so ``forecaster=None`` (and any not-yet-warm
+    forecaster) replays the reactive controller bitwise.
+
+    ``plan_cache`` (opt-in, a ``repro.core.plan_cache.PlanCache``) memoizes
+    committed plans keyed on the quantized rate vector: a recurring traffic
+    state re-plans with one verify evaluation instead of a ``hill_climb``.
+    Every hit is re-scored under the exact fresh rates and rejected back to
+    the warm planner when worse than the cache's margin.  ``None`` (the
+    default) is bitwise the uncached controller.
+
     ``fleet`` switches the controller to fleet mode: a sequence of
     ``repro.core.fleet.DeviceSpec`` replaces ``platform`` (which is then
     ignored -- each device carries its own), ``k_max`` caps every device's
     core budget on top of its own ``cpu_cores``, per-device plans re-plan
     warm each period while tenant placement moves only on sustained load
     imbalance, and the return value is a
-    ``repro.serving.fleet.FleetAdaptiveResult``.  Knobs the fleet
-    controller does not implement (a custom ``planner``, the single-device
-    cold-fallback guard) raise / are superseded by the imbalance gate; call
-    ``run_adaptive_fleet`` directly for the fleet-specific knobs.
+    ``repro.serving.fleet.FleetAdaptiveResult``.  A custom ``planner``
+    raises.  ``forecaster`` / ``rate_decay`` forward verbatim
+    (``plan_cache`` must then be a ``FleetPlanCache``), and so do the
+    cold-fallback knobs when given *explicitly* -- the single-device
+    default margin does not leak into fleet mode, where the guard is
+    opt-in alongside the imbalance gate (``run_adaptive_fleet``'s own
+    default), keeping ``run_adaptive(fleet=...)`` defaults bitwise equal
+    to ``run_adaptive_fleet`` defaults.
     """
     if fleet is not None:
         if planner is not hill_climb:
@@ -193,15 +269,26 @@ def run_adaptive(
             k_max=k_max,
             replan_period=replan_period,
             window=window,
+            rate_decay=rate_decay,
             initial_rates=initial_rates,
             min_rate=min_rate,
             warmup_frac=warmup_frac,
             backend=backend,
             vectorize=vectorize,
+            cold_fallback_margin=(
+                None
+                if cold_fallback_margin is _UNSET_MARGIN
+                else cold_fallback_margin
+            ),
+            cold_fallback_window=cold_fallback_window,
             discipline_space=discipline_space,
+            forecaster=forecaster,
+            plan_cache=plan_cache,
         )
+    if cold_fallback_margin is _UNSET_MARGIN:
+        cold_fallback_margin = 0.05
     n = len(profiles)
-    est = SlidingRateEstimator(n, window=window)
+    est = SlidingRateEstimator(n, window=window, decay=rate_decay)
 
     # The rate-free half of the vectorized evaluation engine depends only on
     # (profiles, platform): build it once and reuse it on every re-plan so
@@ -242,11 +329,21 @@ def run_adaptive(
             TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
         ]
         tot_rate = sum(t.rate for t in tenants)
+        t0 = time.perf_counter()
+        if plan_cache is not None:
+            hit = plan_cache.lookup(
+                tenants, platform, k_max, discipline_space=discipline_space
+            )
+            if hit is not None:
+                plan, obj = hit
+                dt = time.perf_counter() - t0
+                if tot_rate > 0 and math.isfinite(obj):
+                    norm_history.append(obj / tot_rate)
+                return plan, obj, dt
         kwargs = dict(planner_kwargs)
         warm = warm_capable and incumbent is not None
         if warm:
             kwargs["init_plan"] = incumbent
-        t0 = time.perf_counter()
         plan, obj = planner(tenants, platform, k_max, **kwargs)
         if (
             warm
@@ -261,8 +358,20 @@ def run_adaptive(
             cold_fallback_times.append(now)
             if cold_obj < obj:
                 plan, obj = cold_plan, cold_obj
+        if plan_cache is not None:
+            plan_cache.store(
+                tenants,
+                platform,
+                k_max,
+                plan,
+                obj,
+                discipline_space=discipline_space,
+            )
         dt = time.perf_counter() - t0
-        if tot_rate > 0:
+        # Nan-means-unknown: only finite normalized objectives carry trend
+        # information for the cold-fallback guard (idle boundaries never
+        # reach here -- ``fire_due_replans`` skips all-zero estimates).
+        if tot_rate > 0 and math.isfinite(obj):
             norm_history.append(obj / tot_rate)
         return plan, obj, dt
 
@@ -286,9 +395,19 @@ def run_adaptive(
         while t >= next_replan:
             sim.advance_to(next_replan)
             rates = est.rates(next_replan)
+            if forecaster is not None:
+                forecaster.observe(next_replan, rates)
             if any(r > 0 for r in rates):
+                plan_rates = rates
+                if forecaster is not None:
+                    # Predictive re-plan: the committed plan serves the next
+                    # replan_period, so score it against the rates forecast
+                    # at that horizon.  None = not warmed up -> reactive.
+                    pred = forecaster.forecast(next_replan, replan_period)
+                    if pred is not None:
+                        plan_rates = pred
                 new_plan, obj, dt = plan_for(
-                    rates, incumbent=sim.plan, now=next_replan
+                    plan_rates, incumbent=sim.plan, now=next_replan
                 )
                 if new_plan != sim.plan:
                     sim.set_plan(new_plan, now=next_replan)

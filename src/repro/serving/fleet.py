@@ -23,9 +23,11 @@ construction, bitwise-identical ``SimResult`` fields
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
@@ -45,7 +47,11 @@ from repro.core.planner import (
 from repro.serving.result import FleetSimResult, SimResult, merge_fleet_results
 from repro.serving.simulator import make_backend, sorted_trace_and_horizon
 from repro.serving.workload import Request, Trace, as_trace, route_trace
-from repro.serving.controller import SlidingRateEstimator
+from repro.serving.controller import SlidingRateEstimator, _should_cold_fallback
+
+if TYPE_CHECKING:
+    from repro.core.plan_cache import FleetPlanCache
+    from repro.serving.forecast import RateForecaster
 
 
 def _device_sims(
@@ -158,6 +164,9 @@ class FleetAdaptiveResult:
     # Boundaries where sustained imbalance triggered a full placement
     # re-plan (a subset of ``replan_times``).
     placement_replan_times: list[float] = dataclasses.field(default_factory=list)
+    # Boundaries where the (opt-in) cold-fallback guard re-climbed the
+    # device plans cold with placement held (a subset of ``replan_times``).
+    cold_fallback_times: list[float] = dataclasses.field(default_factory=list)
 
 
 def run_adaptive_fleet(
@@ -168,6 +177,7 @@ def run_adaptive_fleet(
     k_max: int | None = None,
     replan_period: float = 30.0,
     window: float = 30.0,
+    rate_decay: float | None = None,
     initial_rates: Sequence[float] | None = None,
     min_rate: float = 0.05,
     warmup_frac: float = 0.05,
@@ -175,7 +185,11 @@ def run_adaptive_fleet(
     vectorize: bool = True,
     imbalance_threshold: float = 0.5,
     imbalance_patience: int = 3,
+    cold_fallback_margin: float | None = None,
+    cold_fallback_window: int = 5,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    forecaster: "RateForecaster | None" = None,
+    plan_cache: "FleetPlanCache | None" = None,
     route_seed: int = 0,
 ) -> FleetAdaptiveResult:
     """Adaptive fleet serving: local re-plans, imbalance-gated placement.
@@ -196,12 +210,39 @@ def run_adaptive_fleet(
     were bound at (both backends bind routes at arrival).  Per-span routing
     draws (split-placement tenants only) are seeded by span index on top of
     ``route_seed``, so a replayed trace routes identically.
+
+    ``cold_fallback_margin`` (opt-in, default ``None`` = off) adds the
+    single-device warm-tail guard alongside the imbalance gate: when a warm
+    re-plan's normalized objective regresses past the margin against the
+    recent trend (``_should_cold_fallback``), the device plans re-climb
+    *cold with placement held* (``fleet_hill_climb(warm_start=False)``) and
+    the better result commits.  The trend history is cleared whenever a
+    placement re-plan commits -- post-migration objectives must never be
+    judged against pre-migration history (the two placements have different
+    normalized-objective baselines, so stale history would mis-fire or
+    mask the guard).
+
+    ``rate_decay``, ``forecaster`` and ``plan_cache`` mirror
+    ``run_adaptive`` (the cache must be a
+    ``repro.core.plan_cache.FleetPlanCache``); all default off, keeping
+    this path bitwise the reactive fleet controller.  A memoized plan
+    whose placement differs from the incumbent's counts as a placement
+    re-plan (it migrates tenants), and the cache is bypassed at
+    boundaries where the imbalance gate demands a genuine placement
+    search.
     """
     if not fleet:
         raise ValueError("fleet must contain at least one device")
     n = len(profiles)
-    est = SlidingRateEstimator(n, window=window)
+    est = SlidingRateEstimator(n, window=window, decay=rate_decay)
     cache = FleetTablesCache()
+
+    # Normalized-objective trend for the opt-in warm-tail guard; cleared on
+    # every committed placement re-plan (see the docstring).
+    norm_history: collections.deque[float] = collections.deque(
+        maxlen=max(1, cold_fallback_window)
+    )
+    cold_fallbacks: list[float] = []
 
     def plan_for(
         rates: Sequence[float],
@@ -212,7 +253,37 @@ def run_adaptive_fleet(
         tenants = [
             TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
         ]
+        tot_rate = sum(t.rate for t in tenants)
+        gate_firing = (
+            incumbent is not None and imbalance_streak >= imbalance_patience
+        )
+
+        def commit(
+            plan: FleetPlan, obj: float, t0: float, moved: bool
+        ) -> tuple[FleetPlan, float, float, bool]:
+            # S2 fix: a committed placement re-plan resets the normalized-
+            # objective baseline, so the guard's trend history restarts --
+            # comparing post-migration objectives against pre-migration
+            # history mis-fires the guard.  Nan-means-unknown: non-finite
+            # or zero-traffic objectives carry no trend information.
+            if moved:
+                norm_history.clear()
+            if tot_rate > 0 and math.isfinite(obj):
+                norm_history.append(obj / tot_rate)
+            return plan, obj, time.perf_counter() - t0, moved
+
         t0 = time.perf_counter()
+        if plan_cache is not None and not gate_firing:
+            hit = plan_cache.lookup(
+                tenants, fleet, k_max=k_max, discipline_space=discipline_space
+            )
+            if hit is not None:
+                plan, obj = hit
+                moved = (
+                    incumbent is not None
+                    and plan.placement != incumbent.placement
+                )
+                return commit(plan, obj, t0, moved)
         if incumbent is None:
             plan, obj = fleet_hill_climb(
                 tenants,
@@ -221,7 +292,16 @@ def run_adaptive_fleet(
                 tables=cache,
                 discipline_space=discipline_space,
             )
-            return plan, obj, time.perf_counter() - t0, False
+            if plan_cache is not None:
+                plan_cache.store(
+                    tenants,
+                    fleet,
+                    plan,
+                    obj,
+                    k_max=k_max,
+                    discipline_space=discipline_space,
+                )
+            return commit(plan, obj, t0, False)
         plan, obj = fleet_hill_climb(
             tenants,
             fleet,
@@ -231,7 +311,7 @@ def run_adaptive_fleet(
             discipline_space=discipline_space,
         )
         moved = False
-        if imbalance_streak >= imbalance_patience:
+        if gate_firing:
             cold_plan, cold_obj = fleet_hill_climb(
                 tenants,
                 fleet,
@@ -242,7 +322,37 @@ def run_adaptive_fleet(
             if cold_obj < obj:
                 plan, obj = cold_plan, cold_obj
                 moved = True
-        return plan, obj, time.perf_counter() - t0, moved
+        elif (
+            cold_fallback_margin is not None
+            and tot_rate > 0
+            and _should_cold_fallback(
+                obj / tot_rate, norm_history, cold_fallback_margin
+            )
+        ):
+            # Warm-tail guard: re-climb the device plans cold, placement
+            # held -- the fleet analogue of the single-device fallback.
+            cold_plan, cold_obj = fleet_hill_climb(
+                tenants,
+                fleet,
+                k_max=k_max,
+                init=incumbent,
+                warm_start=False,
+                tables=cache,
+                discipline_space=discipline_space,
+            )
+            cold_fallbacks.append(now)
+            if cold_obj < obj:
+                plan, obj = cold_plan, cold_obj
+        if plan_cache is not None:
+            plan_cache.store(
+                tenants,
+                fleet,
+                plan,
+                obj,
+                k_max=k_max,
+                discipline_space=discipline_space,
+            )
+        return commit(plan, obj, t0, moved)
 
     rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
     imbalance_streak = 0
@@ -266,11 +376,15 @@ def run_adaptive_fleet(
             for sim in sims:
                 sim.advance_to(next_replan)
             rates = est.rates(next_replan)
+            if forecaster is not None:
+                forecaster.observe(next_replan, rates)
             if any(r > 0 for r in rates):
                 clamped = [max(r, min_rate) for r in rates]
                 tenants = [
                     TenantSpec(p, r) for p, r in zip(profiles, clamped)
                 ]
+                # The imbalance gate judges *observed* offered load; only
+                # the plan search runs against forecast rates.
                 loads = offered_device_loads(
                     tenants, fleet_plan, fleet, clamped
                 )
@@ -280,8 +394,13 @@ def run_adaptive_fleet(
                     if spread > imbalance_threshold
                     else 0
                 )
+                plan_rates = rates
+                if forecaster is not None:
+                    pred = forecaster.forecast(next_replan, replan_period)
+                    if pred is not None:
+                        plan_rates = pred
                 new_plan, obj, dt, moved = plan_for(
-                    rates, fleet_plan, next_replan
+                    plan_rates, fleet_plan, next_replan
                 )
                 if moved:
                     placement_replans.append(next_replan)
@@ -327,6 +446,7 @@ def run_adaptive_fleet(
         plan_compute_seconds=compute_times,
         plan_objectives=objectives,
         placement_replan_times=placement_replans,
+        cold_fallback_times=cold_fallbacks,
     )
 
 

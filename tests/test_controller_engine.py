@@ -87,6 +87,65 @@ class TestRateEstimator:
         assert est.rates(15.0) == first
         assert est.rates(15.0) == first
 
+    # -- exponential-decay weighting (opt-in, PR 8) --
+
+    def test_decay_requires_positive(self):
+        with pytest.raises(ValueError):
+            SlidingRateEstimator(1, window=10.0, decay=0.0)
+        with pytest.raises(ValueError):
+            SlidingRateEstimator(1, window=10.0, decay=-1.0)
+
+    def test_decay_matches_closed_form(self):
+        # Pins the estimator's exact semantics: each stamp at age ``a``
+        # weighs exp(-a/tau) and the normalizer is the kernel's integral
+        # over the observed horizon, tau * (1 - exp(-horizon/tau)).
+        tau, now, window = 5.0, 10.0, 30.0
+        stamps = (1.0, 2.0, 3.0, 7.5)
+        est = SlidingRateEstimator(1, window=window, decay=tau)
+        for t in stamps:
+            est.observe(0, t)
+        horizon = min(window, now)
+        expected = sum(np.exp((t - now) / tau) for t in stamps) / (
+            tau * (1.0 - np.exp(-horizon / tau))
+        )
+        assert est.rates(now)[0] == pytest.approx(expected)
+
+    def test_decay_unbiased_for_stationary_arrivals(self):
+        # A steady 2/s stream over a full window estimates ~2/s regardless
+        # of tau (the normalizer makes the weighted count unbiased).
+        for tau in (3.0, 10.0, 100.0):
+            est = SlidingRateEstimator(1, window=30.0, decay=tau)
+            for t in np.arange(0.0, 30.0, 0.5):
+                est.observe(0, float(t))
+            assert est.rates(30.0)[0] == pytest.approx(2.0, rel=0.1)
+
+    def test_decay_steps_down_faster_than_uniform(self):
+        # Regression (the burst-decay bias): after a 10/s burst ends and
+        # traffic settles at 1/s, the uniform window stays inflated until
+        # the burst stamps age out, while the decayed estimate has already
+        # relaxed close to the true post-step rate.
+        def feed(est):
+            for t in np.arange(0.0, 10.0, 0.1):  # 10/s burst in [0, 10)
+                est.observe(0, float(t))
+            for t in np.arange(10.0, 30.0, 1.0):  # 1/s tail in [10, 30)
+                est.observe(0, float(t))
+            return est.rates(30.0)[0]
+
+        plain = feed(SlidingRateEstimator(1, window=30.0))
+        decayed = feed(SlidingRateEstimator(1, window=30.0, decay=5.0))
+        assert plain == pytest.approx(120 / 30.0)  # still burst-inflated
+        assert decayed < plain
+        assert abs(decayed - 1.0) < abs(plain - 1.0)
+        assert decayed == pytest.approx(1.0, rel=0.5)
+
+    def test_decay_none_is_bitwise_default(self):
+        a = SlidingRateEstimator(1, window=10.0)
+        b = SlidingRateEstimator(1, window=10.0, decay=None)
+        for t in (0.5, 1.0, 4.0, 9.0):
+            a.observe(0, t)
+            b.observe(0, t)
+        assert a.rates(9.5) == b.rates(9.5)
+
 
 class TestAdaptiveController:
     def test_adapts_and_beats_static_full_tpu(self):

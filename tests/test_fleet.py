@@ -564,6 +564,56 @@ class TestAdaptiveFleet:
                 fleet=[unit_device(len(ts))],
             )
 
+    def test_guard_history_cleared_on_placement_replan(self):
+        # Regression (PR 8): the opt-in warm-tail guard's trend history is
+        # normalized-objective samples of the *incumbent placement*.  A
+        # committed placement re-plan changes that baseline, so the history
+        # must restart -- without the clear, the first post-migration
+        # boundary is judged against pre-migration (light-load) norms and
+        # the guard mis-fires on every boundary after a migration under
+        # heavier load (verified: removing the clear makes this scenario
+        # cold-fallback at the boundary right after the migration).
+        ts = eight_tenants()
+        profiles = [t.profile for t in ts]
+        fleet = hetero_fleet()
+        base = tuple(1.0 for _ in ts)
+        spike_late = tuple(8.0 if i >= 6 else 0.3 for i in range(len(ts)))
+        trace = dynamic_trace(
+            [RatePhase(0.0, 80.0, base), RatePhase(80.0, 240.0, spike_late)],
+            seed=13,
+        )
+        period = 20.0
+        res = run_adaptive_fleet(
+            profiles,
+            trace,
+            fleet,
+            replan_period=period,
+            imbalance_threshold=0.15,
+            imbalance_patience=2,
+            cold_fallback_margin=0.05,
+        )
+        assert res.placement_replan_times, "scenario must migrate tenants"
+        # The guard itself stays live (it fires on the pre-migration load
+        # rise), but never inside the stale-history window right after a
+        # committed migration.
+        assert res.cold_fallback_times, "scenario must exercise the guard"
+        window = 5 * period  # cold_fallback_window boundaries
+        for pt in res.placement_replan_times:
+            assert not any(
+                pt < t <= pt + window for t in res.cold_fallback_times
+            ), f"guard mis-fired against stale history after migration at {pt}"
+
+    def test_guard_defaults_off_in_fleet_mode(self):
+        # The fleet guard is opt-in: defaults never cold-fallback, and the
+        # result field stays empty (the delegation pins in
+        # TestDegenerateFleet rely on this default staying off).
+        ts = small_mix()
+        profiles = [t.profile for t in ts]
+        trace = poisson_trace([t.rate for t in ts], 90.0, seed=11)
+        fleet = [unit_device(len(ts))]
+        res = run_adaptive_fleet(profiles, trace, fleet, replan_period=30.0)
+        assert res.cold_fallback_times == []
+
     def test_offered_loads_shape_and_scaling(self):
         ts = small_mix()
         fleet = [

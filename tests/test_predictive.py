@@ -1,0 +1,428 @@
+"""Tests for predictive re-planning: rate forecasters, the plan-memoization
+cache, and their opt-in wiring into the adaptive controller (PR 8).
+
+The load-bearing contract throughout: forecasting and memoization are
+opt-in, and the default path (``forecaster=None, plan_cache=None``) is
+bitwise the reactive controller.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import hill_climb
+from repro.core.plan_cache import PlanCache, mix_fingerprint, quantize_rates
+from repro.core.planner import TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import _should_cold_fallback, run_adaptive
+from repro.serving.forecast import (
+    EwmaTrendForecaster,
+    NeverForecaster,
+    OracleForecaster,
+    PeriodicForecaster,
+    RateForecaster,
+    piecewise_rate_fn,
+)
+from repro.serving.workload import RatePhase, dynamic_trace, poisson_trace
+from tests._hypothesis_compat import given, settings, st
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+class TestEwmaTrendForecaster:
+    def test_none_until_two_observations(self):
+        fc = EwmaTrendForecaster(2)
+        assert fc.forecast(0.0, 30.0) is None
+        fc.observe(0.0, [1.0, 2.0])
+        assert fc.forecast(0.0, 30.0) is None
+        fc.observe(30.0, [1.0, 2.0])
+        assert fc.forecast(30.0, 30.0) is not None
+
+    def test_linear_ramp_slope_convergence(self):
+        # On a noiseless ramp x(t) = 2 + 0.5 t the trend must converge to
+        # the true slope and the forecast to the true future value.
+        fc = EwmaTrendForecaster(1)
+        for t in np.arange(0.0, 630.0, 30.0):
+            fc.observe(float(t), [2.0 + 0.5 * float(t)])
+        assert fc.trend[0] == pytest.approx(0.5, rel=0.05)
+        pred = fc.forecast(600.0, 30.0)
+        assert pred[0] == pytest.approx(2.0 + 0.5 * 630.0, rel=0.05)
+
+    def test_declining_ramp_clamps_at_zero(self):
+        fc = EwmaTrendForecaster(1)
+        for t in (0.0, 30.0, 60.0, 90.0):
+            fc.observe(t, [max(0.0, 3.0 - 0.03 * t)])
+        # Far enough out the linear extrapolation goes negative: clamped.
+        pred = fc.forecast(90.0, 500.0)
+        assert pred[0] == 0.0
+
+    def test_same_instant_reobservation_refreshes_level_only(self):
+        fc = EwmaTrendForecaster(1)
+        fc.observe(0.0, [1.0])
+        fc.observe(30.0, [1.0])
+        trend_before = fc.trend[0]
+        fc.observe(30.0, [5.0])  # dt == 0: no trend attribution
+        assert fc.trend[0] == trend_before
+        assert fc.level[0] == pytest.approx(0.5 * 5.0 + 0.5 * 1.0)
+
+    def test_shape_mismatch_raises(self):
+        fc = EwmaTrendForecaster(2)
+        with pytest.raises(ValueError):
+            fc.observe(0.0, [1.0])
+
+    @given(
+        level=st.floats(min_value=0.1, max_value=50.0),
+        horizon=st.floats(min_value=1.0, max_value=300.0),
+    )
+    @settings(max_examples=15)
+    def test_constant_series_is_fixed_point(self, level, horizon):
+        # A constant rate stream must forecast itself at any horizon: the
+        # trend stays exactly zero and the level exactly the constant.
+        fc = EwmaTrendForecaster(1)
+        for t in (0.0, 30.0, 60.0, 90.0, 120.0):
+            fc.observe(t, [level])
+        pred = fc.forecast(120.0, horizon)
+        assert pred[0] == pytest.approx(level, rel=1e-9)
+
+
+class TestPeriodicForecaster:
+    def test_none_until_target_bin_seen(self):
+        fc = PeriodicForecaster(1, period=100.0, n_bins=4)
+        fc.observe(10.0, [1.0])  # bin 0
+        assert fc.forecast(10.0, 25.0) is None  # target bin 1: unseen
+        assert fc.forecast(80.0, 25.0) is not None  # target wraps to bin 0
+
+    def test_noiseless_profile_recovery(self):
+        # Deterministic per-bin rates sampled over 3 cycles recover the
+        # profile exactly (running mean of identical values).
+        period, n_bins = 120.0, 4
+        bin_rates = {0: 1.0, 1: 4.0, 2: 2.5, 3: 0.5}
+        fc = PeriodicForecaster(1, period, n_bins=n_bins)
+        for cycle in range(3):
+            for b in range(n_bins):
+                t = cycle * period + (b + 0.5) * period / n_bins
+                fc.observe(t, [bin_rates[b]])
+        for b in range(n_bins):
+            assert fc.profile(b) == [bin_rates[b]]
+        # forecast(now, horizon) answers with the *target* time's bin.
+        t_now = 3 * period + 15.0  # bin 0 of cycle 4
+        assert fc.forecast(t_now, 30.0) == [bin_rates[1]]
+        assert fc.forecast(t_now, 60.0) == [bin_rates[2]]
+
+    def test_profile_averages_across_cycles(self):
+        fc = PeriodicForecaster(1, period=100.0, n_bins=1)
+        fc.observe(50.0, [1.0])
+        fc.observe(150.0, [3.0])
+        assert fc.profile(0) == [2.0]
+
+    def test_shape_mismatch_raises(self):
+        fc = PeriodicForecaster(2, period=100.0)
+        with pytest.raises(ValueError):
+            fc.observe(0.0, [1.0, 2.0, 3.0])
+
+    def test_bad_construction_raises(self):
+        with pytest.raises(ValueError):
+            PeriodicForecaster(1, period=0.0)
+        with pytest.raises(ValueError):
+            PeriodicForecaster(1, period=10.0, n_bins=0)
+
+
+class TestOracleAndProtocol:
+    def test_all_forecasters_satisfy_protocol(self):
+        for fc in (
+            EwmaTrendForecaster(1),
+            PeriodicForecaster(1, period=10.0),
+            OracleForecaster(lambda t: (1.0,)),
+            NeverForecaster(),
+        ):
+            assert isinstance(fc, RateForecaster)
+
+    def test_piecewise_rate_fn_boundaries(self):
+        phases = [
+            RatePhase(0.0, 10.0, (1.0, 2.0)),
+            RatePhase(10.0, 20.0, (3.0, 4.0)),
+        ]
+        fn = piecewise_rate_fn(phases)
+        assert fn(-5.0) == (1.0, 2.0)  # before the first phase
+        assert fn(5.0) == (1.0, 2.0)
+        assert fn(10.0) == (3.0, 4.0)  # phase end is exclusive
+        assert fn(99.0) == (3.0, 4.0)  # past the last phase
+        with pytest.raises(ValueError):
+            piecewise_rate_fn([])
+
+    def test_oracle_clamps_negative_rates(self):
+        fc = OracleForecaster(lambda t: (-1.0, 2.0))
+        assert fc.forecast(0.0, 1.0) == [0.0, 2.0]
+
+
+class TestQuantization:
+    def test_nearby_rates_share_a_cell(self):
+        # A grid-point rate and small perturbations of it share a cell
+        # (cells are ~10% wide; a cell-center rate tolerates ~+-4%).
+        r = 1e-3 * 1.1**50  # exactly on the default grid
+        assert quantize_rates([r, 5.0]) == quantize_rates([1.02 * r, 5.0])
+        assert quantize_rates([r, 5.0]) == quantize_rates([0.98 * r, 5.0])
+
+    def test_distant_rates_differ(self):
+        assert quantize_rates([1.0]) != quantize_rates([2.0])
+
+    def test_idle_sentinel(self):
+        assert quantize_rates([0.0]) == (-1,)
+        assert quantize_rates([1e-4]) == (-1,)
+        assert quantize_rates([1.0]) != (-1,)
+
+    def test_bad_rel_raises(self):
+        with pytest.raises(ValueError):
+            quantize_rates([1.0], rel=0.0)
+
+    def test_mix_fingerprint_distinguishes_models(self):
+        a = [TenantSpec(paper_profile("mobilenetv2"), 1.0)]
+        b = [TenantSpec(paper_profile("squeezenet"), 1.0)]
+        assert mix_fingerprint(a) != mix_fingerprint(b)
+        assert mix_fingerprint(a) == mix_fingerprint(
+            [TenantSpec(paper_profile("mobilenetv2"), 9.9)]
+        )  # rates are not part of the structural fingerprint
+
+
+def _tenants(rates):
+    profs = [paper_profile("mobilenetv2"), paper_profile("squeezenet")]
+    return [TenantSpec(p, r) for p, r in zip(profs, rates)]
+
+
+class TestPlanCache:
+    def test_hit_roundtrip(self):
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache = PlanCache()
+        cache.store(tenants, HW, K_MAX, plan, obj)
+        hit = cache.lookup(tenants, HW, K_MAX)
+        assert hit is not None
+        got_plan, got_obj = hit
+        assert got_plan == plan
+        assert math.isfinite(got_obj)
+        assert cache.stats.hits == 1 and cache.stats.misses == 0
+
+    def test_nearby_rates_hit_distant_rates_miss(self):
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache = PlanCache()
+        cache.store(tenants, HW, K_MAX, plan, obj)
+        assert cache.lookup(_tenants([2.02, 3.0]), HW, K_MAX) is not None
+        assert cache.lookup(_tenants([4.0, 3.0]), HW, K_MAX) is None
+        assert cache.stats.misses == 1
+
+    def test_key_includes_k_max(self):
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache = PlanCache()
+        cache.store(tenants, HW, K_MAX, plan, obj)
+        assert cache.lookup(tenants, HW, K_MAX - 1) is None
+
+    def test_lru_eviction(self):
+        cache = PlanCache(capacity=2)
+        states = [[1.0, 1.0], [2.0, 2.0], [4.0, 4.0]]
+        for rates in states:
+            tenants = _tenants(rates)
+            plan, obj = hill_climb(tenants, HW, K_MAX)
+            cache.store(tenants, HW, K_MAX, plan, obj)
+        assert len(cache) == 2
+        assert cache.lookup(_tenants(states[0]), HW, K_MAX) is None  # evicted
+        assert cache.lookup(_tenants(states[1]), HW, K_MAX) is not None
+        assert cache.lookup(_tenants(states[2]), HW, K_MAX) is not None
+
+    def test_verify_rejects_quality_regression(self):
+        # A hit is only reusable while its fresh re-score stays within
+        # margin of the stored quality.  Tampering the stored norm down
+        # simulates a cached plan that has gone stale for this cell.
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache = PlanCache(margin=0.10)
+        cache.store(tenants, HW, K_MAX, plan, obj)
+        (entry,) = cache._entries.values()
+        entry.norm_objective /= 10.0  # fresh norm now >> (1+margin)*stored
+        assert cache.lookup(tenants, HW, K_MAX) is None
+        assert cache.stats.rejects == 1 and cache.stats.hits == 0
+
+    def test_store_skips_idle_and_infeasible(self):
+        cache = PlanCache()
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache.store(_tenants([0.0, 0.0]), HW, K_MAX, plan, obj)
+        cache.store(tenants, HW, K_MAX, plan, float("inf"))
+        cache.store(tenants, HW, K_MAX, plan, float("nan"))
+        assert len(cache) == 0
+
+    def test_stats_hit_rate(self):
+        cache = PlanCache()
+        assert cache.stats.hit_rate == 0.0  # no lookups yet
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = hill_climb(tenants, HW, K_MAX)
+        cache.store(tenants, HW, K_MAX, plan, obj)
+        cache.lookup(tenants, HW, K_MAX)
+        cache.lookup(_tenants([9.0, 9.0]), HW, K_MAX)
+        assert cache.stats.hit_rate == pytest.approx(0.5)
+        d = cache.stats.as_dict()
+        assert d["hits"] == 1 and d["misses"] == 1 and d["rejects"] == 0
+
+    def test_bad_construction_raises(self):
+        with pytest.raises(ValueError):
+            PlanCache(capacity=0)
+        with pytest.raises(ValueError):
+            PlanCache(margin=-0.1)
+
+
+DRIFT_PROFILES = ("mobilenetv2", "squeezenet")
+
+
+def _step_trace(r0, r1, duration=180.0, seed=0):
+    half = duration / 2.0
+    phases = [RatePhase(0.0, half, r0), RatePhase(half, duration, r1)]
+    return phases, dynamic_trace(phases, seed=seed)
+
+
+class TestControllerWiring:
+    def test_never_forecaster_is_bitwise_reactive(self):
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        _, trace = _step_trace((1.0, 2.0), (5.0, 2.0), seed=2)
+        kw = dict(replan_period=30.0, window=30.0, initial_rates=(1.0, 2.0))
+        ref = run_adaptive(profiles, trace, HW, K_MAX, **kw)
+        got = run_adaptive(
+            profiles, trace, HW, K_MAX, forecaster=NeverForecaster(), **kw
+        )
+        assert got.plans == ref.plans
+        assert got.replan_times == ref.replan_times
+        for i in range(len(profiles)):
+            assert np.array_equal(
+                np.asarray(ref.sim.latencies[i]),
+                np.asarray(got.sim.latencies[i]),
+            )
+
+    def test_oracle_forecaster_anticipates_step(self):
+        # With perfect knowledge the plan for the post-step rates commits
+        # at the boundary *before* the step enters the sliding window.
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        phases, trace = _step_trace((1.0, 2.0), (8.0, 2.0), seed=3)
+        kw = dict(replan_period=30.0, window=30.0, initial_rates=(1.0, 2.0))
+        reactive = run_adaptive(profiles, trace, HW, K_MAX, **kw)
+        oracle = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            forecaster=OracleForecaster(piecewise_rate_fn(phases)),
+            **kw,
+        )
+        assert oracle.plans != reactive.plans
+
+    @given(seed=st.integers(min_value=0, max_value=4))
+    @settings(max_examples=5, deadline=None)
+    def test_oracle_never_worse_than_reactive(self, seed):
+        # Property (small tolerance for simulation noise): planning against
+        # the true future rates never meaningfully loses to chasing the
+        # trailing estimate on a forecastable step drift.
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        phases, trace = _step_trace((1.0, 2.0), (6.0, 2.0), seed=seed)
+        kw = dict(replan_period=30.0, window=30.0, initial_rates=(1.0, 2.0))
+        reactive = run_adaptive(profiles, trace, HW, K_MAX, **kw)
+        oracle = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            forecaster=OracleForecaster(piecewise_rate_fn(phases)),
+            **kw,
+        )
+        assert oracle.sim.overall_mean() <= (
+            1.10 * reactive.sim.overall_mean() + 5e-3
+        )
+
+    def test_plan_cache_hits_on_recurring_state(self):
+        # A constant-rate oracle forecast makes every re-plan boundary the
+        # same quantized state: all but the first resolve as cache hits.
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        rates = (2.0, 3.0)
+        trace = poisson_trace(rates, 160.0, seed=5)
+        cache = PlanCache()
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            window=30.0,
+            initial_rates=rates,
+            forecaster=OracleForecaster(lambda t: rates),
+            plan_cache=cache,
+        )
+        assert cache.stats.hits >= 2
+        assert cache.stats.rejects == 0
+        assert len(set(res.plans)) == 1  # the memoized plan every time
+
+    def test_plan_cache_alone_never_degrades_plans(self):
+        # Reactive keys rarely repeat, but when they do the verified hit
+        # must commit a plan at least as good as margin allows; the run
+        # must complete and the no-cache comparison stays within margin.
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        rates = (2.0, 3.0)
+        trace = poisson_trace(rates, 160.0, seed=6)
+        kw = dict(replan_period=30.0, window=30.0, initial_rates=rates)
+        ref = run_adaptive(profiles, trace, HW, K_MAX, **kw)
+        cached = run_adaptive(
+            profiles, trace, HW, K_MAX, plan_cache=PlanCache(), **kw
+        )
+        assert cached.sim.overall_mean() <= 1.15 * ref.sim.overall_mean()
+
+
+class TestZeroTrafficHardening:
+    """S3: idle boundaries and degenerate objectives must not fire the
+    cold-fallback guard or crash the re-plan loop."""
+
+    def test_guard_false_on_empty_history(self):
+        assert not _should_cold_fallback(5.0, [], 0.05)
+
+    def test_guard_false_on_non_finite_objective(self):
+        history = [1.0, 1.1, 0.9]
+        assert not _should_cold_fallback(float("nan"), history, 0.05)
+        assert not _should_cold_fallback(float("inf"), history, 0.05)
+        # The finite regression case still fires.
+        assert _should_cold_fallback(2.0, history, 0.05)
+
+    def test_zero_traffic_replan_with_guard_and_cache(self):
+        # Arrivals only in a leading burst, then silence: every later
+        # boundary sees an all-zero estimate and must be skipped -- no
+        # division by zero, no guard firing, no cache pollution, even with
+        # min_rate=0 (no artificial rate floor) and zero initial rates.
+        profiles = [paper_profile(m) for m in DRIFT_PROFILES]
+        phases = [
+            RatePhase(0.0, 20.0, (3.0, 3.0)),
+            RatePhase(20.0, 200.0, (0.0, 0.0)),
+        ]
+        trace = list(dynamic_trace(phases, seed=7))
+        # A single trailing arrival so boundaries keep firing through the
+        # silent span (the loop only fires boundaries up to arrivals).
+        from repro.serving.workload import Request
+
+        trace.append(Request(arrival=199.0, model_idx=0))
+        cache = PlanCache()
+        res = run_adaptive(
+            profiles,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            window=30.0,
+            initial_rates=(0.0, 0.0),
+            min_rate=0.0,
+            cold_fallback_margin=0.05,
+            plan_cache=cache,
+        )
+        assert res.cold_fallback_times == []
+        assert all(math.isfinite(t) for t in res.replan_times)
+        # Idle boundaries were skipped, not planned: far fewer plans than
+        # the 6 boundaries the trace horizon spans.
+        assert len(res.plans) <= 4
+        # The all-idle initial state never entered the cache.
+        for key in cache._entries:
+            assert key[0] != (-1, -1)
