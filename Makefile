@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet bench-predictive
+.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet bench-predictive bench-faults
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -28,7 +28,9 @@ test-slow:
 # + the fleet-scaling smoke (self-checks the N=1 fleet degenerate case is
 #   bitwise the single-device API before timing)
 # + the predictive re-planning smoke (self-checks the no-forecaster/no-cache
-#   path is bitwise the reactive controller before timing).
+#   path is bitwise the reactive controller before timing)
+# + the fault-injection smoke (self-checks the faults=None path is bitwise
+#   the pre-fault simulators and controllers before timing).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
@@ -37,6 +39,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.scheduling --smoke --out BENCH_scheduling.smoke.json
 	$(PYTHON) -m benchmarks.fleet_scaling --smoke --out BENCH_fleet_scaling.smoke.json
 	$(PYTHON) -m benchmarks.predictive --smoke --out BENCH_predictive.smoke.json
+	$(PYTHON) -m benchmarks.faults --smoke --out BENCH_faults.smoke.json
 
 # Full scheduling-discipline sweep (swap-amortization vs FCFS on the
 # swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
@@ -62,3 +65,11 @@ bench-fleet:
 # (self-checks the bitwise opt-in pin first); records BENCH_predictive.json.
 bench-predictive:
 	$(PYTHON) -m benchmarks.predictive --out BENCH_predictive.json
+
+# Full fault-injection sweep: fault-aware vs fault-oblivious adaptive
+# serving under device dropout / thermal throttling / swap-bandwidth
+# collapse, with recovery metrics (TTR, lost/requeued, degraded-window
+# means); self-checks the bitwise faults=None pin first; records
+# BENCH_faults.json.
+bench-faults:
+	$(PYTHON) -m benchmarks.faults --out BENCH_faults.json

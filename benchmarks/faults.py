@@ -1,0 +1,325 @@
+"""Fault injection & self-healing: fault-aware vs fault-oblivious serving.
+
+Measures what PR 9's fault-aware control loop buys when the fleet actually
+misbehaves.  Three scheduled-fault scenarios run the same trace through the
+adaptive fleet controller twice -- ``fault_aware=False`` (the controller
+keeps routing to a dead device and planning against nominal speeds) and
+``fault_aware=True`` (observed-signal detection, out-of-band failover /
+restore placement re-plans, degraded-spec planning):
+
+* ``dropout`` -- one device goes silent for several re-plan windows
+  (requeue policy: its requests defer to recovery).  The aware controller
+  detects the stalled completions, evacuates the device
+  (``core.fleet.evacuate_device``), and re-admits it on recovery.  The
+  acceptance bar is a >= 20% request-weighted mean-latency win.
+* ``throttle`` -- one device runs at a fraction of nominal speed (thermal
+  throttling).  The aware controller estimates the slowdown from observed
+  vs predicted windowed means and re-plans against the degraded
+  ``DeviceSpec``; the throttle *transition* triggers a cold placement
+  search, migrating load off the slow device.
+* ``swap_degrade`` -- host<->accelerator transfer bandwidth collapses
+  (swap-heavy mixes pay it on every miss and transfer).
+
+Every scenario reports both controllers' request-weighted mean latency,
+recovery metrics (time-to-recover per outage window, requests
+lost/requeued, mean latency inside fault windows) and the fault-aware
+event log (failover / restore / degraded re-plan times).
+
+Before anything is timed, the standing no-fault invariant is self-checked
+**bitwise** (and the run aborts on any drift):
+
+* ``faults=None`` DES == the frozen pre-fault reference
+  (``benchmarks.des_baseline.BaselineDiscreteEventSimulator``), elementwise;
+* stepper/DES with ``faults=None`` and with an *empty* ``FaultSchedule``
+  == the plain no-kwarg construction, elementwise;
+* ``run_adaptive`` and ``run_adaptive_fleet`` with explicit
+  ``faults=None, fault_aware=False`` == their defaults (plans and
+  latencies identical).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.faults [--smoke]
+        [--seed N] [--out BENCH_faults.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import HW, K_MAX, Row
+from benchmarks.des_baseline import BaselineDiscreteEventSimulator
+from repro.configs.paper_models import paper_profile
+from repro.core.allocator import hill_climb
+from repro.core.fleet import DeviceSpec
+from repro.core.planner import TenantSpec
+from repro.serving.controller import run_adaptive
+from repro.serving.des import DiscreteEventSimulator
+from repro.serving.faults import FaultEvent, FaultSchedule
+from repro.serving.fleet import run_adaptive_fleet
+from repro.serving.simulator import RuntimeSimulator
+from repro.serving.workload import poisson_trace
+
+MODELS = ("mnasnet", "inceptionv4", "mobilenetv2", "densenet201")
+RATES = (8.0, 5.0, 7.0, 3.0)
+# The swap scenario needs a mix that actually swaps: six large models on
+# three devices overflow per-device SRAM, so TPU services pay T_load on
+# (nearly) every request and a bandwidth collapse is catastrophic.  The
+# lighter 4-model mix above ends up fully resident per device -- zero
+# misses, nothing for a swap fault to degrade.
+SWAP_MODELS = (
+    "densenet201", "resnet50v2", "xception", "inceptionv4", "gpunet",
+    "efficientnet",
+)
+SWAP_RATES = (3.0, 3.0, 2.5, 2.5, 3.0, 3.0)
+N_DEVICES = 3
+REPLAN = 15.0
+WINDOW = 30.0
+
+
+def _profiles():
+    return [paper_profile(m) for m in MODELS]
+
+
+def _fleet():
+    return [
+        DeviceSpec.from_platform(HW, name=f"dev{i}") for i in range(N_DEVICES)
+    ]
+
+
+def _latencies_equal(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+    )
+
+
+def self_check_no_fault_pin(seed: int) -> None:
+    """Standing invariant, bitwise: the ``faults=None`` path IS the
+    pre-fault code on every backend and both controllers."""
+    profiles = _profiles()[:2]
+    rates = RATES[:2]
+    trace = list(poisson_trace(list(rates), duration=60.0, seed=seed))
+    tenants = [TenantSpec(p, r) for p, r in zip(profiles, rates)]
+    plan, _ = hill_climb(tenants, HW, K_MAX)
+    empty = FaultSchedule(events=())
+
+    # DES vs the frozen pre-fault reference, and both fault spellings.
+    ref = BaselineDiscreteEventSimulator(profiles, plan, HW)
+    variants = {
+        "des": DiscreteEventSimulator(profiles, plan, HW),
+        "des_faults_none": DiscreteEventSimulator(
+            profiles, plan, HW, faults=None
+        ),
+        "des_faults_empty": DiscreteEventSimulator(
+            profiles, plan, HW, faults=empty.view(0)
+        ),
+    }
+    for req in trace:
+        ref.offer(req)
+        for sim in variants.values():
+            sim.offer(req)
+    ref_d = ref.drain()
+    for name, sim in variants.items():
+        sim.drain()
+        if not _latencies_equal(ref.latencies, sim.latencies):
+            raise AssertionError(
+                f"no-fault pin broken: {name} drifted from the frozen "
+                "pre-fault DES"
+            )
+    del ref_d
+
+    # Stepper: both fault spellings against the plain construction.
+    st_ref = RuntimeSimulator(profiles, plan, HW)
+    st_none = RuntimeSimulator(profiles, plan, HW, faults=None)
+    st_empty = RuntimeSimulator(profiles, plan, HW, faults=empty.view(0))
+    for req in trace:
+        for sim in (st_ref, st_none, st_empty):
+            sim.offer(req)
+    for name, sim in (("faults=None", st_none), ("empty schedule", st_empty)):
+        sim.drain()
+        if not _latencies_equal(st_ref.latencies, sim.latencies):
+            raise AssertionError(f"no-fault pin broken: stepper {name}")
+
+    # Controllers: explicit fault kwargs at their defaults == the defaults.
+    full = _profiles()
+    ftrace = poisson_trace(list(RATES), duration=90.0, seed=seed + 1)
+    kw = dict(replan_period=REPLAN, window=WINDOW, backend="des")
+    a_ref = run_adaptive(full, ftrace, HW, K_MAX, **kw)
+    a_exp = run_adaptive(
+        full, ftrace, HW, K_MAX, faults=None, fault_aware=False, **kw
+    )
+    if a_ref.plans != a_exp.plans or not _latencies_equal(
+        a_ref.sim.latencies, a_exp.sim.latencies
+    ):
+        raise AssertionError("no-fault pin broken: run_adaptive")
+    fleet = _fleet()
+    f_ref = run_adaptive_fleet(full, ftrace, fleet, **kw)
+    f_exp = run_adaptive_fleet(
+        full, ftrace, fleet, faults=None, fault_aware=False, **kw
+    )
+    if f_ref.fleet_plans != f_exp.fleet_plans or not _latencies_equal(
+        f_ref.sim.latencies, f_exp.sim.latencies
+    ):
+        raise AssertionError("no-fault pin broken: run_adaptive_fleet")
+
+
+def _scenario_faults(kind: str, duration: float) -> FaultSchedule:
+    """One mid-trace fault window spanning several re-plan periods."""
+    start, end = 0.2 * duration, 0.6 * duration
+    if kind == "dropout":
+        ev = FaultEvent(kind="dropout", device=1, start=start, end=end)
+        return FaultSchedule(events=(ev,), dropout_policy="requeue")
+    if kind == "throttle":
+        ev = FaultEvent(
+            kind="throttle",
+            device=0,
+            start=start,
+            end=end,
+            tpu_factor=0.25,
+            cpu_factor=0.25,
+        )
+        return FaultSchedule(events=(ev,))
+    if kind == "swap_degrade":
+        # Device 1 hosts the miss-heavy share of the SWAP_MODELS placement.
+        ev = FaultEvent(
+            kind="swap_degrade", device=1, start=start, end=end,
+            swap_factor=0.1,
+        )
+        return FaultSchedule(events=(ev,))
+    raise ValueError(kind)
+
+
+def _controller_metrics(res, rates) -> dict:
+    sim = res.sim
+    return {
+        "request_weighted_mean_s": sim.request_weighted_mean(rates),
+        "overall_mean_s": sim.overall_mean(),
+        "requests_lost": sim.requests_lost,
+        "requests_requeued": sim.requests_requeued,
+        "recovery_times_s": sim.recovery_times(),
+        "degraded_window_mean_s": sim.degraded_window_mean(),
+        "failover_times": list(res.failover_times),
+        "restore_times": list(res.restore_times),
+        "degraded_replan_times": list(res.degraded_replan_times),
+        "placement_replan_times": list(res.placement_replan_times),
+    }
+
+
+def scenario(kind: str, duration: float, seed: int) -> dict:
+    if kind == "swap_degrade":
+        models, rates = SWAP_MODELS, SWAP_RATES
+    else:
+        models, rates = MODELS, RATES
+    profiles = [paper_profile(m) for m in models]
+    trace = poisson_trace(list(rates), duration=duration, seed=seed)
+    fleet = _fleet()
+    faults = _scenario_faults(kind, duration)
+    kw = dict(replan_period=REPLAN, window=WINDOW, backend="des")
+    oblivious = run_adaptive_fleet(
+        profiles, trace, fleet, faults=faults, fault_aware=False, **kw
+    )
+    aware = run_adaptive_fleet(
+        profiles, trace, fleet, faults=faults, fault_aware=True, **kw
+    )
+    m_obl = oblivious.sim.request_weighted_mean(rates)
+    m_aw = aware.sim.request_weighted_mean(rates)
+    return {
+        "scenario": kind,
+        "seed": seed,
+        "duration_s": duration,
+        "models": list(models),
+        "trace_requests": len(trace),
+        "fault_windows": [
+            [e.start, e.end] for e in faults.events
+        ],
+        "oblivious": _controller_metrics(oblivious, rates),
+        "aware": _controller_metrics(aware, rates),
+        "mean_improvement_pct": 100.0 * (1.0 - m_aw / m_obl),
+    }
+
+
+def run_sweep(*, smoke: bool = False, seed: int = 7) -> dict:
+    self_check_no_fault_pin(seed + 1)
+    duration = 300.0 if smoke else 600.0
+    scenarios = [
+        scenario(kind, duration, seed)
+        for kind in ("dropout", "throttle", "swap_degrade")
+    ]
+    dropout = next(s for s in scenarios if s["scenario"] == "dropout")
+    return {
+        "benchmark": "faults",
+        "self_check": "no_fault_pin_bitwise_ok",
+        "scenarios": scenarios,
+        "headline": {
+            "dropout_mean_improvement_pct": dropout["mean_improvement_pct"],
+            "improvement_target_pct": 20.0,
+            "dropout_ttr_oblivious_s": dropout["oblivious"][
+                "recovery_times_s"
+            ],
+            "dropout_ttr_aware_s": dropout["aware"]["recovery_times_s"],
+            "dropout_requeued_oblivious": dropout["oblivious"][
+                "requests_requeued"
+            ],
+            "dropout_requeued_aware": dropout["aware"]["requests_requeued"],
+        },
+    }
+
+
+def _rows_of(report: dict) -> list[Row]:
+    rows = []
+    for sc in report["scenarios"]:
+        for variant in ("oblivious", "aware"):
+            m = sc[variant]
+            rows.append(
+                Row(
+                    f"faults/{sc['scenario']}/{variant}",
+                    m["request_weighted_mean_s"] * 1e6,
+                    f"improvement_pct={sc['mean_improvement_pct']:.1f};"
+                    f"lost={m['requests_lost']};"
+                    f"requeued={m['requests_requeued']};"
+                    f"ttr_s={[round(t, 2) for t in m['recovery_times_s']]}",
+                )
+            )
+    return rows
+
+
+def run() -> list[Row]:
+    """benchmarks.run harness entry point: the smoke-sized sweep."""
+    return _rows_of(run_sweep(smoke=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="short traces: CI sanity (self-check + shape), not a record",
+    )
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    report = run_sweep(smoke=args.smoke, seed=args.seed)
+    report["smoke"] = bool(args.smoke)
+    print("name,us_per_call,derived")
+    for row in _rows_of(report):
+        print(row.csv())
+    h = report["headline"]
+    print(
+        f"# headline: fault-aware control cuts dropout request-weighted "
+        f"mean latency {h['dropout_mean_improvement_pct']:.1f}% vs the "
+        f"fault-oblivious controller (target >= "
+        f"{h['improvement_target_pct']:.0f}%); time-to-recover "
+        f"{h['dropout_ttr_aware_s']} s aware vs "
+        f"{h['dropout_ttr_oblivious_s']} s oblivious; "
+        f"{h['dropout_requeued_aware']} vs "
+        f"{h['dropout_requeued_oblivious']} deferrals"
+    )
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+
+
+if __name__ == "__main__":
+    main()

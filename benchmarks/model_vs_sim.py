@@ -35,6 +35,7 @@ from repro.configs.paper_models import paper_profile
 from repro.core import latency
 from repro.core.allocator import hill_climb
 from repro.core.planner import Plan, TenantSpec
+from repro.serving.faults import FaultEvent, FaultSchedule
 from repro.serving.simulator import simulate
 from repro.serving.workload import (
     Trace,
@@ -97,6 +98,82 @@ def _realized_tenants(
     ]
 
 
+# Fault injection breaks the analytic model's stationarity assumption on
+# purpose: the model predicts the *nominal* steady state, so its error
+# under each fault quantifies how much a fault-oblivious prediction
+# misleads (the numbers fault-aware re-planning acts on instead).  The DES
+# and the stepper must still agree under every fault -- the cross-sim
+# column is the injected-fault parity evidence.
+def _fault_scenarios(duration: float) -> dict[str, FaultSchedule]:
+    s, e = 0.3 * duration, 0.6 * duration
+    return {
+        "fault_dropout": FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=0, start=s, end=e),
+            ),
+            dropout_policy="requeue",
+        ),
+        "fault_throttle": FaultSchedule(
+            events=(
+                FaultEvent(
+                    kind="throttle",
+                    device=0,
+                    start=s,
+                    end=e,
+                    tpu_factor=0.3,
+                    cpu_factor=0.3,
+                ),
+            ),
+        ),
+        "fault_swap": FaultSchedule(
+            events=(
+                FaultEvent(
+                    kind="swap_degrade",
+                    device=0,
+                    start=s,
+                    end=e,
+                    swap_factor=0.1,
+                ),
+            ),
+        ),
+    }
+
+
+def _fault_rows(duration: float, seed: int) -> list[Row]:
+    """Analytic-model error and DES/stepper parity under injected faults
+    (collaborative mix, Poisson arrivals -- the model's home turf, so any
+    error growth is attributable to the fault alone)."""
+    iv4, mnas = paper_profile("inceptionv4"), paper_profile("mnasnet")
+    ts = [TenantSpec(iv4, 1.0), TenantSpec(mnas, 2.0)]
+    plan, _ = hill_climb(ts, HW, K_MAX)
+    rates = [t.rate for t in ts]
+    trace = poisson_trace(rates, duration, seed=seed)
+    rows = []
+    for name, faults in _fault_scenarios(duration).items():
+        des = simulate(ts, plan, HW, trace, backend="des", faults=faults)
+        stepper = simulate(
+            ts, plan, HW, trace, backend="stepper", faults=faults
+        )
+        ts_real = _realized_tenants(ts, trace, duration)
+        pred = latency.predict(ts_real, plan, HW)
+        obs_means = [des.mean_latency(i) for i in range(len(ts))]
+        mean_err = mape(pred.latencies, obs_means)
+        p99s = [des.p99(i) for i in range(len(ts))]
+        p99_xsim = mape([stepper.p99(i) for i in range(len(ts))], p99s)
+        finite_p99 = [p for p in p99s if math.isfinite(p)]
+        worst_p99_ms = max(finite_p99) * 1e3 if finite_p99 else math.nan
+        rows.append(
+            Row(
+                f"model_vs_sim/collaborative/{name}",
+                des.overall_mean() * 1e6,
+                f"mean_err_pct={mean_err:.1f};p99_ms={worst_p99_ms:.1f};"
+                f"p99_xsim_err_pct={p99_xsim:.1f};n={len(trace)};"
+                f"lost={des.requests_lost};requeued={des.requests_requeued}",
+            )
+        )
+    return rows
+
+
 def run(*, duration: float = 2000.0, seed: int = 0) -> list[Row]:
     rows: list[Row] = []
     for mix_name, ts, plan in _mixes():
@@ -124,6 +201,7 @@ def run(*, duration: float = 2000.0, seed: int = 0) -> list[Row]:
                     f"p99_xsim_err_pct={p99_xsim:.1f};n={len(trace)}",
                 )
             )
+    rows.extend(_fault_rows(duration, seed))
     return rows
 
 

@@ -31,6 +31,7 @@ MODULES = {
     "jax_throughput": "benchmarks.jax_throughput",
     "fleet_scaling": "benchmarks.fleet_scaling",
     "predictive": "benchmarks.predictive",
+    "faults": "benchmarks.faults",
 }
 
 

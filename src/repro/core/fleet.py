@@ -660,10 +660,116 @@ def fleet_plan_objective(
     return float(total)
 
 
+def device_objectives(
+    tenants: Sequence[TenantSpec],
+    fleet_plan: FleetPlan,
+    fleet: Sequence[DeviceSpec],
+) -> list[float]:
+    """Per-device Eq. 5 objective contributions of an existing plan.
+
+    The same scoring ``fleet_plan_objective`` sums, reported per device
+    (0.0 for a device hosting nothing).  This is the *predicted* per-device
+    request-weighted total latency the fault-aware controller compares
+    observed latencies against: ``objective[d] / routed_rate[d]`` is the
+    model's expected mean on device ``d``, so a sustained observed mean far
+    above it is the throttling signal (``serving.fleet.run_adaptive_fleet``
+    with ``fault_aware=True``).
+    """
+    if fleet_plan.n_tenants != len(tenants) or fleet_plan.n_devices != len(
+        fleet
+    ):
+        raise ValueError("fleet plan shape does not match tenants/fleet")
+    out = []
+    for d, dev in enumerate(fleet):
+        members = [
+            i
+            for i in range(len(tenants))
+            if d in fleet_plan.placement[i]
+        ]
+        if not members:
+            out.append(0.0)
+            continue
+        sub = [
+            TenantSpec(
+                tenants[i].profile.scaled(dev.tpu_speed, dev.cpu_speed),
+                tenants[i].rate
+                * fleet_plan.routing[i][fleet_plan.placement[i].index(d)],
+            )
+            for i in members
+        ]
+        out.append(
+            float(
+                penalized_objective(
+                    sub,
+                    _restrict(fleet_plan.device_plans[d], members),
+                    dev.platform,
+                )
+            )
+        )
+    return out
+
+
+def evacuate_device(
+    tenants: Sequence[TenantSpec],
+    fleet: Sequence[DeviceSpec],
+    down: Sequence[int],
+    *,
+    k_max: int | None = None,
+    tables: FleetTablesCache | None = None,
+    discipline_space: Sequence[DisciplineSpec] | None = None,
+) -> tuple[FleetPlan, float]:
+    """Failover placement: re-plan the fleet with ``down`` devices removed.
+
+    A cold ``fleet_hill_climb`` runs over the surviving sub-fleet, and the
+    result embeds back at full fleet width: placements re-index to the full
+    fleet, down devices host no tenant and carry the inert full-pin device
+    plan (``_pin_row`` for every tenant -- valid, traffic-free).  The
+    returned objective is the surviving fleet's; the down device
+    contributes nothing, exactly as ``fleet_plan_objective`` would score
+    the embedded plan.
+
+    Raises ``ValueError`` when the surviving fleet cannot host every tenant
+    (constraint (8) core capacity) or every device is down -- callers keep
+    the incumbent plan and surface the overload instead of half-placing.
+    """
+    down_set = set(down)
+    for d in down_set:
+        if not 0 <= d < len(fleet):
+            raise ValueError(f"down device {d} outside the fleet")
+    up = [d for d in range(len(fleet)) if d not in down_set]
+    if not up:
+        raise ValueError("cannot evacuate: every device is down")
+    sub_plan, obj = fleet_hill_climb(
+        tenants,
+        [fleet[d] for d in up],
+        k_max=k_max,
+        tables=tables,
+        discipline_space=discipline_space,
+    )
+    inert = Plan(
+        tuple(_pin_row(t.profile)[0] for t in tenants),
+        tuple(0 for _ in tenants),
+    )
+    sub_of = {d: j for j, d in enumerate(up)}
+    device_plans = tuple(
+        inert if d in down_set else sub_plan.device_plans[sub_of[d]]
+        for d in range(len(fleet))
+    )
+    placement = tuple(
+        tuple(up[x] for x in devs) for devs in sub_plan.placement
+    )
+    return (
+        FleetPlan(placement, sub_plan.routing, device_plans),
+        obj,
+    )
+
+
 __all__ = [
     "DeviceSpec",
     "FleetPlan",
     "FleetTablesCache",
+    "device_objectives",
+    "evacuate_device",
     "fleet_hill_climb",
     "fleet_plan_objective",
     "round_robin_fleet_plan",

@@ -42,12 +42,17 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
+import json
 import math
 from typing import Sequence
 
 from repro.core.latency import _PENALTY_BASE, penalized_objective
 from repro.core.planner import DisciplineSpec, Plan, TenantSpec
 from repro.hw.specs import Platform
+
+#: On-disk payload format tag for ``persist``/``restore``.
+PERSIST_FORMAT = "repro-plan-cache-v1"
 
 #: Default relative width of one quantization cell (10% in rate).
 DEFAULT_REL = 0.10
@@ -123,6 +128,18 @@ class _Entry:
     norm_objective: float  # obj / tot_rate at store time (finite by contract)
 
 
+def _digest(key: tuple) -> str:
+    """Stable cross-session identity of a cache key.
+
+    Keys hold value-semantic frozen dataclasses (``Platform``,
+    ``DisciplineSpec``) and plain tuples, so their ``repr`` is a
+    deterministic function of the values -- the hash survives a process
+    restart, which is exactly what ``persist``/``restore`` need (the raw
+    tuples themselves are not JSON-representable).
+    """
+    return hashlib.sha256(repr(key).encode()).hexdigest()
+
+
 class _LruMixin:
     """Shared LRU bookkeeping for the single-device and fleet caches."""
 
@@ -136,24 +153,114 @@ class _LruMixin:
         self.margin = float(margin)
         self.stats = CacheStats()
         self._entries: collections.OrderedDict = collections.OrderedDict()
+        # Entries loaded by ``restore``, keyed by digest: a live key cannot
+        # be reconstructed from JSON, so restored entries wait here and are
+        # promoted into ``_entries`` (under the real tuple key) on their
+        # first hit.  Empty unless restore() ran -- every probe below is
+        # gated on that, keeping the never-restored hot path untouched.
+        self._restored: collections.OrderedDict = collections.OrderedDict()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        return len(self._entries) + len(self._restored)
 
     def clear(self) -> None:
         self._entries.clear()
+        self._restored.clear()
 
     def _get(self, key):
         entry = self._entries.get(key)
         if entry is not None:
             self._entries.move_to_end(key)
-        return entry
+            return entry
+        if self._restored:
+            entry = self._restored.pop(_digest(key), None)
+            if entry is not None:
+                self._put(key, entry)
+                return entry
+        return None
 
     def _put(self, key, entry) -> None:
+        if self._restored:
+            # A fresh store supersedes any still-unclaimed restored twin.
+            self._restored.pop(_digest(key), None)
         self._entries[key] = entry
         self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        while len(self._entries) + len(self._restored) > self.capacity:
+            # Unclaimed restored entries are older than anything live.
+            if self._restored:
+                self._restored.popitem(last=False)
+            else:
+                self._entries.popitem(last=False)
+
+    # -- persistence ---------------------------------------------------------
+    _kind = ""  # overridden: "plan" / "fleet"
+
+    def _plan_to_json(self, plan):
+        raise NotImplementedError
+
+    def _plan_from_json(self, data):
+        raise NotImplementedError
+
+    def persist(self) -> str:
+        """Serialize the cache to a JSON string (LRU order preserved:
+        oldest first, so ``restore`` + eviction keep the same victims)."""
+        entries = [
+            [digest, self._plan_to_json(e.plan), e.norm_objective]
+            for digest, e in self._restored.items()
+        ] + [
+            [_digest(key), self._plan_to_json(e.plan), e.norm_objective]
+            for key, e in self._entries.items()
+        ]
+        return json.dumps(
+            {
+                "format": PERSIST_FORMAT,
+                "kind": self._kind,
+                "capacity": self.capacity,
+                "rel": self.rel,
+                "margin": self.margin,
+                "entries": entries,
+            }
+        )
+
+    def restore(self, payload: str) -> int:
+        """Replace the cache contents from a ``persist`` payload.
+
+        Raises ``ValueError`` when the payload's fingerprint does not match
+        this cache: wrong format tag, wrong cache kind (single-device vs
+        fleet), or a different quantization grid ``rel`` (the persisted key
+        digests embed the grid, so entries from another grid could never be
+        hit -- restoring them would only silently waste capacity).  Returns
+        the number of entries restored (trimmed to ``capacity``, newest
+        kept).
+        """
+        try:
+            data = json.loads(payload)
+        except json.JSONDecodeError as exc:
+            raise ValueError(f"unreadable plan-cache payload: {exc}") from exc
+        if not isinstance(data, dict) or data.get("format") != PERSIST_FORMAT:
+            raise ValueError(
+                f"not a {PERSIST_FORMAT} payload "
+                f"(format={data.get('format')!r})"
+                if isinstance(data, dict)
+                else "not a plan-cache payload"
+            )
+        if data.get("kind") != self._kind:
+            raise ValueError(
+                f"cache kind mismatch: payload is {data.get('kind')!r}, "
+                f"this cache is {self._kind!r}"
+            )
+        if float(data.get("rel", -1.0)) != self.rel:
+            raise ValueError(
+                f"quantization grid mismatch: payload rel={data.get('rel')}, "
+                f"this cache rel={self.rel} (digested keys are grid-specific)"
+            )
+        entries = data.get("entries", [])
+        self.clear()
+        for digest, plan_data, norm in entries[-self.capacity:]:
+            self._restored[str(digest)] = _Entry(
+                self._plan_from_json(plan_data), float(norm)
+            )
+        return len(self._restored)
 
     def _admit(self, entry, objective: float, tot_rate: float):
         """Verify-then-reuse decision shared by both caches.
@@ -173,6 +280,42 @@ class _LruMixin:
         return entry.plan, float(objective)
 
 
+def _discipline_to_json(d: DisciplineSpec) -> dict:
+    return {
+        "kind": d.kind,
+        "batch_cap": d.batch_cap,
+        "staleness": None if math.isinf(d.staleness) else d.staleness,
+        "weights": None if d.weights is None else list(d.weights),
+    }
+
+
+def _discipline_from_json(x: dict) -> DisciplineSpec:
+    return DisciplineSpec(
+        kind=x["kind"],
+        batch_cap=int(x["batch_cap"]),
+        staleness=math.inf if x["staleness"] is None else float(x["staleness"]),
+        weights=(
+            None if x["weights"] is None else tuple(float(w) for w in x["weights"])
+        ),
+    )
+
+
+def _plan_to_json(p: Plan) -> dict:
+    return {
+        "partition": list(p.partition),
+        "cores": list(p.cores),
+        "discipline": _discipline_to_json(p.discipline),
+    }
+
+
+def _plan_from_json(x: dict) -> Plan:
+    return Plan(
+        partition=tuple(int(v) for v in x["partition"]),
+        cores=tuple(int(v) for v in x["cores"]),
+        discipline=_discipline_from_json(x["discipline"]),
+    )
+
+
 class PlanCache(_LruMixin):
     """LRU plan memoization for the single-device adaptive controller.
 
@@ -182,6 +325,8 @@ class PlanCache(_LruMixin):
     for the key structure and verify semantics.
     """
 
+    _kind = "plan"
+
     def __init__(
         self,
         capacity: int = 256,
@@ -190,6 +335,12 @@ class PlanCache(_LruMixin):
         margin: float = 0.10,
     ):
         super().__init__(capacity, rel, margin)
+
+    def _plan_to_json(self, plan):
+        return _plan_to_json(plan)
+
+    def _plan_from_json(self, data):
+        return _plan_from_json(data)
 
     def _key(
         self,
@@ -260,6 +411,8 @@ class FleetPlanCache(_LruMixin):
     ``fleet_plan_objective``.
     """
 
+    _kind = "fleet"
+
     def __init__(
         self,
         capacity: int = 256,
@@ -268,6 +421,28 @@ class FleetPlanCache(_LruMixin):
         margin: float = 0.10,
     ):
         super().__init__(capacity, rel, margin)
+
+    def _plan_to_json(self, plan):
+        return {
+            "placement": [list(devs) for devs in plan.placement],
+            "routing": [list(ws) for ws in plan.routing],
+            "device_plans": [_plan_to_json(p) for p in plan.device_plans],
+        }
+
+    def _plan_from_json(self, data):
+        from repro.core.fleet import FleetPlan
+
+        return FleetPlan(
+            placement=tuple(
+                tuple(int(d) for d in devs) for devs in data["placement"]
+            ),
+            routing=tuple(
+                tuple(float(w) for w in ws) for ws in data["routing"]
+            ),
+            device_plans=tuple(
+                _plan_from_json(p) for p in data["device_plans"]
+            ),
+        )
 
     def _key(
         self,
@@ -331,6 +506,7 @@ class FleetPlanCache(_LruMixin):
 __all__ = [
     "CacheStats",
     "FleetPlanCache",
+    "PERSIST_FORMAT",
     "PlanCache",
     "mix_fingerprint",
     "quantize_rates",

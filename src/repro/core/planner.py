@@ -211,7 +211,6 @@ class ModelProfile:
             return self.input_bytes
         return self.segments[p - 1].out_bytes
 
-    @functools.lru_cache(maxsize=64)
     def scaled(self, tpu_speed: float = 1.0, cpu_speed: float = 1.0) -> "ModelProfile":
         """This profile re-timed for a device running its accelerator at
         ``tpu_speed`` x and its host cores at ``cpu_speed`` x the profiled
@@ -224,10 +223,17 @@ class ModelProfile:
         calls return the *same object* -- the identity that lets
         ``PlanTables``/``EvalTables`` caches built for a device class match
         across re-plans.  Factor 1.0x1.0 returns ``self`` unchanged, which
-        is what pins the single-device degenerate case bitwise.
+        is what pins the single-device degenerate case bitwise -- checked
+        *before* the cache, because the LRU keys on profile *value*: an
+        equal-but-distinct profile's cached result must never shadow the
+        ``self`` identity.
         """
         if tpu_speed == 1.0 and cpu_speed == 1.0:
             return self
+        return self._scaled_cached(tpu_speed, cpu_speed)
+
+    @functools.lru_cache(maxsize=64)
+    def _scaled_cached(self, tpu_speed: float, cpu_speed: float) -> "ModelProfile":
         if tpu_speed <= 0 or cpu_speed <= 0:
             raise ValueError("speed factors must be positive")
         segments = tuple(

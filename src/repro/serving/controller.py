@@ -27,12 +27,14 @@ from repro.core.allocator import hill_climb
 from repro.core.plan_tables import PlanTables
 from repro.core.planner import DisciplineSpec, ModelProfile, Plan, TenantSpec
 from repro.hw.specs import Platform
+from repro.serving.faults import LatencyWindowTracker
 from repro.serving.result import SimResult
 from repro.serving.simulator import make_backend, sorted_trace_and_horizon
 from repro.serving.workload import Request, Trace
 
 if TYPE_CHECKING:
     from repro.core.plan_cache import PlanCache
+    from repro.serving.faults import FaultSchedule
     from repro.serving.forecast import RateForecaster
 
 # ``run_adaptive``'s cold-fallback default is 0.05 in single-device mode but
@@ -160,6 +162,9 @@ class AdaptiveRunResult:
     # ``plans``) and the re-plan times where the cold-fallback guard fired.
     plan_objectives: list[float] = dataclasses.field(default_factory=list)
     cold_fallback_times: list[float] = dataclasses.field(default_factory=list)
+    # Re-plan boundaries where the fault-aware controller planned against
+    # throttle-degraded speeds (empty on every fault-free run).
+    degraded_replan_times: list[float] = dataclasses.field(default_factory=list)
 
 
 def run_adaptive(
@@ -183,6 +188,13 @@ def run_adaptive(
     forecaster: "RateForecaster | None" = None,
     plan_cache: "PlanCache | None" = None,
     fleet: Sequence | None = None,
+    faults: "FaultSchedule | None" = None,
+    fault_aware: bool = False,
+    dropout_min_requests: int = 4,
+    degrade_threshold: float = 2.0,
+    degrade_restore: float = 1.3,
+    min_speed_factor: float = 0.05,
+    health_probe: bool = False,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
 
@@ -251,6 +263,21 @@ def run_adaptive(
     opt-in alongside the imbalance gate (``run_adaptive_fleet``'s own
     default), keeping ``run_adaptive(fleet=...)`` defaults bitwise equal
     to ``run_adaptive_fleet`` defaults.
+
+    ``faults`` injects a ``serving.faults.FaultSchedule`` into the
+    underlying simulator (device 0 in single-device mode); ``fault_aware``
+    reacts to the *observed* degradation: when the windowed mean latency
+    exceeds ``degrade_threshold`` x the incumbent plan's predicted mean, a
+    speed factor ``clamp(pred/obs, min_speed_factor, 1)`` is estimated and
+    re-plans run against profiles scaled to the degraded speed
+    (``ModelProfile.scaled``) until the observed mean drops back under
+    ``degrade_restore`` x prediction; boundaries planned degraded are
+    reported in ``degraded_replan_times``.  Single-device mode has no
+    failover target, so dropout handling is the schedule's own
+    requeue/lost policy; fleet mode (``fleet=...``) forwards every fault
+    parameter to ``run_adaptive_fleet``, which adds failover/restore
+    placement re-plans.  All fault parameters default off and the
+    ``faults=None`` path is bitwise the pre-fault controller.
     """
     if fleet is not None:
         if planner is not hill_climb:
@@ -284,6 +311,13 @@ def run_adaptive(
             discipline_space=discipline_space,
             forecaster=forecaster,
             plan_cache=plan_cache,
+            faults=faults,
+            fault_aware=fault_aware,
+            dropout_min_requests=dropout_min_requests,
+            degrade_threshold=degrade_threshold,
+            degrade_restore=degrade_restore,
+            min_speed_factor=min_speed_factor,
+            health_probe=health_probe,
         )
     if cold_fallback_margin is _UNSET_MARGIN:
         cold_fallback_margin = 0.05
@@ -323,8 +357,29 @@ def run_adaptive(
     cold_fallback_times: list[float] = []
 
     def plan_for(
-        rates: Sequence[float], incumbent: Plan | None = None, now: float = 0.0
+        rates: Sequence[float],
+        incumbent: Plan | None = None,
+        now: float = 0.0,
+        speed: float = 1.0,
     ) -> tuple[Plan, float, float]:
+        if speed < 1.0:
+            # Degraded (fault-aware throttle) re-plan: score against the
+            # observed slowdown by scaling the profiles, skip the plan
+            # cache and precomputed tables (both are keyed to the nominal
+            # speed) and the cold-fallback trend (a degraded normalized
+            # objective is a different baseline).
+            tenants = [
+                TenantSpec(p.scaled(speed, speed), max(r, min_rate))
+                for p, r in zip(profiles, rates)
+            ]
+            t0 = time.perf_counter()
+            kwargs = {
+                k: v for k, v in planner_kwargs.items() if k != "tables"
+            }
+            if warm_capable and incumbent is not None:
+                kwargs["init_plan"] = incumbent
+            plan, obj = planner(tenants, platform, k_max, **kwargs)
+            return plan, obj, time.perf_counter() - t0
         tenants = [
             TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
         ]
@@ -377,11 +432,19 @@ def run_adaptive(
 
     rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
     plan, obj, dt = plan_for(rates0)
-    sim = make_backend(backend, profiles, plan, platform)
+    sim = make_backend(backend, profiles, plan, platform, faults=faults)
     replan_times = [0.0]
     plans = [plan]
     objectives = [obj]
     compute_times = [dt]
+
+    # Fault-aware throttle detection state (inert unless fault_aware=True).
+    speed_est = 1.0
+    pred_mean_inc = obj / sum(max(r, min_rate) for r in rates0) if (
+        math.isfinite(obj) and sum(max(r, min_rate) for r in rates0) > 0
+    ) else math.nan
+    tracker = LatencyWindowTracker(n)
+    degraded_replan_times: list[float] = []
 
     reqs, horizon = sorted_trace_and_horizon(requests)
     n_req = len(reqs)
@@ -391,12 +454,34 @@ def run_adaptive(
     def fire_due_replans(t: float) -> None:
         """Run every re-plan boundary at or before arrival time ``t`` (the
         body of the scalar loop's ``while req.arrival >= next_replan``)."""
-        nonlocal next_replan
+        nonlocal next_replan, speed_est, pred_mean_inc
         while t >= next_replan:
             sim.advance_to(next_replan)
             rates = est.rates(next_replan)
             if forecaster is not None:
                 forecaster.observe(next_replan, rates)
+            if fault_aware:
+                # Throttle detection: compare the window's observed mean
+                # latency against the incumbent plan's predicted mean.
+                cnt, obs_mean = tracker.poll_mean(sim.latencies)
+                if (
+                    cnt >= dropout_min_requests
+                    and math.isfinite(pred_mean_inc)
+                    and pred_mean_inc > 0
+                    and math.isfinite(obs_mean)
+                ):
+                    if obs_mean > degrade_threshold * pred_mean_inc:
+                        f = min(
+                            1.0,
+                            max(min_speed_factor, pred_mean_inc / obs_mean),
+                        )
+                        if speed_est == 1.0 or f < 0.5 * speed_est:
+                            speed_est = f
+                    elif (
+                        speed_est < 1.0
+                        and obs_mean < degrade_restore * pred_mean_inc
+                    ):
+                        speed_est = 1.0
             if any(r > 0 for r in rates):
                 plan_rates = rates
                 if forecaster is not None:
@@ -407,14 +492,28 @@ def run_adaptive(
                     if pred is not None:
                         plan_rates = pred
                 new_plan, obj, dt = plan_for(
-                    plan_rates, incumbent=sim.plan, now=next_replan
+                    plan_rates,
+                    incumbent=sim.plan,
+                    now=next_replan,
+                    speed=speed_est,
                 )
+                if speed_est < 1.0:
+                    degraded_replan_times.append(next_replan)
                 if new_plan != sim.plan:
                     sim.set_plan(new_plan, now=next_replan)
                 replan_times.append(next_replan)
                 plans.append(new_plan)
                 objectives.append(obj)
                 compute_times.append(dt)
+                tot = sum(max(r, min_rate) for r in plan_rates)
+                if speed_est == 1.0 and math.isfinite(obj) and tot > 0:
+                    # The incumbent prediction the next window's observation
+                    # is judged against.  Only *nominal* commits move the
+                    # baseline: a degraded objective already folds in the
+                    # estimated slowdown, and judging against it would
+                    # declare recovery the moment the degraded plan performs
+                    # as (degraded-)predicted -- an oscillating restore.
+                    pred_mean_inc = obj / tot
             next_replan += replan_period
 
     if (
@@ -452,4 +551,5 @@ def run_adaptive(
         plan_compute_seconds=compute_times,
         plan_objectives=objectives,
         cold_fallback_times=cold_fallback_times,
+        degraded_replan_times=degraded_replan_times,
     )

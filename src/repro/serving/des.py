@@ -60,6 +60,7 @@ from repro.core.planner import (
 )
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
+from repro.serving.faults import FaultStats, as_view
 from repro.serving.result import SimResult
 from repro.serving.scheduling import WeightedFairDiscipline, make_discipline
 from repro.serving.workload import Request
@@ -91,6 +92,8 @@ class DiscreteEventSimulator:
         profiles: Sequence[ModelProfile],
         plan: Plan,
         platform: Platform,
+        *,
+        faults=None,
     ):
         self.profiles = list(profiles)
         self.platform = platform
@@ -120,6 +123,15 @@ class DiscreteEventSimulator:
         self._wf: WeightedFairDiscipline | None = None
         self._run_model: int | None = None
         self._run_len = 0
+        # Fault injection (serving.faults): mirrors the stepper's gates at
+        # the same event instants with the same float ops, so DES == stepper
+        # stays elementwise under any schedule.  A trivial view normalizes
+        # to None so faults=None (and an empty schedule) take the exact
+        # pre-fault event handlers.
+        fv = as_view(faults)
+        self._faults = fv if fv is not None and fv.has_faults else None
+        self._fault_lost = [0] * self.n
+        self._fault_requeued = [0] * self.n
         self.set_plan(plan, now=0.0)
 
     # -- plan management ----------------------------------------------------
@@ -163,6 +175,12 @@ class DiscreteEventSimulator:
             # restart above).
             self._run_model = None
             self._run_len = 0
+        if self._disc is not None and self._faults is not None:
+            # Same refusal as the stepper: fault gates are specified on the
+            # FCFS service order only.
+            raise ValueError(
+                "fault injection supports the FCFS discipline only"
+            )
         self._plan = plan
         rt = route_tables(self.profiles, plan, self.platform)
         self._prefix_bytes = rt.prefix_bytes
@@ -240,6 +258,14 @@ class DiscreteEventSimulator:
         return self.last_completion
 
     def result(self, duration: float) -> SimResult:
+        fault = None
+        if self._faults is not None:
+            fault = FaultStats(
+                lost=list(self._fault_lost),
+                requeued=list(self._fault_requeued),
+                down_windows=self._faults.down_windows,
+                degraded_windows=self._faults.degraded_windows,
+            )
         return SimResult(
             latencies=self.latencies,
             arrivals=self.arrivals,
@@ -247,6 +273,7 @@ class DiscreteEventSimulator:
             duration=duration,
             misses=self.misses,
             tpu_requests=self.tpu_requests,
+            fault=fault,
         )
 
     # -- columnar driver ----------------------------------------------------
@@ -261,6 +288,12 @@ class DiscreteEventSimulator:
         """
         mi_col = trace.model_idx
         if mi_col.size == 0:
+            return
+        if self._faults is not None:
+            # The inlined loop binds no-fault mechanics to locals; fault
+            # gates live in the scalar handlers, so fall back to them.
+            for r in trace:
+                self.offer(r, record=r.arrival >= record_from)
             return
         if mi_col.min() < 0 or mi_col.max() >= self.n:
             raise ValueError("model_idx out of range in trace")
@@ -315,6 +348,9 @@ class DiscreteEventSimulator:
     def _on_arrival(self, payload) -> None:
         req, record = payload
         i = req.model_idx
+        if self._faults is not None:
+            self._on_arrival_faulted(req, record)
+            return
         p = self._plan.partition[i]
         scale = req.service_scale
         suffix = p < self._points[i]
@@ -344,6 +380,58 @@ class DiscreteEventSimulator:
         else:
             self._on_cpu_enqueue(job)
 
+    def _on_arrival_faulted(self, req: Request, record: bool) -> None:
+        """Arrival with the ``serving.faults`` dropout gate applied.
+
+        Lost policy drops at the arrival instant; requeue admits the
+        request at the recovery instant (every same-route request arriving
+        inside the same chained outage defers to the *same* instant, so
+        queue entry keeps arrival order -- the property the stepper's
+        in-arrival-order scalar loop gives for free).  The input transfer
+        runs at the swap factor in effect when it begins.
+        """
+        fv = self._faults
+        i = req.model_idx
+        t = self.now
+        if fv.is_down(t):
+            if fv.lost:
+                if record:
+                    self._fault_lost[i] += 1
+                return
+            t = fv.down_until(t)
+            if record:
+                self._fault_requeued[i] += 1
+        p = self._plan.partition[i]
+        scale = req.service_scale
+        suffix = p < self._points[i]
+        job = (
+            i,
+            req.arrival,
+            record,
+            self._s_tpu[i] * scale,
+            self._s_cpu[i] * scale,
+            self._out_xfer[i] if 0 < p and suffix else 0.0,
+            self._prefix_bytes[i],
+            self._t_load[i],
+            suffix,
+        )
+        if p > 0:
+            _heappush(
+                self._heap,
+                (
+                    t + self._in_xfer[i] / fv.swap_factor(t),
+                    next(self._seq),
+                    self._on_tpu_enqueue,
+                    job,
+                ),
+            )
+        elif t > self.now:
+            _heappush(
+                self._heap, (t, next(self._seq), self._on_cpu_enqueue, job)
+            )
+        else:
+            self._on_cpu_enqueue(job)
+
     def _on_tpu_enqueue(self, job: tuple) -> None:
         # Ready jobs are appended in nondecreasing (event time, sequence)
         # order -- the heap's pop order -- so the deque front is always the
@@ -361,6 +449,9 @@ class DiscreteEventSimulator:
             self._disc.push(job, self.now)
 
     def _begin_tpu(self, job: tuple) -> None:
+        if self._faults is not None:
+            self._begin_tpu_faulted(job)
+            return
         self._tpu_job = job
         i = job[_J_MODEL]
         # Same-tenant run state: what swap_batch amortization extends.
@@ -390,8 +481,50 @@ class DiscreteEventSimulator:
             (self.now + service, next(self._seq), self._on_tpu_done, job),
         )
 
+    def _begin_tpu_faulted(self, job: tuple) -> None:
+        """TPU service start with fault gates: the dropout gate fires at
+        the would-be start instant (lost drops and lets the server take the
+        next ready job at the same instant; requeue pushes the start to the
+        recovery instant, occupying the server through the stretched
+        completion -- exactly the stepper's ``tpu_free`` evolution), and
+        throttle/swap factors bind at the actual start."""
+        fv = self._faults
+        while True:
+            start = self.now
+            if fv.is_down(start):
+                if fv.lost:
+                    if job[_J_RECORD]:
+                        self._fault_lost[job[_J_MODEL]] += 1
+                    if self._tpu_ready:
+                        job = self._tpu_ready.popleft()
+                        continue
+                    self._tpu_job = None
+                    return
+                start = fv.down_until(start)
+                if job[_J_RECORD]:
+                    self._fault_requeued[job[_J_MODEL]] += 1
+            self._tpu_job = job
+            i = job[_J_MODEL]
+            miss = self.cache.access(i, job[_J_PBYTES], start)
+            service = job[_J_TPU_S] / fv.tpu_factor(start)
+            if miss:
+                service += job[_J_TLOAD] / fv.swap_factor(start)
+            self.tpu_busy += service
+            if job[_J_RECORD]:
+                self.tpu_requests[i] += 1
+                if miss:
+                    self.misses[i] += 1
+            _heappush(
+                self._heap,
+                (start + service, next(self._seq), self._on_tpu_done, job),
+            )
+            return
+
     def _on_tpu_done(self, job: tuple) -> None:
         now = self.now
+        if self._faults is not None:
+            self._on_tpu_done_faulted(job, now)
+            return
         if job[_J_SUFFIX]:
             _heappush(
                 self._heap,
@@ -436,12 +569,40 @@ class DiscreteEventSimulator:
         else:
             self._tpu_job = None
 
+    def _on_tpu_done_faulted(self, job: tuple, now: float) -> None:
+        fv = self._faults
+        if job[_J_SUFFIX]:
+            _heappush(
+                self._heap,
+                (
+                    now + job[_J_OUT_X] / fv.swap_factor(now),
+                    next(self._seq),
+                    self._on_cpu_enqueue,
+                    job,
+                ),
+            )
+        else:
+            if now > self.last_completion:
+                self.last_completion = now
+            if job[_J_RECORD]:
+                i = job[_J_MODEL]
+                self.latencies[i].append(now - job[_J_ARR])
+                self.arrivals[i].append(job[_J_ARR])
+        ready = self._tpu_ready
+        if ready:
+            self._begin_tpu_faulted(ready.popleft())
+        else:
+            self._tpu_job = None
+
     def _on_cpu_enqueue(self, job: tuple) -> None:
         i = job[_J_MODEL]
         self._cpu_queues[i].append(job)
         self._start_cpu(i)
 
     def _start_cpu(self, i: int) -> None:
+        if self._faults is not None:
+            self._start_cpu_faulted(i)
+            return
         queue = self._cpu_queues[i]
         while queue and self._cpu_busy[i] < self._k_eff[i]:
             job = queue.popleft()
@@ -450,6 +611,36 @@ class DiscreteEventSimulator:
                 self._heap,
                 (
                     self.now + job[_J_CPU_S],
+                    next(self._seq),
+                    self._on_cpu_done,
+                    job,
+                ),
+            )
+
+    def _start_cpu_faulted(self, i: int) -> None:
+        """CPU admission with fault gates: lost drops at the would-be start
+        (the worker stays free); requeue admits the worker with a start
+        deferred to the recovery instant (busy through the stretched end,
+        matching the stepper's pool-heap evolution); the suffix runs at the
+        CPU factor in effect at its actual start."""
+        fv = self._faults
+        queue = self._cpu_queues[i]
+        while queue and self._cpu_busy[i] < self._k_eff[i]:
+            job = queue.popleft()
+            start = self.now
+            if fv.is_down(start):
+                if fv.lost:
+                    if job[_J_RECORD]:
+                        self._fault_lost[i] += 1
+                    continue
+                start = fv.down_until(start)
+                if job[_J_RECORD]:
+                    self._fault_requeued[i] += 1
+            self._cpu_busy[i] += 1
+            _heappush(
+                self._heap,
+                (
+                    start + job[_J_CPU_S] / fv.cpu_factor(start),
                     next(self._seq),
                     self._on_cpu_done,
                     job,

@@ -45,10 +45,19 @@ class CompletedRequest:
     submit_time: float
     done_time: float
     output: Any
+    # The exception that aborted this request's execution, or None on
+    # success (``output`` is None for errored records).  Errors surface as
+    # completed records instead of vanishing inside worker threads, so
+    # ``drain()`` always terminates and the caller sees every failure.
+    error: BaseException | None = None
 
     @property
     def latency(self) -> float:
         return self.done_time - self.submit_time
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 class _TpuWorker(threading.Thread):
@@ -118,17 +127,31 @@ class ServingEngine:
         if p > 0:
             self._tpu.inbox.put((model_idx, x, p, submit_t))
         else:
-            self._dispatch_suffix(model_idx, x, 0, submit_t)
+            try:
+                self._dispatch_suffix(model_idx, x, 0, submit_t)
+            except BaseException as exc:
+                # The synchronous dispatch path (zero-core misconfiguration,
+                # pool rejection) must not leak the in-flight slot it just
+                # claimed: record the failure so drain() terminates, then
+                # surface it to the submitter.
+                self._finish(model_idx, None, submit_t, error=exc)
+                raise
 
     def _run_prefix(self, model_idx: int, x: Any, p: int, submit_t: float) -> None:
-        m = self.models[model_idx]
-        for seg in m.segments[:p]:
-            x = seg(x)
-        x = jax.block_until_ready(x)
-        if p < m.num_partition_points:
-            self._dispatch_suffix(model_idx, x, p, submit_t)
-        else:
-            self._finish(model_idx, x, submit_t)
+        # Any failure here (a segment raising, a missing suffix pool) would
+        # otherwise die inside the TPU worker thread with the in-flight count
+        # still held, hanging every future drain().
+        try:
+            m = self.models[model_idx]
+            for seg in m.segments[:p]:
+                x = seg(x)
+            x = jax.block_until_ready(x)
+            if p < m.num_partition_points:
+                self._dispatch_suffix(model_idx, x, p, submit_t)
+            else:
+                self._finish(model_idx, x, submit_t)
+        except BaseException as exc:
+            self._finish(model_idx, None, submit_t, error=exc)
 
     def _dispatch_suffix(self, model_idx: int, x: Any, p: int, submit_t: float) -> None:
         pool = self._pools[model_idx]
@@ -138,22 +161,36 @@ class ServingEngine:
             )
 
         def work() -> None:
-            y = x
-            m = self.models[model_idx]
-            for seg in m.segments[p:]:
-                y = seg(y)
-            y = jax.block_until_ready(y)
-            self._finish(model_idx, y, submit_t)
+            # Same containment as _run_prefix: a suffix failure becomes an
+            # errored completion record, never a silently swallowed pool
+            # exception plus a leaked in-flight slot.
+            try:
+                y = x
+                m = self.models[model_idx]
+                for seg in m.segments[p:]:
+                    y = seg(y)
+                y = jax.block_until_ready(y)
+            except BaseException as exc:
+                self._finish(model_idx, None, submit_t, error=exc)
+            else:
+                self._finish(model_idx, y, submit_t)
 
         pool.submit(work)
 
-    def _finish(self, model_idx: int, out: Any, submit_t: float) -> None:
+    def _finish(
+        self,
+        model_idx: int,
+        out: Any,
+        submit_t: float,
+        error: BaseException | None = None,
+    ) -> None:
         self._completed.put(
             CompletedRequest(
                 model_idx=model_idx,
                 submit_time=submit_t,
                 done_time=time.perf_counter(),
                 output=out,
+                error=error,
             )
         )
         with self._inflight_lock:

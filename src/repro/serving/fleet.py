@@ -35,6 +35,8 @@ from repro.core.fleet import (
     DeviceSpec,
     FleetPlan,
     FleetTablesCache,
+    device_objectives,
+    evacuate_device,
     fleet_hill_climb,
 )
 from repro.core.planner import (
@@ -44,6 +46,7 @@ from repro.core.planner import (
     TenantSpec,
     prefix_service_time,
 )
+from repro.serving.faults import FaultSchedule, LatencyWindowTracker
 from repro.serving.result import FleetSimResult, SimResult, merge_fleet_results
 from repro.serving.simulator import make_backend, sorted_trace_and_horizon
 from repro.serving.workload import Request, Trace, as_trace, route_trace
@@ -59,14 +62,17 @@ def _device_sims(
     fleet_plan: FleetPlan,
     fleet: Sequence[DeviceSpec],
     backend: str,
+    faults: "FaultSchedule | None" = None,
 ):
-    """One simulator per device: full-width scaled profiles, device plan."""
+    """One simulator per device: full-width scaled profiles, device plan,
+    and (when a ``FaultSchedule`` is given) the device's fault view."""
     return [
         make_backend(
             backend,
             dev.scaled_profiles(profiles),
             fleet_plan.device_plans[d],
             dev.platform,
+            faults=faults.view(d) if faults is not None else None,
         )
         for d, dev in enumerate(fleet)
     ]
@@ -95,6 +101,8 @@ def simulate_fleet(
     backend: str = "stepper",
     vectorize: bool = True,
     route_seed: int = 0,
+    faults: "FaultSchedule | None" = None,
+    reroute_on_dropout: bool = False,
 ) -> FleetSimResult:
     """Run a static fleet plan over a request trace.
 
@@ -105,11 +113,19 @@ def simulate_fleet(
     are *global*: the warmup cutoff comes from the fleet-wide horizon and
     every device's duration extends to at least that horizon, so per-device
     metrics weight into the merged view on one clock.
+
+    ``faults`` injects a ``serving.faults.FaultSchedule`` into every device
+    simulator (each sees its own projection); ``reroute_on_dropout``
+    additionally lets the router redraw requests away from devices that are
+    down at their arrival instant (``route_trace``'s health-aware mode).
+    Both default off, leaving the path bitwise the pre-fault fleet.
     """
     if len(fleet) != fleet_plan.n_devices:
         raise ValueError(
             f"fleet has {len(fleet)} devices, plan {fleet_plan.n_devices}"
         )
+    if faults is not None:
+        faults.validate(len(fleet))
     profiles = [t.profile for t in tenants]
     reqs, horizon = sorted_trace_and_horizon(requests)
     warmup_t = horizon * warmup_frac
@@ -119,9 +135,11 @@ def simulate_fleet(
         fleet_plan.routing,
         len(fleet),
         seed=route_seed,
+        faults=faults if reroute_on_dropout else None,
     )
     results: list[SimResult] = []
-    for sim, sub in zip(_device_sims(profiles, fleet_plan, fleet, backend), subs):
+    sims = _device_sims(profiles, fleet_plan, fleet, backend, faults=faults)
+    for sim, sub in zip(sims, subs):
         _drive(sim, sub, backend, warmup_t, vectorize)
         results.append(sim.result(max(horizon, sim.drain())))
     return merge_fleet_results(results)
@@ -167,6 +185,13 @@ class FleetAdaptiveResult:
     # Boundaries where the (opt-in) cold-fallback guard re-climbed the
     # device plans cold with placement held (a subset of ``replan_times``).
     cold_fallback_times: list[float] = dataclasses.field(default_factory=list)
+    # Fault-aware controller history (all empty unless fault_aware=True):
+    # boundaries where a device was detected down and evacuated, where a
+    # down device was detected recovered and re-admitted, and where
+    # degradation (throttle) re-planned against scaled DeviceSpecs.
+    failover_times: list[float] = dataclasses.field(default_factory=list)
+    restore_times: list[float] = dataclasses.field(default_factory=list)
+    degraded_replan_times: list[float] = dataclasses.field(default_factory=list)
 
 
 def run_adaptive_fleet(
@@ -191,6 +216,13 @@ def run_adaptive_fleet(
     forecaster: "RateForecaster | None" = None,
     plan_cache: "FleetPlanCache | None" = None,
     route_seed: int = 0,
+    faults: "FaultSchedule | None" = None,
+    fault_aware: bool = False,
+    dropout_min_requests: int = 4,
+    degrade_threshold: float = 2.0,
+    degrade_restore: float = 1.3,
+    min_speed_factor: float = 0.05,
+    health_probe: bool = False,
 ) -> FleetAdaptiveResult:
     """Adaptive fleet serving: local re-plans, imbalance-gated placement.
 
@@ -230,10 +262,46 @@ def run_adaptive_fleet(
     re-plan (it migrates tenants), and the cache is bypassed at
     boundaries where the imbalance gate demands a genuine placement
     search.
+
+    **Fault handling.** ``faults`` injects a ``serving.faults`` schedule
+    into every device simulator (dropout / throttle / swap degradation).
+    With ``fault_aware=False`` the controller is fault-*oblivious*: it
+    keeps routing to a dead device and planning against nominal speeds --
+    the baseline ``benchmarks/faults.py`` measures against.  With
+    ``fault_aware=True`` the controller reacts to *observed* signals only
+    (it never reads the schedule, except for the opt-in ``health_probe``
+    heartbeat below):
+
+    * *dropout*: a device offered >= ``dropout_min_requests`` in the last
+      window whose ``last_completion`` did not advance is declared down; an
+      out-of-band failover re-plan (``core.fleet.evacuate_device``) moves
+      every tenant off it, recorded in ``failover_times``.  Recovery is
+      declared when the device completes work again (its requeued backlog
+      draining), or -- with ``health_probe=True`` -- when a heartbeat
+      (the schedule's own ``is_down``) reports it up; a placement re-plan
+      re-admits it, recorded in ``restore_times``.  Note the observational
+      blind spot: under ``dropout_policy="lost"`` an evacuated device holds
+      no requeued backlog and receives no traffic, so nothing ever
+      completes on it and recovery is undetectable from observed signals
+      alone -- use ``health_probe=True`` when lost-policy recovery matters.
+    * *throttle*: a device whose observed windowed mean latency exceeds
+      ``degrade_threshold`` x the model's prediction for it
+      (``core.fleet.device_objectives`` / routed rate) gets an estimated
+      speed factor ``clamp(pred/obs, min_speed_factor, 1)``; re-plans run
+      against the *degraded* ``DeviceSpec`` (speeds scaled by the
+      estimate) until the observed mean falls back under
+      ``degrade_restore`` x prediction, each transition recorded in
+      ``degraded_replan_times``.
+
+    All fault parameters default off; ``faults=None, fault_aware=False``
+    is bitwise the pre-fault controller.
     """
     if not fleet:
         raise ValueError("fleet must contain at least one device")
+    if faults is not None:
+        faults.validate(len(fleet))
     n = len(profiles)
+    n_dev = len(fleet)
     est = SlidingRateEstimator(n, window=window, decay=rate_decay)
     cache = FleetTablesCache()
 
@@ -248,8 +316,15 @@ def run_adaptive_fleet(
         rates: Sequence[float],
         incumbent: FleetPlan | None,
         now: float,
+        fleet_now: Sequence[DeviceSpec] | None = None,
     ) -> tuple[FleetPlan, float, float, bool]:
-        """(plan, objective, seconds, placement_replanned)"""
+        """(plan, objective, seconds, placement_replanned).
+
+        ``fleet_now`` substitutes degraded ``DeviceSpec``s for the nominal
+        fleet (the fault-aware path); ``None`` -- every pre-fault call --
+        plans against the nominal fleet unchanged.
+        """
+        eff_fleet = fleet if fleet_now is None else list(fleet_now)
         tenants = [
             TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
         ]
@@ -275,7 +350,10 @@ def run_adaptive_fleet(
         t0 = time.perf_counter()
         if plan_cache is not None and not gate_firing:
             hit = plan_cache.lookup(
-                tenants, fleet, k_max=k_max, discipline_space=discipline_space
+                tenants,
+                eff_fleet,
+                k_max=k_max,
+                discipline_space=discipline_space,
             )
             if hit is not None:
                 plan, obj = hit
@@ -287,7 +365,7 @@ def run_adaptive_fleet(
         if incumbent is None:
             plan, obj = fleet_hill_climb(
                 tenants,
-                fleet,
+                eff_fleet,
                 k_max=k_max,
                 tables=cache,
                 discipline_space=discipline_space,
@@ -295,7 +373,7 @@ def run_adaptive_fleet(
             if plan_cache is not None:
                 plan_cache.store(
                     tenants,
-                    fleet,
+                    eff_fleet,
                     plan,
                     obj,
                     k_max=k_max,
@@ -304,7 +382,7 @@ def run_adaptive_fleet(
             return commit(plan, obj, t0, False)
         plan, obj = fleet_hill_climb(
             tenants,
-            fleet,
+            eff_fleet,
             k_max=k_max,
             init=incumbent,
             tables=cache,
@@ -314,7 +392,7 @@ def run_adaptive_fleet(
         if gate_firing:
             cold_plan, cold_obj = fleet_hill_climb(
                 tenants,
-                fleet,
+                eff_fleet,
                 k_max=k_max,
                 tables=cache,
                 discipline_space=discipline_space,
@@ -333,7 +411,7 @@ def run_adaptive_fleet(
             # held -- the fleet analogue of the single-device fallback.
             cold_plan, cold_obj = fleet_hill_climb(
                 tenants,
-                fleet,
+                eff_fleet,
                 k_max=k_max,
                 init=incumbent,
                 warm_start=False,
@@ -346,7 +424,7 @@ def run_adaptive_fleet(
         if plan_cache is not None:
             plan_cache.store(
                 tenants,
-                fleet,
+                eff_fleet,
                 plan,
                 obj,
                 k_max=k_max,
@@ -357,13 +435,104 @@ def run_adaptive_fleet(
     rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
     imbalance_streak = 0
     fleet_plan, obj, dt, _ = plan_for(rates0, None, 0.0)
-    sims = _device_sims(profiles, fleet_plan, fleet, backend)
+    sims = _device_sims(profiles, fleet_plan, fleet, backend, faults=faults)
 
     replan_times = [0.0]
     fleet_plans = [fleet_plan]
     objectives = [obj]
     compute_times = [dt]
     placement_replans: list[float] = []
+
+    # Fault-aware detection state (inert unless fault_aware=True).
+    down_flags = [False] * n_dev
+    speed_est = [1.0] * n_dev
+    window_offered = [0] * n_dev
+    last_comp_seen = [sim.last_completion for sim in sims]
+    trackers = [LatencyWindowTracker(n) for _ in range(n_dev)]
+    probe_views = (
+        [faults.view(d) for d in range(n_dev)]
+        if (fault_aware and health_probe and faults is not None)
+        else None
+    )
+    failovers: list[float] = []
+    restores: list[float] = []
+    degraded_replans: list[float] = []
+
+    def detect_faults(now: float, clamped: Sequence[float]) -> tuple[bool, bool]:
+        """Update down/degraded state from this window's observed signals;
+        returns (dropout state changed, degrade state changed)."""
+        tenants_now = [
+            TenantSpec(p, r) for p, r in zip(profiles, clamped)
+        ]
+        pred_obj = device_objectives(tenants_now, fleet_plan, fleet)
+        drop_changed = False
+        deg_changed = False
+        for d in range(n_dev):
+            comp = sims[d].last_completion
+            cnt, obs_mean = trackers[d].poll_mean(sims[d].latencies)
+            if probe_views is not None:
+                down_now = probe_views[d].is_down(now)
+                if down_now != down_flags[d]:
+                    down_flags[d] = down_now
+                    drop_changed = True
+                    (failovers if down_now else restores).append(now)
+            elif not down_flags[d]:
+                # Silent device: offered a meaningful batch, completed
+                # nothing new.  last_completion is not warmup-gated, so
+                # this is safe during the recording warmup too.
+                if (
+                    window_offered[d] >= dropout_min_requests
+                    and comp <= last_comp_seen[d]
+                ):
+                    down_flags[d] = True
+                    drop_changed = True
+                    failovers.append(now)
+            elif comp > last_comp_seen[d]:
+                # Completions resumed: the requeued backlog is draining,
+                # so the device is back.
+                down_flags[d] = False
+                drop_changed = True
+                restores.append(now)
+            # Throttle estimation from observed-vs-predicted means (skipped
+            # while the device is considered down -- an outage already
+            # explains any latency signal).
+            routed = sum(
+                w * clamped[i]
+                for i, devs in enumerate(fleet_plan.placement)
+                for dd, w in zip(devs, fleet_plan.routing[i])
+                if dd == d
+            )
+            pred_mean = pred_obj[d] / routed if routed > 0 else math.nan
+            if (
+                not down_flags[d]
+                and cnt >= dropout_min_requests
+                and math.isfinite(pred_mean)
+                and pred_mean > 0
+                and math.isfinite(obs_mean)
+            ):
+                if obs_mean > degrade_threshold * pred_mean:
+                    f = min(1.0, max(min_speed_factor, pred_mean / obs_mean))
+                    if speed_est[d] == 1.0 or f < 0.5 * speed_est[d]:
+                        speed_est[d] = f
+                        deg_changed = True
+                elif speed_est[d] < 1.0 and obs_mean < degrade_restore * pred_mean:
+                    speed_est[d] = 1.0
+                    deg_changed = True
+            last_comp_seen[d] = comp
+            window_offered[d] = 0
+        return drop_changed, deg_changed
+
+    def effective_fleet() -> list[DeviceSpec]:
+        return [
+            dev
+            if speed_est[d] == 1.0
+            else dataclasses.replace(
+                dev,
+                tpu_speed=dev.tpu_speed * speed_est[d],
+                cpu_speed=dev.cpu_speed * speed_est[d],
+            )
+            for d, dev in enumerate(fleet)
+        ]
 
     reqs, horizon = sorted_trace_and_horizon(requests)
     warmup_t = horizon * warmup_frac
@@ -383,6 +552,18 @@ def run_adaptive_fleet(
                 tenants = [
                     TenantSpec(p, r) for p, r in zip(profiles, clamped)
                 ]
+                drop_changed = deg_changed = False
+                if fault_aware:
+                    drop_changed, deg_changed = detect_faults(
+                        next_replan, clamped
+                    )
+                down_list = [d for d in range(n_dev) if down_flags[d]]
+                fleet_now = (
+                    effective_fleet()
+                    if fault_aware
+                    and (down_list or any(f < 1.0 for f in speed_est))
+                    else None
+                )
                 # The imbalance gate judges *observed* offered load; only
                 # the plan search runs against forecast rates.
                 loads = offered_device_loads(
@@ -394,14 +575,70 @@ def run_adaptive_fleet(
                     if spread > imbalance_threshold
                     else 0
                 )
+                if down_list:
+                    # An evacuated placement is deliberately skewed; the
+                    # imbalance gate must not re-admit a down device.
+                    imbalance_streak = 0
                 plan_rates = rates
                 if forecaster is not None:
                     pred = forecaster.forecast(next_replan, replan_period)
                     if pred is not None:
                         plan_rates = pred
-                new_plan, obj, dt, moved = plan_for(
-                    plan_rates, fleet_plan, next_replan
-                )
+                if fault_aware and (drop_changed or deg_changed):
+                    # Out-of-band fault-state-transition re-plan: failover
+                    # (evacuate the down devices), restore (cold search
+                    # re-admits the recovered device), or a throttle
+                    # transition (cold search against the degraded specs --
+                    # migration off a badly throttled device needs the
+                    # placement search, which warm re-plans hold fixed).
+                    tenants_plan = [
+                        TenantSpec(p, max(r, min_rate))
+                        for p, r in zip(profiles, plan_rates)
+                    ]
+                    eff = fleet_now if fleet_now is not None else list(fleet)
+                    t0 = time.perf_counter()
+                    if down_list:
+                        try:
+                            new_plan, obj = evacuate_device(
+                                tenants_plan,
+                                eff,
+                                down_list,
+                                k_max=k_max,
+                                tables=cache,
+                                discipline_space=discipline_space,
+                            )
+                            dt = time.perf_counter() - t0
+                            moved = True
+                            norm_history.clear()
+                        except ValueError:
+                            # The surviving fleet cannot host every tenant:
+                            # keep the incumbent placement, warm re-plan.
+                            new_plan, obj, dt, moved = plan_for(
+                                plan_rates,
+                                fleet_plan,
+                                next_replan,
+                                fleet_now=fleet_now,
+                            )
+                    else:
+                        new_plan, obj = fleet_hill_climb(
+                            tenants_plan,
+                            eff,
+                            k_max=k_max,
+                            tables=cache,
+                            discipline_space=discipline_space,
+                        )
+                        dt = time.perf_counter() - t0
+                        moved = True
+                        norm_history.clear()
+                    if any(f < 1.0 for f in speed_est):
+                        degraded_replans.append(next_replan)
+                else:
+                    new_plan, obj, dt, moved = plan_for(
+                        plan_rates, fleet_plan, next_replan,
+                        fleet_now=fleet_now,
+                    )
+                    if any(f < 1.0 for f in speed_est):
+                        degraded_replans.append(next_replan)
                 if moved:
                     placement_replans.append(next_replan)
                     imbalance_streak = 0
@@ -431,8 +668,10 @@ def run_adaptive_fleet(
             len(fleet),
             seed=route_seed + span_idx,
         )
-        for sim, sub in zip(sims, subs):
+        for d, (sim, sub) in enumerate(zip(sims, subs)):
             _drive(sim, sub, backend, warmup_t, vectorize)
+            if fault_aware:
+                window_offered[d] += len(sub)
         span_idx += 1
         idx = j
 
@@ -447,6 +686,9 @@ def run_adaptive_fleet(
         plan_objectives=objectives,
         placement_replan_times=placement_replans,
         cold_fallback_times=cold_fallbacks,
+        failover_times=failovers,
+        restore_times=restores,
+        degraded_replan_times=degraded_replans,
     )
 
 

@@ -25,6 +25,10 @@ class SimResult:
     duration: float
     misses: list[int]
     tpu_requests: list[int]
+    # Fault bookkeeping (serving.faults.FaultStats) when the backend ran
+    # under a FaultSchedule; None on every fault-free run -- the default
+    # keeps the pre-fault construction paths byte-identical.
+    fault: object | None = None
 
     def mean_latency(self, model_idx: int) -> float:
         """Mean observed latency; ``nan`` when the model completed nothing
@@ -110,6 +114,66 @@ class SimResult:
     def tpu_utilization(self) -> float:
         return self.tpu_busy / self.duration if self.duration > 0 else 0.0
 
+    # -- recovery metrics (defined only on faulted runs) ---------------------
+    @property
+    def requests_lost(self) -> int:
+        """Requests dropped by the dropout lost-policy (0 without faults)."""
+        return self.fault.total_lost if self.fault is not None else 0
+
+    @property
+    def requests_requeued(self) -> int:
+        """Dropout deferral events under the requeue policy (0 without
+        faults; a request crossing several gates counts each deferral)."""
+        return self.fault.total_requeued if self.fault is not None else 0
+
+    def recovery_times(self) -> list[float]:
+        """Time-to-recover per dropout window: how long after the outage
+        ends until the deferred backlog drains.
+
+        Resolved post-hoc from the recorded (arrival, latency) columns: for
+        a window ``[s, e)`` the backlog is every completion whose request
+        arrived at or before ``e``, and recovery is the instant the last of
+        them completes -- ``max(arrival + latency) - e``, clamped at 0 (an
+        outage nobody was waiting behind recovers instantly).  Warmup-gated
+        recording applies, like every other metric here.
+        """
+        if self.fault is None or not self.fault.down_windows:
+            return []
+        out = []
+        for _, e in self.fault.down_windows:
+            worst = -math.inf
+            for arr_col, lat_col in zip(self.arrivals, self.latencies):
+                if not len(arr_col):
+                    continue
+                a = np.asarray(arr_col, dtype=np.float64)
+                l = np.asarray(lat_col, dtype=np.float64)
+                sel = a <= e
+                if sel.any():
+                    worst = max(worst, float((a[sel] + l[sel]).max()))
+            out.append(max(0.0, worst - e) if math.isfinite(worst) else 0.0)
+        return out
+
+    def degraded_window_mean(self) -> float:
+        """Mean latency over requests that *arrived* inside any fault
+        window (down, throttled, or swap-degraded) -- the cost clients paid
+        while the system was impaired.  ``nan`` when no recorded request
+        arrived in a window (unknown, not zero)."""
+        if self.fault is None or not self.fault.degraded_windows:
+            return math.nan
+        tot, cnt = 0.0, 0
+        for arr_col, lat_col in zip(self.arrivals, self.latencies):
+            if not len(arr_col):
+                continue
+            a = np.asarray(arr_col, dtype=np.float64)
+            l = np.asarray(lat_col, dtype=np.float64)
+            sel = np.zeros(a.size, dtype=bool)
+            for s, e in self.fault.degraded_windows:
+                sel |= (a >= s) & (a < e)
+            if sel.any():
+                tot += float(l[sel].sum())
+                cnt += int(sel.sum())
+        return tot / cnt if cnt else math.nan
+
 
 @dataclasses.dataclass
 class FleetSimResult(SimResult):
@@ -183,8 +247,11 @@ def merge_fleet_results(per_device: Sequence[SimResult]) -> FleetSimResult:
             duration=r.duration,
             misses=r.misses,
             tpu_requests=r.tpu_requests,
+            fault=r.fault,
             per_device=list(per_device),
         )
+    from repro.serving.faults import merge_fault_stats
+
     return FleetSimResult(
         latencies=[
             _merge_columns([r.latencies[i] for r in per_device])
@@ -202,5 +269,6 @@ def merge_fleet_results(per_device: Sequence[SimResult]) -> FleetSimResult:
         tpu_requests=[
             sum(r.tpu_requests[i] for r in per_device) for i in range(n_models)
         ],
+        fault=merge_fault_stats([r.fault for r in per_device], n_models),
         per_device=list(per_device),
     )

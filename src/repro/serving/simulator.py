@@ -53,6 +53,7 @@ from repro.core.planner import (
 )
 from repro.hw.specs import Platform
 from repro.serving.cache import SramCache
+from repro.serving.faults import FaultStats, as_view
 from repro.serving.result import SimResult
 from repro.serving.scheduling import (
     FcfsDiscipline,
@@ -213,6 +214,8 @@ class RuntimeSimulator:
         profiles: Sequence[ModelProfile],
         plan: Plan,
         platform: Platform,
+        *,
+        faults=None,
     ):
         self.profiles = list(profiles)
         self.platform = platform
@@ -235,6 +238,13 @@ class RuntimeSimulator:
         self._arr_seq = itertools.count()
         self._run_model: int | None = None
         self._run_len = 0
+        # Fault injection (serving.faults): a trivial view (no windows)
+        # normalizes to None so an empty schedule takes the exact pre-fault
+        # code paths, and faults=None stays bitwise the pre-fault simulator.
+        fv = as_view(faults)
+        self._faults = fv if fv is not None and fv.has_faults else None
+        self._fault_lost = [0] * self.n
+        self._fault_requeued = [0] * self.n
         self.set_plan(plan, now=0.0)
 
     # -- plan management ----------------------------------------------------
@@ -274,6 +284,13 @@ class RuntimeSimulator:
                 self._disc
                 if isinstance(self._disc, WeightedFairDiscipline)
                 else None
+            )
+        if self._disc is not None and self._faults is not None:
+            # Fault gates are defined on the scalar FCFS recurrence (and
+            # mirrored by the DES); composing them with deferred-discipline
+            # service orders is unspecified, so refuse loudly.
+            raise ValueError(
+                "fault injection supports the FCFS discipline only"
             )
         self._plan = plan
         self._derive(plan)
@@ -339,6 +356,8 @@ class RuntimeSimulator:
                 "step() resolves a request at arrival; non-FCFS disciplines "
                 "defer service order -- drive via offer()/advance_to()/drain()"
             )
+        if self._faults is not None:
+            return self._step_faulted(req, record)
         i = req.model_idx
         p = self.plan.partition[i]
         P_i = self.profiles[i].num_partition_points
@@ -364,6 +383,78 @@ class RuntimeSimulator:
             free = heapq.heappop(pool)
             start = max(t, free)
             end = start + self._s_cpu[i] * req.service_scale
+            heapq.heappush(pool, end)
+            t = end
+        self.last_completion = max(self.last_completion, t)
+        lat = t - req.arrival
+        if record:
+            self.latencies[i].append(lat)
+            self.arrivals[i].append(req.arrival)
+        return lat
+
+    def _step_faulted(self, req: Request, record: bool) -> float:
+        """Scalar ``step`` with the device-fault gates applied.
+
+        The fault semantics live in ``serving.faults``: the dropout gate
+        fires at the arrival instant and again at each service start
+        (requeue defers to the recovery instant; lost drops and counts,
+        leaving server state untouched); speed factors bind at the instant
+        each service or transfer begins.  The DES applies the same gates at
+        the same instants with the same float ops, so DES == stepper stays
+        elementwise under any schedule (``tests/test_faults.py``).  Returns
+        ``nan`` for a lost request.
+        """
+        fv = self._faults
+        i = req.model_idx
+        p = self.plan.partition[i]
+        P_i = self.profiles[i].num_partition_points
+        t = req.arrival
+        if fv.is_down(t):
+            if fv.lost:
+                if record:
+                    self._fault_lost[i] += 1
+                return math.nan
+            t = fv.down_until(t)
+            if record:
+                self._fault_requeued[i] += 1
+        if p > 0:
+            t += self._in_xfer[i] / fv.swap_factor(t)
+            start = max(t, self.tpu_free)
+            if fv.is_down(start):
+                if fv.lost:
+                    if record:
+                        self._fault_lost[i] += 1
+                    return math.nan
+                start = fv.down_until(start)
+                if record:
+                    self._fault_requeued[i] += 1
+            miss = self.cache.access(i, self._prefix_bytes[i], start)
+            service = self._s_tpu[i] * req.service_scale / fv.tpu_factor(start)
+            if miss:
+                service += self._t_load[i] / fv.swap_factor(start)
+            self.tpu_free = start + service
+            self.tpu_busy += service
+            t = self.tpu_free
+            if record:
+                self.tpu_requests[i] += 1
+                if miss:
+                    self.misses[i] += 1
+            if p < P_i:
+                t += self._out_xfer[i] / fv.swap_factor(self.tpu_free)
+        if p < P_i:
+            pool = self._cpu_pools[i]
+            free = heapq.heappop(pool)
+            start = max(t, free)
+            if fv.is_down(start):
+                if fv.lost:
+                    heapq.heappush(pool, free)
+                    if record:
+                        self._fault_lost[i] += 1
+                    return math.nan
+                start = fv.down_until(start)
+                if record:
+                    self._fault_requeued[i] += 1
+            end = start + self._s_cpu[i] * req.service_scale / fv.cpu_factor(start)
             heapq.heappush(pool, end)
             t = end
         self.last_completion = max(self.last_completion, t)
@@ -600,11 +691,14 @@ class RuntimeSimulator:
             # unsorted trace would silently corrupt the Lindley order and
             # the searchsorted warmup boundary.  O(1) for generator traces.
             raise ValueError("run_trace requires an arrival-sorted Trace")
-        if self._disc is not None:
+        if self._disc is not None or self._faults is not None:
             # Non-FCFS disciplines defer service decisions, which the
-            # Lindley identity (strict FCFS order) cannot express: fall back
-            # transparently to the scalar reference loop -- same observables,
-            # scalar speed.  FCFS keeps the vectorized path below.
+            # Lindley identity (strict FCFS order) cannot express; a fault
+            # schedule makes service times depend on each request's start
+            # instant, which the identity likewise cannot see.  Both fall
+            # back transparently to the scalar reference loop -- same
+            # observables, scalar speed.  Default FCFS with faults=None
+            # keeps the vectorized path below.
             for r in trace:
                 self.offer(r, record=r.arrival >= record_from)
             return
@@ -766,6 +860,17 @@ class RuntimeSimulator:
             duration=duration,
             misses=self.misses,
             tpu_requests=self.tpu_requests,
+            fault=self._fault_stats(),
+        )
+
+    def _fault_stats(self) -> "FaultStats | None":
+        if self._faults is None:
+            return None
+        return FaultStats(
+            lost=list(self._fault_lost),
+            requeued=list(self._fault_requeued),
+            down_windows=self._faults.down_windows,
+            degraded_windows=self._faults.degraded_windows,
         )
 
 
@@ -783,24 +888,24 @@ def _flat(parts: list):
     )
 
 
-def _stepper_factory(profiles, plan, platform):
-    return RuntimeSimulator(profiles, plan, platform)
+def _stepper_factory(profiles, plan, platform, faults=None):
+    return RuntimeSimulator(profiles, plan, platform, faults=faults)
 
 
-def _jax_factory(profiles, plan, platform):
+def _jax_factory(profiles, plan, platform, faults=None):
     # Local import: the default backends must not pay jax's import
     # (or its compilation cache) unless the caller opted in.
     from repro.serving.jax_stepper import JaxStepper
 
-    return JaxStepper(profiles, plan, platform)
+    return JaxStepper(profiles, plan, platform, faults=faults)
 
 
-def _des_factory(profiles, plan, platform):
+def _des_factory(profiles, plan, platform, faults=None):
     # Local import: des.py imports the shared result/workload modules
     # only, so the dependency stays one-way at module-load time.
     from repro.serving.des import DiscreteEventSimulator
 
-    return DiscreteEventSimulator(profiles, plan, platform)
+    return DiscreteEventSimulator(profiles, plan, platform, faults=faults)
 
 
 # Name -> lazy constructor.  The registry is the single source of truth for
@@ -818,6 +923,8 @@ def make_backend(
     profiles: Sequence[ModelProfile],
     plan: Plan,
     platform: Platform,
+    *,
+    faults=None,
 ):
     """Instantiate a serving-simulation backend by name.
 
@@ -834,7 +941,7 @@ def make_backend(
         raise ValueError(
             f"unknown backend {backend!r}: valid backends are {valid}"
         ) from None
-    return factory(profiles, plan, platform)
+    return factory(profiles, plan, platform, faults=faults)
 
 
 def ensure_sorted(requests: "Trace | Sequence[Request]"):
@@ -872,6 +979,7 @@ def simulate(
     warmup_frac: float = 0.05,
     backend: str = "stepper",
     vectorize: bool = True,
+    faults=None,
 ) -> SimResult:
     """Run a static-plan simulation over a request trace.
 
@@ -883,8 +991,13 @@ def simulate(
     the fast driver -- the vectorized ``run_trace`` on the stepper, the
     inlined columnar ``offer_trace`` on the DES (default); ``False`` forces
     the scalar per-request reference path.
+    ``faults``: optional ``serving.faults`` schedule/view injected into the
+    backend (dropout / throttle / swap degradation; forces the scalar path);
+    the ``None`` default is bitwise the pre-fault simulator.
     """
-    sim = make_backend(backend, [t.profile for t in tenants], plan, platform)
+    sim = make_backend(
+        backend, [t.profile for t in tenants], plan, platform, faults=faults
+    )
     reqs, horizon = sorted_trace_and_horizon(requests)
     warmup_t = horizon * warmup_frac
     if vectorize and isinstance(reqs, Trace):

@@ -500,6 +500,7 @@ def route_trace(
     n_devices: int,
     *,
     seed: int = 0,
+    faults=None,
 ) -> list[Trace]:
     """Split one trace into per-device columnar traces by tenant placement.
 
@@ -519,6 +520,14 @@ def route_trace(
 
     The degenerate single-device fleet returns ``[trace]`` itself (the
     bitwise N=1 contract: not a copy, the same object).
+
+    ``faults`` (a ``serving.faults.FaultSchedule``): model a health-aware
+    ingress router -- a request whose weighted draw lands on a device that
+    is *down at its arrival instant* is redrawn across the tenant's other
+    placed, currently-up devices (routing-weight proportional).  Tenants
+    placed on a single device keep their requests (the device's own dropout
+    gate decides requeue/lost); ``faults=None`` (default) leaves routing
+    bitwise unchanged.
     """
     trace = as_trace(requests)
     if n_devices <= 0:
@@ -557,6 +566,44 @@ def route_trace(
     if unplaced.any():
         bad = np.unique(mi[unplaced]).tolist()
         raise ValueError(f"trace contains unplaced model indices {bad}")
+
+    if faults is not None:
+        faults.validate(n_devices)
+        views = [faults.view(d) for d in range(n_devices)]
+        if any(v.down_windows for v in views):
+            arr = trace.arrival
+            for i, (devs, wts) in enumerate(zip(placement, routing)):
+                devs = list(devs)
+                if len(devs) < 2:
+                    continue
+                if len(wts) != len(devs):
+                    wts = [1.0] * len(devs)
+                sel_i = np.flatnonzero(mi == i)
+                if not sel_i.size:
+                    continue
+                for k in sel_i.tolist():
+                    d = int(dev[k])
+                    t = float(arr[k])
+                    if not views[d].is_down(t):
+                        continue
+                    alts = [
+                        (x, w)
+                        for x, w in zip(devs, wts)
+                        if x != d and not views[x].is_down(t)
+                    ]
+                    if not alts:
+                        continue  # whole placement dark: the gate decides
+                    if rng is None:
+                        rng = np.random.default_rng(seed)
+                    cum = np.cumsum([max(w, 0.0) for _, w in alts])
+                    if cum[-1] <= 0:
+                        cum = np.arange(1.0, len(alts) + 1.0)
+                    j = int(
+                        np.searchsorted(
+                            cum / cum[-1], rng.random(), side="right"
+                        )
+                    )
+                    dev[k] = alts[min(j, len(alts) - 1)][0]
 
     out = []
     for d in range(n_devices):

@@ -486,3 +486,62 @@ class TestServingEngine:
         models = [_make_mlp_model("a", 2, 8, 0)]
         with pytest.raises(ValueError):
             ServingEngine(models, Plan((1, 1), (1, 1)), k_max=4)
+
+    def test_segment_exception_surfaces_and_engine_survives(self):
+        # A segment that raises must become an errored CompletedRequest --
+        # not a dead worker thread holding the in-flight count forever.
+        base = _make_mlp_model("a", 2, 16, 0)
+
+        def raise_on_nan(x):
+            if bool(np.isnan(np.asarray(x)).any()):
+                raise RuntimeError("poisoned input")
+            return x
+
+        model = ExecutableModel(
+            name="poison",
+            segments=(base.segments[0], raise_on_nan, base.segments[1]),
+            make_input=base.make_input,
+        )
+        # (partition, cores): all-prefix exercises the TPU-worker except
+        # path; split exercises the CPU suffix-pool except path (NaN rides
+        # through the jitted first segment into the raising one).
+        for part, cores in ((3, 0), (1, 1)):
+            eng = ServingEngine([model], Plan((part,), (cores,)), k_max=4)
+            try:
+                good = model.make_input(0)
+                bad = jnp.full((1, 16), jnp.nan)
+                eng.submit(0, good)
+                eng.submit(0, bad)
+                eng.submit(0, good)
+                done = eng.drain(timeout=30.0)
+                assert len(done) == 3
+                errs = [c for c in done if not c.ok]
+                assert len(errs) == 1
+                assert isinstance(errs[0].error, RuntimeError)
+                assert errs[0].output is None
+                assert all(c.error is None for c in done if c.ok)
+                # The engine keeps serving after the failure.
+                eng.submit(0, good)
+                done2 = eng.drain(timeout=30.0)
+                assert len(done2) == 1 and done2[0].ok
+            finally:
+                eng.shutdown()
+
+    def test_sync_dispatch_failure_releases_inflight_slot(self):
+        # Synchronous zero-prefix dispatch failures must both propagate to
+        # the submitter and release the in-flight slot so drain() returns.
+        models = [_make_mlp_model("a", 2, 8, 0)]
+        eng = ServingEngine(models, Plan((0,), (1,)), k_max=4)
+        try:
+            pool = eng._pools[0]
+            eng._pools[0] = None  # simulate a lost suffix pool
+            with pytest.raises(RuntimeError):
+                eng.submit(0, models[0].make_input(0))
+            done = eng.drain(timeout=5.0)
+            assert len(done) == 1 and not done[0].ok
+            eng._pools[0] = pool
+            eng.submit(0, models[0].make_input(1))
+            done = eng.drain(timeout=30.0)
+            assert len(done) == 1 and done[0].ok
+        finally:
+            eng.shutdown()

@@ -1,0 +1,528 @@
+"""Fault injection: schedule validation, simulator parity, self-healing.
+
+Tiers:
+
+* *validation* -- property-style checks that ``FaultSchedule`` rejects
+  malformed inputs (overlapping same-kind windows, unknown devices,
+  out-of-range factors) and that the JSON round trip is bit-identical;
+* *parity* -- the DES and the stepper must agree **elementwise** under
+  every fault kind and both dropout policies (the standing DES==stepper
+  invariant extends to faulted runs), and the empty schedule must be
+  bitwise the ``faults=None`` path on both backends;
+* *self-healing* -- the fault-aware adaptive controllers detect dropout /
+  throttling from observed signals, evacuate/degrade, and beat the
+  fault-oblivious controller; the ``faults=None`` controller path stays
+  bitwise the pre-fault controller.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.paper_models import paper_profile
+from repro.core.fleet import DeviceSpec, evacuate_device
+from repro.core.planner import Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import run_adaptive
+from repro.serving.des import DiscreteEventSimulator
+from repro.serving.faults import (
+    DeviceFaultView,
+    FaultEvent,
+    FaultSchedule,
+    LatencyWindowTracker,
+    as_view,
+)
+from repro.serving.fleet import run_adaptive_fleet, simulate_fleet
+from repro.serving.simulator import RuntimeSimulator, simulate
+from repro.serving.workload import Trace, poisson_trace, route_trace
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+
+def tenants_for(*name_rate_pairs):
+    return [TenantSpec(paper_profile(n), r) for n, r in name_rate_pairs]
+
+
+def _mix_plan():
+    """A two-tenant collaborative mix whose base DES==stepper parity is
+    elementwise-exact (required so fault parity diffs are attributable)."""
+    ts = tenants_for(("mnasnet", 6.0), ("inceptionv4", 4.0))
+    from repro.core.allocator import hill_climb
+
+    plan, _ = hill_climb(ts, HW, K_MAX)
+    return ts, plan
+
+
+def _full_schedule(policy="requeue"):
+    return FaultSchedule(
+        events=(
+            FaultEvent(kind="dropout", device=0, start=30.0, end=45.0),
+            FaultEvent(
+                kind="throttle",
+                device=0,
+                start=60.0,
+                end=80.0,
+                tpu_factor=0.4,
+                cpu_factor=0.5,
+            ),
+            FaultEvent(
+                kind="swap_degrade",
+                device=0,
+                start=85.0,
+                end=100.0,
+                swap_factor=0.3,
+            ),
+        ),
+        dropout_policy=policy,
+    )
+
+
+class TestValidation:
+    def test_overlapping_same_kind_windows_rejected(self):
+        with pytest.raises(ValueError, match="overlap"):
+            FaultSchedule(
+                events=(
+                    FaultEvent(kind="dropout", device=0, start=0.0, end=10.0),
+                    FaultEvent(kind="dropout", device=0, start=5.0, end=15.0),
+                )
+            )
+
+    def test_adjacent_windows_allowed(self):
+        s = FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=0, start=0.0, end=10.0),
+                FaultEvent(kind="dropout", device=0, start=10.0, end=15.0),
+            )
+        )
+        # Chained adjacent outages defer to the end of the chain.
+        assert s.view(0).down_until(5.0) == 15.0
+
+    def test_different_kind_or_device_overlap_allowed(self):
+        FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=0, start=0.0, end=10.0),
+                FaultEvent(
+                    kind="throttle",
+                    device=0,
+                    start=5.0,
+                    end=15.0,
+                    tpu_factor=0.5,
+                ),
+                FaultEvent(kind="dropout", device=1, start=5.0, end=15.0),
+            )
+        )
+
+    def test_unknown_device_rejected_by_validate(self):
+        s = FaultSchedule(
+            events=(FaultEvent(kind="dropout", device=3, start=0.0, end=1.0),)
+        )
+        with pytest.raises(ValueError, match="device"):
+            s.validate(2)
+        assert s.validate(4) is s
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            dict(kind="throttle", tpu_factor=0.0),
+            dict(kind="throttle", tpu_factor=-0.5),
+            dict(kind="throttle", tpu_factor=1.5),
+            dict(kind="swap_degrade", swap_factor=0.0),
+            dict(kind="swap_degrade", swap_factor=2.0),
+        ],
+    )
+    def test_out_of_range_factors_rejected(self, kwargs):
+        with pytest.raises(ValueError):
+            FaultEvent(device=0, start=0.0, end=1.0, **kwargs)
+
+    def test_bad_window_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(kind="dropout", device=0, start=5.0, end=5.0)
+        with pytest.raises(ValueError):
+            FaultEvent(kind="dropout", device=0, start=-1.0, end=5.0)
+
+    def test_bad_kind_and_policy_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(kind="meteor", device=0, start=0.0, end=1.0)
+        with pytest.raises(ValueError):
+            FaultSchedule(events=(), dropout_policy="retry")
+
+    def test_as_view_passthrough_and_typeerror(self):
+        assert as_view(None) is None
+        v = _full_schedule().view(0)
+        assert as_view(v) is v
+        assert isinstance(as_view(_full_schedule()), DeviceFaultView)
+        with pytest.raises(TypeError):
+            as_view(42)
+
+
+class TestJsonRoundTrip:
+    @given(
+        starts=st.lists(
+            st.floats(min_value=0.0, max_value=500.0), min_size=1, max_size=6
+        ),
+        widths=st.lists(
+            st.floats(min_value=0.5, max_value=40.0), min_size=6, max_size=6
+        ),
+        kinds=st.lists(
+            st.sampled_from(["dropout", "throttle", "swap_degrade"]),
+            min_size=6,
+            max_size=6,
+        ),
+        devices=st.lists(
+            st.integers(min_value=0, max_value=3), min_size=6, max_size=6
+        ),
+        policy=st.sampled_from(["requeue", "lost"]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_round_trip_bit_identical(
+        self, starts, widths, kinds, devices, policy
+    ):
+        # Build non-overlapping windows per (device, kind) by stacking each
+        # group's windows end to end.
+        cursor = {}
+        events = []
+        for i, s0 in enumerate(starts):
+            kind, dev = kinds[i], devices[i]
+            lo = cursor.get((dev, kind), 0.0)
+            start = max(lo, s0)
+            end = start + widths[i]
+            cursor[(dev, kind)] = end
+            kw = {}
+            if kind == "throttle":
+                kw = dict(tpu_factor=0.25, cpu_factor=0.75)
+            elif kind == "swap_degrade":
+                kw = dict(swap_factor=0.5)
+            events.append(
+                FaultEvent(kind=kind, device=dev, start=start, end=end, **kw)
+            )
+        sched = FaultSchedule(events=tuple(events), dropout_policy=policy)
+        payload = sched.to_json()
+        back = FaultSchedule.from_json(payload)
+        assert back == sched
+        # Bit-identical: a second serialization is the same byte string.
+        assert back.to_json() == payload
+
+    def test_from_json_rejects_foreign_payload(self):
+        with pytest.raises(ValueError):
+            FaultSchedule.from_json(json.dumps({"format": "nope"}))
+
+
+class TestSimulatorParity:
+    """DES == stepper elementwise under every fault kind; the empty
+    schedule is bitwise the faults=None path."""
+
+    @pytest.mark.parametrize("policy", ["requeue", "lost"])
+    def test_des_equals_stepper_under_faults(self, policy):
+        ts, plan = _mix_plan()
+        trace = poisson_trace([t.rate for t in ts], duration=120.0, seed=5)
+        sched = _full_schedule(policy)
+        des = simulate(ts, plan, HW, trace, backend="des", faults=sched)
+        stp = simulate(ts, plan, HW, trace, backend="stepper", faults=sched)
+        for i in range(len(ts)):
+            a = np.asarray(des.latencies[i], dtype=np.float64)
+            b = np.asarray(stp.latencies[i], dtype=np.float64)
+            assert np.array_equal(a, b), f"model {i} ({policy}) diverged"
+        assert des.misses == stp.misses
+        assert des.requests_lost == stp.requests_lost
+        assert des.requests_requeued == stp.requests_requeued
+
+    def test_lost_policy_drops_requeue_defers(self):
+        ts, plan = _mix_plan()
+        trace = poisson_trace([t.rate for t in ts], duration=120.0, seed=5)
+        lost = simulate(
+            ts, plan, HW, trace, backend="des", faults=_full_schedule("lost")
+        )
+        req = simulate(
+            ts,
+            plan,
+            HW,
+            trace,
+            backend="des",
+            faults=_full_schedule("requeue"),
+        )
+        assert lost.requests_lost > 0 and lost.requests_requeued == 0
+        assert req.requests_requeued > 0 and req.requests_lost == 0
+        # Lost requests vanish: fewer recorded completions than deferred.
+        n_lost = sum(len(ls) for ls in lost.latencies)
+        n_req = sum(len(ls) for ls in req.latencies)
+        assert n_lost < n_req
+
+    def test_empty_schedule_is_bitwise_no_fault(self):
+        ts, plan = _mix_plan()
+        trace = poisson_trace([t.rate for t in ts], duration=60.0, seed=3)
+        empty = FaultSchedule(events=())
+        for backend in ("des", "stepper"):
+            ref = simulate(ts, plan, HW, trace, backend=backend)
+            none = simulate(
+                ts, plan, HW, trace, backend=backend, faults=None
+            )
+            emp = simulate(
+                ts, plan, HW, trace, backend=backend, faults=empty
+            )
+            for i in range(len(ts)):
+                a = np.asarray(ref.latencies[i])
+                assert np.array_equal(a, np.asarray(none.latencies[i]))
+                assert np.array_equal(a, np.asarray(emp.latencies[i]))
+
+    def test_faults_reject_non_fcfs_discipline(self):
+        from repro.core.planner import DisciplineSpec
+
+        ts, plan = _mix_plan()
+        batched = Plan(
+            plan.partition,
+            plan.cores,
+            DisciplineSpec(kind="swap_batch", batch_cap=4),
+        )
+        profs = [t.profile for t in ts]
+        sched = _full_schedule()
+        for cls in (RuntimeSimulator, DiscreteEventSimulator):
+            with pytest.raises(ValueError, match="FCFS"):
+                cls(profs, batched, HW, faults=sched.view(0))
+
+    def test_recovery_metrics_and_stats(self):
+        ts, plan = _mix_plan()
+        trace = poisson_trace([t.rate for t in ts], duration=120.0, seed=5)
+        res = simulate(
+            ts, plan, HW, trace, backend="des", faults=_full_schedule()
+        )
+        ttrs = res.recovery_times()
+        assert len(ttrs) == 1  # one dropout window
+        assert ttrs[0] >= 0.0
+        dm = res.degraded_window_mean()
+        assert math.isfinite(dm) and dm > 0
+        # Fault-free runs report inert metrics.
+        base = simulate(ts, plan, HW, trace, backend="des")
+        assert base.fault is None
+        assert base.requests_lost == 0 and base.requests_requeued == 0
+        assert base.recovery_times() == []
+        assert math.isnan(base.degraded_window_mean())
+
+
+class TestRouteTraceFaults:
+    def test_down_device_redirects_split_tenants(self):
+        n = 200
+        arr = np.sort(np.random.default_rng(0).uniform(0, 100.0, n))
+        trace = Trace(
+            arrival=arr,
+            model_idx=np.zeros(n, dtype=np.int64),
+            service_scale=np.ones(n),
+        )
+        sched = FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=0, start=0.0, end=200.0),
+            )
+        )
+        subs = route_trace(
+            trace, [(0, 1)], [(0.5, 0.5)], 2, seed=1, faults=sched
+        )
+        assert len(subs[0]) == 0 and len(subs[1]) == n
+
+    def test_single_placement_tenant_keeps_requests(self):
+        n = 50
+        arr = np.linspace(0.0, 49.0, n)
+        trace = Trace(
+            arrival=arr,
+            model_idx=np.zeros(n, dtype=np.int64),
+            service_scale=np.ones(n),
+        )
+        sched = FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=0, start=0.0, end=100.0),
+            )
+        )
+        subs = route_trace(trace, [(0,)], [(1.0,)], 2, seed=1, faults=sched)
+        assert len(subs[0]) == n
+
+    def test_faults_none_routes_bitwise(self):
+        n = 300
+        rng = np.random.default_rng(2)
+        trace = Trace(
+            arrival=np.sort(rng.uniform(0, 100.0, n)),
+            model_idx=rng.integers(0, 2, n),
+            service_scale=np.ones(n),
+        )
+        placement, routing = [(0, 1), (1,)], [(0.3, 0.7), (1.0,)]
+        a = route_trace(trace, placement, routing, 2, seed=4)
+        b = route_trace(trace, placement, routing, 2, seed=4, faults=None)
+        for x, y in zip(a, b):
+            assert np.array_equal(x.arrival, y.arrival)
+            assert np.array_equal(x.model_idx, y.model_idx)
+
+
+class TestLatencyWindowTracker:
+    def test_incremental_polling(self):
+        tr = LatencyWindowTracker(2)
+        lat = [[1.0, 2.0], []]
+        cnt, mean = tr.poll_mean(lat)
+        assert cnt == 2 and mean == pytest.approx(1.5)
+        lat[0].append(4.0)
+        lat[1].append(6.0)
+        cnt, mean = tr.poll_mean(lat)
+        assert cnt == 2 and mean == pytest.approx(5.0)
+        cnt, mean = tr.poll_mean(lat)
+        assert cnt == 0 and math.isnan(mean)
+
+
+class _Devices:
+    @staticmethod
+    def fleet(n=3):
+        return [DeviceSpec.from_platform(HW, name=f"d{i}") for i in range(n)]
+
+
+class TestEvacuateDevice:
+    def test_evacuation_moves_all_tenants_off(self):
+        ts = tenants_for(
+            ("mnasnet", 4.0), ("inceptionv4", 2.0), ("mobilenetv2", 3.0)
+        )
+        fleet = _Devices.fleet(3)
+        plan, obj = evacuate_device(ts, fleet, [1], k_max=K_MAX)
+        assert math.isfinite(obj)
+        assert plan.n_devices == 3
+        for devs in plan.placement:
+            assert 1 not in devs
+        # The down device's plan row is inert: full-TPU pin, zero cores.
+        inert = plan.device_plans[1]
+        assert all(k == 0 for k in inert.cores)
+
+    def test_empty_surviving_fleet_raises(self):
+        ts = tenants_for(("mnasnet", 1.0))
+        with pytest.raises(ValueError):
+            evacuate_device(ts, _Devices.fleet(1), [0], k_max=K_MAX)
+
+
+class TestSelfHealingControllers:
+    def _dropout_setup(self):
+        profiles = [
+            paper_profile(n)
+            for n in ("mnasnet", "inceptionv4", "mobilenetv2")
+        ]
+        rates = [6.0, 4.0, 5.0]
+        trace = poisson_trace(rates, duration=300.0, seed=7)
+        sched = FaultSchedule(
+            events=(
+                FaultEvent(kind="dropout", device=1, start=60.0, end=180.0),
+            ),
+            dropout_policy="requeue",
+        )
+        return profiles, rates, trace, sched
+
+    def test_fault_aware_fleet_beats_oblivious_on_dropout(self):
+        profiles, rates, trace, sched = self._dropout_setup()
+        kw = dict(replan_period=15.0, window=30.0, backend="des")
+        obl = run_adaptive_fleet(
+            profiles, trace, _Devices.fleet(), faults=sched, **kw
+        )
+        aware = run_adaptive_fleet(
+            profiles,
+            trace,
+            _Devices.fleet(),
+            faults=sched,
+            fault_aware=True,
+            **kw,
+        )
+        m_obl = obl.sim.request_weighted_mean(rates)
+        m_aw = aware.sim.request_weighted_mean(rates)
+        assert m_aw < 0.8 * m_obl  # the benchmark bar, conservatively
+        assert aware.failover_times, "dropout was never detected"
+        assert aware.restore_times, "recovery was never detected"
+        assert aware.failover_times[0] >= 60.0
+        assert aware.sim.requests_requeued < obl.sim.requests_requeued
+        # Time-to-recover collapses once the backlog is rerouted.
+        assert max(aware.sim.recovery_times()) < max(
+            obl.sim.recovery_times()
+        )
+
+    def test_health_probe_detects_at_boundary(self):
+        profiles, rates, trace, sched = self._dropout_setup()
+        kw = dict(replan_period=15.0, window=30.0, backend="des")
+        probe = run_adaptive_fleet(
+            profiles,
+            trace,
+            _Devices.fleet(),
+            faults=sched,
+            fault_aware=True,
+            health_probe=True,
+            **kw,
+        )
+        # The heartbeat sees the outage at the first boundary inside it.
+        assert probe.failover_times == [75.0] or probe.failover_times == [
+            60.0
+        ]
+        assert probe.restore_times and probe.restore_times[0] >= 180.0
+
+    def test_controller_no_fault_path_is_bitwise_pre_fault(self):
+        profiles, rates, trace, _ = self._dropout_setup()
+        kw = dict(replan_period=15.0, window=30.0, backend="des")
+        ref = run_adaptive_fleet(profiles, trace, _Devices.fleet(), **kw)
+        exp = run_adaptive_fleet(
+            profiles,
+            trace,
+            _Devices.fleet(),
+            faults=None,
+            fault_aware=False,
+            **kw,
+        )
+        assert ref.fleet_plans == exp.fleet_plans
+        for i in range(len(profiles)):
+            assert np.array_equal(
+                np.asarray(ref.sim.latencies[i]),
+                np.asarray(exp.sim.latencies[i]),
+            )
+        assert exp.failover_times == []
+        assert exp.restore_times == []
+        assert exp.degraded_replan_times == []
+
+    def test_single_device_throttle_awareness(self):
+        profiles = [paper_profile(n) for n in ("mnasnet", "inceptionv4")]
+        rates = [4.0, 3.0]
+        trace = poisson_trace(rates, duration=240.0, seed=11)
+        sched = FaultSchedule(
+            events=(
+                FaultEvent(
+                    kind="throttle",
+                    device=0,
+                    start=60.0,
+                    end=180.0,
+                    tpu_factor=0.3,
+                    cpu_factor=0.3,
+                ),
+            )
+        )
+        kw = dict(replan_period=15.0, window=30.0, backend="des")
+        obl = run_adaptive(profiles, trace, HW, K_MAX, faults=sched, **kw)
+        aware = run_adaptive(
+            profiles, trace, HW, K_MAX, faults=sched, fault_aware=True, **kw
+        )
+        assert aware.degraded_replan_times, "throttle was never detected"
+        assert all(60.0 < t <= 195.0 for t in aware.degraded_replan_times)
+        m_obl = obl.sim.request_weighted_mean(rates)
+        m_aw = aware.sim.request_weighted_mean(rates)
+        assert m_aw <= m_obl * 1.02  # never materially worse
+        # And the no-fault path stays bitwise pre-fault.
+        ref = run_adaptive(profiles, trace, HW, K_MAX, **kw)
+        exp = run_adaptive(
+            profiles, trace, HW, K_MAX, faults=None, fault_aware=False, **kw
+        )
+        assert ref.plans == exp.plans
+        for i in range(len(profiles)):
+            assert np.array_equal(
+                np.asarray(ref.sim.latencies[i]),
+                np.asarray(exp.sim.latencies[i]),
+            )
+
+    def test_simulate_fleet_fault_injection_and_reroute(self):
+        profiles, rates, trace, sched = self._dropout_setup()
+        ts = [TenantSpec(p, r) for p, r in zip(profiles, rates)]
+        from repro.core.fleet import fleet_hill_climb
+
+        fleet = _Devices.fleet()
+        plan, _ = fleet_hill_climb(ts, fleet, k_max=K_MAX)
+        base = simulate_fleet(ts, plan, fleet, trace)
+        faulted = simulate_fleet(ts, plan, fleet, trace, faults=sched)
+        assert base.fault is None
+        assert faulted.requests_requeued > 0
+        # The outage stretches latencies fleet-wide.
+        assert faulted.overall_mean() > base.overall_mean()

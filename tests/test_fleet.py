@@ -138,6 +138,18 @@ class TestDeviceSpec:
         profiles = [t.profile for t in small_mix()]
         assert all(a is b for a, b in zip(dev.scaled_profiles(profiles), profiles))
 
+    def test_scaled_identity_survives_equal_twin_cache_entries(self):
+        # The scaled() LRU keys on profile *value*: an equal-but-distinct
+        # twin that populated the cache first (e.g. a rebuilt paper
+        # profile) must not shadow the unit-speed ``self`` identity.
+        a, b = paper_profile("squeezenet"), paper_profile("squeezenet")
+        assert a is not b and a == b
+        assert b.scaled(2.0, 1.0) is not None  # warm the value-keyed cache
+        assert a.scaled(1.0, 1.0) is a
+        assert b.scaled(1.0, 1.0) is b
+        # Non-unit factors may legitimately share one cached object.
+        assert a.scaled(2.0, 1.0) == b.scaled(2.0, 1.0)
+
     def test_scaled_profile_retimes(self):
         dev = DeviceSpec("d", 8 << 20, 400e6, 4, tpu_speed=2.0, cpu_speed=0.5)
         base = paper_profile("mnasnet")

@@ -5,6 +5,7 @@ The load-bearing contract throughout: forecasting and memoization are
 opt-in, and the default path (``forecaster=None, plan_cache=None``) is
 bitwise the reactive controller.
 """
+import json
 import math
 
 import numpy as np
@@ -12,7 +13,12 @@ import pytest
 
 from repro.configs.paper_models import paper_profile
 from repro.core.allocator import hill_climb
-from repro.core.plan_cache import PlanCache, mix_fingerprint, quantize_rates
+from repro.core.plan_cache import (
+    FleetPlanCache,
+    PlanCache,
+    mix_fingerprint,
+    quantize_rates,
+)
 from repro.core.planner import TenantSpec
 from repro.hw.specs import EDGE_TPU_PLATFORM
 from repro.serving.controller import _should_cold_fallback, run_adaptive
@@ -271,6 +277,95 @@ class TestPlanCache:
             PlanCache(capacity=0)
         with pytest.raises(ValueError):
             PlanCache(margin=-0.1)
+
+
+class TestPlanCachePersistence:
+    """persist()/restore(): JSON round trip for both caches, fingerprint
+    rejection, and the never-restored hot path staying untouched."""
+
+    def _warm_cache(self, rate_states):
+        cache = PlanCache()
+        for rates in rate_states:
+            tenants = _tenants(rates)
+            plan, obj = hill_climb(tenants, HW, K_MAX)
+            cache.store(tenants, HW, K_MAX, plan, obj)
+        return cache
+
+    def test_round_trip_hits_and_promotes(self):
+        states = [[2.0, 3.0], [4.0, 1.0]]
+        cache = self._warm_cache(states)
+        payload = cache.persist()
+        fresh = PlanCache()
+        assert fresh.restore(payload) == 2
+        assert len(fresh) == 2
+        for rates in states:
+            tenants = _tenants(rates)
+            want = cache.lookup(tenants, HW, K_MAX)
+            got = fresh.lookup(tenants, HW, K_MAX)
+            assert got is not None and got == want
+        # Every hit promoted its entry back under a live key.
+        assert len(fresh._restored) == 0 and len(fresh._entries) == 2
+        assert fresh.stats.hits == 2
+
+    def test_repersist_is_bit_identical(self):
+        cache = self._warm_cache([[2.0, 3.0], [4.0, 1.0]])
+        payload = cache.persist()
+        fresh = PlanCache()
+        fresh.restore(payload)
+        assert fresh.persist() == payload
+        # Round-trip again after promotion: same entries, just reordered
+        # into the live table -- the digests and plans survive unchanged.
+        fresh.lookup(_tenants([2.0, 3.0]), HW, K_MAX)
+        again = PlanCache()
+        assert again.restore(fresh.persist()) == 2
+
+    def test_restore_rejects_wrong_kind(self):
+        payload = self._warm_cache([[2.0, 3.0]]).persist()
+        with pytest.raises(ValueError, match="kind"):
+            FleetPlanCache().restore(payload)
+
+    def test_restore_rejects_grid_mismatch(self):
+        payload = self._warm_cache([[2.0, 3.0]]).persist()
+        with pytest.raises(ValueError, match="grid"):
+            PlanCache(rel=0.2).restore(payload)
+
+    def test_restore_rejects_foreign_payload(self):
+        with pytest.raises(ValueError):
+            PlanCache().restore("not json at all {")
+        with pytest.raises(ValueError, match="format"):
+            PlanCache().restore(json.dumps({"format": "something-else"}))
+        with pytest.raises(ValueError):
+            PlanCache().restore(json.dumps([1, 2, 3]))
+
+    def test_restore_trims_to_capacity_keeping_newest(self):
+        states = [[1.0, 1.0], [2.0, 2.0], [4.0, 4.0]]
+        payload = self._warm_cache(states).persist()
+        small = PlanCache(capacity=2)
+        assert small.restore(payload) == 2
+        assert small.lookup(_tenants(states[0]), HW, K_MAX) is None
+        assert small.lookup(_tenants(states[1]), HW, K_MAX) is not None
+        assert small.lookup(_tenants(states[2]), HW, K_MAX) is not None
+
+    def test_fleet_cache_round_trip(self):
+        from repro.core.fleet import DeviceSpec, fleet_hill_climb
+
+        fleet = [DeviceSpec.from_platform(HW, name=f"d{i}") for i in range(2)]
+        tenants = _tenants([2.0, 3.0])
+        plan, obj = fleet_hill_climb(tenants, fleet, k_max=K_MAX)
+        cache = FleetPlanCache()
+        cache.store(tenants, fleet, plan, obj)
+        fresh = FleetPlanCache()
+        assert fresh.restore(cache.persist()) == 1
+        got = fresh.lookup(tenants, fleet)
+        assert got is not None
+        assert got[0] == plan
+
+    def test_never_restored_cache_has_no_restored_entries(self):
+        cache = self._warm_cache([[2.0, 3.0]])
+        assert len(cache._restored) == 0
+        cache.lookup(_tenants([2.0, 3.0]), HW, K_MAX)
+        cache.lookup(_tenants([9.0, 9.0]), HW, K_MAX)
+        assert len(cache._restored) == 0
 
 
 DRIFT_PROFILES = ("mobilenetv2", "squeezenet")
