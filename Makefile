@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet bench-predictive bench-faults
+.PHONY: test test-fast test-slow bench-smoke bench-sched bench-jax bench-fleet bench-predictive bench-faults bench-slo
 
 # Full tier-1 suite (includes the multi-minute 512-device dry-run compiles).
 test:
@@ -30,7 +30,9 @@ test-slow:
 # + the predictive re-planning smoke (self-checks the no-forecaster/no-cache
 #   path is bitwise the reactive controller before timing)
 # + the fault-injection smoke (self-checks the faults=None path is bitwise
-#   the pre-fault simulators and controllers before timing).
+#   the pre-fault simulators and controllers before timing)
+# + the SLO-objective smoke (self-checks the objective=None path is bitwise
+#   the pre-refactor Eq. 5 mean on every layer before timing).
 bench-smoke:
 	$(PYTHON) -m benchmarks.run alg_overhead alg_scaling
 	$(PYTHON) -m benchmarks.alg_scaling --tenants 32,64
@@ -40,6 +42,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.fleet_scaling --smoke --out BENCH_fleet_scaling.smoke.json
 	$(PYTHON) -m benchmarks.predictive --smoke --out BENCH_predictive.smoke.json
 	$(PYTHON) -m benchmarks.faults --smoke --out BENCH_faults.smoke.json
+	$(PYTHON) -m benchmarks.slo --smoke --out BENCH_slo.smoke.json
 
 # Full scheduling-discipline sweep (swap-amortization vs FCFS on the
 # swap2/thrash16/collab8 mixes); records BENCH_scheduling.json.
@@ -65,6 +68,13 @@ bench-fleet:
 # (self-checks the bitwise opt-in pin first); records BENCH_predictive.json.
 bench-predictive:
 	$(PYTHON) -m benchmarks.predictive --out BENCH_predictive.json
+
+# Full SLO-objective sweep: mean vs p_tail(0.99) vs deadline_miss planners
+# on the tail-sensitive mix (one bursty heavy tenant + latency-critical
+# lights), DES ground truth; self-checks the bitwise objective=None pin on
+# every layer first; records BENCH_slo.json.
+bench-slo:
+	$(PYTHON) -m benchmarks.slo --out BENCH_slo.json
 
 # Full fault-injection sweep: fault-aware vs fault-oblivious adaptive
 # serving under device dropout / thermal throttling / swap-bandwidth

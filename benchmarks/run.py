@@ -32,6 +32,7 @@ MODULES = {
     "fleet_scaling": "benchmarks.fleet_scaling",
     "predictive": "benchmarks.predictive",
     "faults": "benchmarks.faults",
+    "slo": "benchmarks.slo",
 }
 
 

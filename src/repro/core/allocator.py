@@ -18,6 +18,7 @@ from typing import Iterator, Sequence
 import numpy as np
 
 from repro.core import latency
+from repro.core.objective import Objective, deadlines_of, is_default
 from repro.core.plan_tables import EvalTables, PlanTables
 from repro.core.planner import (
     FCFS,
@@ -191,6 +192,7 @@ def hill_climb(
     discipline: DisciplineSpec = FCFS,
     discipline_space: Sequence[DisciplineSpec] | None = None,
     evaluator=None,
+    objective: Objective | None = None,
 ) -> tuple[Plan, float]:
     """Algorithm 1: greedy hill-climbing resource allocation.
 
@@ -255,6 +257,15 @@ def hill_climb(
       statistical-equivalence contract -- committed plans are identical
       unless two candidates tie within float32 round-off.
 
+    SLO objectives (``objective``):
+
+    * ``objective`` selects which metric the climb minimizes
+      (``repro.core.objective``: mean / ``p_tail(q)`` / ``deadline_miss``
+      against the budgets on the mix).  The ``None`` default is bitwise
+      the pre-refactor Eq. 5 mean search on every path; non-mean
+      objectives score through the same penalty convention, so the
+      returned float is the chosen objective's value.
+
     Returns the final (Plan, predicted objective).
     """
     if evaluator is not None:
@@ -307,6 +318,7 @@ def hill_climb(
                 prune=prune,
                 discipline=spec,
                 evaluator=evaluator,
+                objective=objective,
             )
             if best is None or cand[1] < best[1]:
                 best = cand
@@ -321,6 +333,7 @@ def hill_climb(
             force_alpha_zero=force_alpha_zero,
             max_iters=max_iters,
             discipline=discipline,
+            objective=objective,
         )
     n = len(tenants)
     etab = _ensure_eval_tables(
@@ -339,6 +352,11 @@ def hill_climb(
     for i, f in enumerate(fronts):
         fr[i, : len(f)] = f
 
+    ev_slo = (
+        {}
+        if is_default(objective)
+        else {"objective": objective, "deadlines": deadlines_of(tenants)}
+    )
     pos = np.zeros(n, dtype=np.intp)
     if init_plan is not None:
         if len(init_plan.partition) != n:
@@ -358,6 +376,7 @@ def hill_climb(
                 cores[None, :],
                 force_alpha_zero=force_alpha_zero,
                 discipline=discipline,
+                **ev_slo,
             )[0]
         )
     else:
@@ -370,6 +389,7 @@ def hill_climb(
                 force_alpha_zero=force_alpha_zero,
                 tables=etab,
                 discipline=discipline,
+                objective=objective,
             )[0]
         )
 
@@ -406,6 +426,7 @@ def hill_climb(
                 k_cand,
                 force_alpha_zero=force_alpha_zero,
                 discipline=discipline,
+                **ev_slo,
             )
             objs[~ok] = np.inf
             j = int(np.argmin(objs))  # first minimum, like the scalar scan
@@ -437,6 +458,7 @@ def hill_climb(
             force_alpha_zero=force_alpha_zero,
             tables=etab,
             discipline=discipline,
+            objective=objective,
         )
         j = int(np.argmin(objs))  # first minimum, like the scalar scan
         if not objs[j] < l_curr:
@@ -463,6 +485,7 @@ def _hill_climb_scalar(
     force_alpha_zero: bool = False,
     max_iters: int = 10_000,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> tuple[Plan, float]:
     """Seed scalar Algorithm 1; reference for the batched path."""
     n = len(tenants)
@@ -470,7 +493,8 @@ def _hill_climb_scalar(
     cores = prop_alloc(tenants, partition, k_max)
     plan = Plan(tuple(partition), cores, discipline)
     l_curr = latency.penalized_objective(
-        tenants, plan, platform, force_alpha_zero=force_alpha_zero
+        tenants, plan, platform, force_alpha_zero=force_alpha_zero,
+        objective=objective,
     )
 
     for _ in range(max_iters):
@@ -491,6 +515,7 @@ def _hill_climb_scalar(
                     Plan(tuple(cand), k_cand, discipline),
                     platform,
                     force_alpha_zero=force_alpha_zero,
+                    objective=objective,
                 )
                 if best is None or l_cand < best[0]:
                     best = (l_cand, m, h, k_cand)
@@ -597,6 +622,7 @@ def brute_force_oracle(
     chunk_size: int = 4096,
     prune: bool = True,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> tuple[Plan, float]:
     """Exhaustive NLIP solve over all feasible (P, K).  Exponential --
     only for tests/validation on small instances.  ``discipline`` scores
@@ -618,7 +644,10 @@ def brute_force_oracle(
     frontier point exactly.
     """
     if not batch:
-        return _brute_force_scalar(tenants, platform, k_max, discipline=discipline)
+        return _brute_force_scalar(
+            tenants, platform, k_max, discipline=discipline,
+            objective=objective,
+        )
     tables = EvalTables.build(tenants, platform, k_max)
     best_plan: Plan | None = None
     best_obj = math.inf
@@ -632,7 +661,8 @@ def brute_force_oracle(
         parts = np.array([c[0] for c in chunk])
         cores = np.array([c[1] for c in chunk])
         objs = latency.objective_batch(
-            tenants, parts, cores, platform, tables=tables, discipline=discipline
+            tenants, parts, cores, platform, tables=tables,
+            discipline=discipline, objective=objective,
         )
         # NaN (zero-rate tenant on an unstable queue) never beats ``best`` in
         # the scalar loop; map to inf so argmin skips it the same way.
@@ -651,13 +681,14 @@ def _brute_force_scalar(
     k_max: int,
     *,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> tuple[Plan, float]:
     """Seed scalar oracle; reference for the chunked batch path."""
     best_plan: Plan | None = None
     best_obj = math.inf
     for partition, cores in _feasible_plans(tenants, k_max):
         plan = Plan(tuple(partition), tuple(cores), discipline)
-        obj = latency.objective(tenants, plan, platform)
+        obj = latency.objective(tenants, plan, platform, objective=objective)
         if obj < best_obj:
             best_obj = obj
             best_plan = plan

@@ -41,6 +41,7 @@ from typing import Sequence
 
 from repro.core.allocator import ensure_eval_tables, hill_climb
 from repro.core.latency import penalized_objective
+from repro.core.objective import Objective
 from repro.core.plan_tables import PlanTables
 from repro.core.planner import (
     FCFS,
@@ -321,6 +322,7 @@ def _climb_device(
     init_sub: Plan | None = None,
     discipline: DisciplineSpec = FCFS,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    objective: Objective | None = None,
 ) -> tuple[Plan, float]:
     """Optimize one device's local plan for its placed tenants.
 
@@ -335,12 +337,15 @@ def _climb_device(
         TenantSpec(
             tenants[i].profile.scaled(device.tpu_speed, device.cpu_speed),
             tenants[i].rate,
+            deadline=tenants[i].deadline,
         )
         for i in members
     ]
     kwargs: dict = {
         "tables": cache.tables_for(device, [t.profile for t in sub], k_max)
     }
+    if objective is not None:
+        kwargs["objective"] = objective
     if init_sub is not None:
         kwargs["init_plan"] = init_sub
     if discipline_space is not None:
@@ -420,6 +425,7 @@ def fleet_hill_climb(
     discipline: DisciplineSpec = FCFS,
     discipline_space: Sequence[DisciplineSpec] | None = None,
     max_moves: int | None = None,
+    objective: Objective | None = None,
 ) -> tuple[FleetPlan, float]:
     """Cluster-level planner: placement + routing + per-device plans.
 
@@ -440,7 +446,10 @@ def fleet_hill_climb(
     fleet analogue of the single-device cold fallback, for escaping a
     drifted warm basin without migrating tenants.
 
-    ``k_max=None`` gives every device its own ``cpu_cores`` budget; an int
+    ``objective`` selects the metric every per-device climb minimizes and
+    the fleet total sums (``repro.core.objective``); ``None`` stays bitwise
+    the pinned Eq. 5 mean.  ``k_max=None`` gives every device its own
+    ``cpu_cores`` budget; an int
     caps all devices.  ``tables`` carries ``PlanTables`` across calls (one
     build per device class x mix).  Returns ``(FleetPlan, objective)`` where
     the objective is the sum of per-device Eq. 5 penalized objectives --
@@ -490,6 +499,7 @@ def fleet_hill_climb(
                 ),
                 discipline=discipline,
                 discipline_space=discipline_space,
+                objective=objective,
             )
             plans.append(full)
             objs.append(obj)
@@ -510,6 +520,7 @@ def fleet_hill_climb(
             cache,
             discipline=discipline,
             discipline_space=discipline_space,
+            objective=objective,
         )
         plans.append(full)
         objs.append(obj)
@@ -535,6 +546,7 @@ def fleet_hill_climb(
                     init_sub=_restrict(plans[worst], rest),
                     discipline=discipline,
                     discipline_space=discipline_space,
+                    objective=objective,
                 )
                 for dst in range(n_dev):
                     if dst == worst or len(members[dst]) >= k_caps[dst]:
@@ -555,6 +567,7 @@ def fleet_hill_climb(
                         init_sub=seed,
                         discipline=discipline,
                         discipline_space=discipline_space,
+                        objective=objective,
                     )
                     delta = (o_src + o_dst) - (objs[worst] + objs[dst])
                     if not delta < -1e-12:
@@ -621,6 +634,8 @@ def fleet_plan_objective(
     tenants: Sequence[TenantSpec],
     fleet_plan: FleetPlan,
     fleet: Sequence[DeviceSpec],
+    *,
+    objective: Objective | None = None,
 ) -> float:
     """Re-score an existing ``FleetPlan`` under fresh tenant rates.
 
@@ -632,6 +647,8 @@ def fleet_plan_objective(
     share of each tenant's rate.  This is the verify step of the fleet
     plan cache (``core/plan_cache.py``): one cheap evaluation decides
     whether a memoized plan is still within margin of its stored quality.
+    ``objective`` must match the metric the plan was searched under, or the
+    comparison is apples-to-oranges -- the cache threads it automatically.
     """
     if fleet_plan.n_tenants != len(tenants) or fleet_plan.n_devices != len(
         fleet
@@ -651,11 +668,15 @@ def fleet_plan_objective(
                 tenants[i].profile.scaled(dev.tpu_speed, dev.cpu_speed),
                 tenants[i].rate
                 * fleet_plan.routing[i][fleet_plan.placement[i].index(d)],
+                deadline=tenants[i].deadline,
             )
             for i in members
         ]
         total += penalized_objective(
-            sub, _restrict(fleet_plan.device_plans[d], members), dev.platform
+            sub,
+            _restrict(fleet_plan.device_plans[d], members),
+            dev.platform,
+            objective=objective,
         )
     return float(total)
 
@@ -664,6 +685,8 @@ def device_objectives(
     tenants: Sequence[TenantSpec],
     fleet_plan: FleetPlan,
     fleet: Sequence[DeviceSpec],
+    *,
+    objective: Objective | None = None,
 ) -> list[float]:
     """Per-device Eq. 5 objective contributions of an existing plan.
 
@@ -694,6 +717,7 @@ def device_objectives(
                 tenants[i].profile.scaled(dev.tpu_speed, dev.cpu_speed),
                 tenants[i].rate
                 * fleet_plan.routing[i][fleet_plan.placement[i].index(d)],
+                deadline=tenants[i].deadline,
             )
             for i in members
         ]
@@ -703,6 +727,7 @@ def device_objectives(
                     sub,
                     _restrict(fleet_plan.device_plans[d], members),
                     dev.platform,
+                    objective=objective,
                 )
             )
         )
@@ -717,6 +742,7 @@ def evacuate_device(
     k_max: int | None = None,
     tables: FleetTablesCache | None = None,
     discipline_space: Sequence[DisciplineSpec] | None = None,
+    objective: Objective | None = None,
 ) -> tuple[FleetPlan, float]:
     """Failover placement: re-plan the fleet with ``down`` devices removed.
 
@@ -745,6 +771,7 @@ def evacuate_device(
         k_max=k_max,
         tables=tables,
         discipline_space=discipline_space,
+        objective=objective,
     )
     inert = Plan(
         tuple(_pin_row(t.profile)[0] for t in tenants),

@@ -57,6 +57,7 @@ from repro.core.plan_tables import (
     PKCOL_OVERLOAD,
     PKCOL_STATIC,
 )
+from repro.core.objective import Objective, is_default
 from repro.core.planner import FCFS, DisciplineSpec, TenantSpec
 from repro.hw.specs import Platform
 
@@ -64,6 +65,118 @@ __all__ = ["JaxPlanEvaluator"]
 
 _WAIT_CAP = 1e12
 _PENALTY_BASE = 1e9  # mirrors latency._PENALTY_BASE
+
+
+def _tail_quantile(wq, rho, q):
+    """jnp port of ``queueing.wait_tail_quantile`` (same conventions)."""
+    tail = (wq / rho) * jnp.log(rho / (1.0 - q))
+    tail = jnp.where((1.0 - q) >= rho, 0.0, tail)
+    tail = jnp.where((rho >= 1.0) | jnp.isinf(wq), jnp.inf, tail)
+    return jnp.where((rho <= 0.0) | (wq <= 0.0), 0.0, tail)
+
+
+def _exceed_prob(wq, rho, t):
+    """jnp port of ``queueing.wait_exceed_prob`` (same conventions)."""
+    t = jnp.maximum(t, 0.0)
+    p = rho * jnp.exp(-rho * t / wq)
+    p = jnp.where((wq <= 0.0) | ~jnp.isfinite(wq), 0.0, p)
+    p = jnp.where((rho >= 1.0) | jnp.isinf(wq), 1.0, p)
+    return jnp.where(rho <= 0.0, 0.0, p)
+
+
+def _miss_prob(wt, rho_t, wc, rho_c, slack):
+    """jnp port of ``latency._miss_prob``: slack split across the TPU and
+    CPU waits proportionally to their means, independence combine."""
+    wsum = wt + wc
+    ft = jnp.where(wsum > 0.0, wt / wsum, 0.0)
+    fc = jnp.where(wsum > 0.0, wc / wsum, 0.0)
+    sa = jnp.where(ft > 0.0, slack * ft, 0.0)
+    sb = jnp.where(fc > 0.0, slack * fc, 0.0)
+    pt = _exceed_prob(wt, rho_t, sa)
+    pc = _exceed_prob(wc, rho_c, sb)
+    miss = 1.0 - (1.0 - pt) * (1.0 - pc)
+    return jnp.where(slack < 0.0, 1.0, miss)
+
+
+@partial(jax.jit, static_argnames=("force_alpha_zero", "kind", "q"))
+def _slo_kernel(
+    pstack, pkstack, rates, svc_tab, tl_tab, ix_tab, bnd_tab, s1c_tab,
+    npoints, sram_bytes, deadlines,
+    P, K,
+    force_alpha_zero: bool, kind: str, q: float,
+):
+    """(value, overload) for B plans under a non-mean objective.
+
+    The jnp port of ``latency._batch_eval_slo``'s FCFS tail: per-tenant
+    [B, n] gathers of the static pieces, the Eq. 10 per-tenant alphas, the
+    Pollaczek-Khinchine wait, the in-graph M/D/k pool wait, then either the
+    quantile latencies (``p_tail``) or the slack-split miss probabilities
+    (``deadline_miss``).  Same float32 statistical-equivalence contract as
+    the mean kernel.
+    """
+    n = P.shape[1]
+    ti = jnp.arange(n)
+    A = pstack[ti, P].sum(axis=1)        # [B, 9]
+    F = pkstack[ti, P, K].sum(axis=1)    # [B, 2]
+    lam = A[:, PCOL_LAM]
+    on = P > 0
+    on_cpu = P < npoints[None, :]
+    r_full = jnp.broadcast_to(rates[None, :], P.shape)
+    r = jnp.where(on, r_full, 0.0)
+    svc = jnp.where(on, svc_tab[ti, P], 0.0)
+    tl = jnp.where(on, tl_tab[ti, P], 0.0)
+
+    if force_alpha_zero:
+        alphas = jnp.zeros_like(r)
+    else:
+        shared = (
+            (A[:, PCOL_WEIGHT] > sram_bytes)
+            & (A[:, PCOL_ACTIVE] > 1.0)
+            & (lam > 0.0)
+        )
+        safe_lam = jnp.where(lam > 0.0, lam, 1.0)
+        alphas = jnp.where(
+            shared[:, None] & on,
+            jnp.maximum(0.0, 1.0 - r / safe_lam[:, None]),
+            0.0,
+        )
+    sl = (r * alphas * tl).sum(axis=-1)
+    u = (r * alphas * tl * (2.0 * svc + tl)).sum(axis=-1)
+    rho_tpu = A[:, PCOL_S1] + sl
+    es2_num = A[:, PCOL_S2] + u
+    tpu_wait = jnp.where(
+        rho_tpu >= 1.0, jnp.inf, es2_num / (2.0 * (1.0 - rho_tpu))
+    )
+    swap_i = alphas * tl
+
+    s1c = jnp.where(on_cpu, s1c_tab[ti, P], 0.0)
+    kf = K.astype(svc.dtype)
+    mu_one = jnp.where(s1c > 0.0, 1.0 / jnp.where(s1c > 0.0, s1c, 1.0), jnp.inf)
+    cap = kf * mu_one
+    cpu_wait = 0.5 * (1.0 / (cap - r_full) - 1.0 / cap)
+    cpu_wait = jnp.where(r_full >= cap, jnp.inf, cpu_wait)
+    cpu_wait = jnp.where((kf <= 0.0) | (mu_one <= 0.0), jnp.inf, cpu_wait)
+    cpu_wait = jnp.where(r_full <= 0.0, 0.0, cpu_wait)
+    cpu_wait = jnp.where(on_cpu, cpu_wait, 0.0)
+    rho_cpu = r_full * s1c / jnp.maximum(kf, 1.0)
+
+    static = (
+        jnp.where(on, ix_tab[None, :], 0.0)
+        + svc
+        + jnp.where(on & on_cpu, bnd_tab[ti, P], 0.0)
+        + s1c
+    )
+    wt = jnp.where(on, tpu_wait[:, None], 0.0)
+    if kind == "p_tail":
+        tail_t = _tail_quantile(wt, rho_tpu[:, None], q)
+        tail_c = _tail_quantile(cpu_wait, rho_cpu, q)
+        vals = static + swap_i + tail_t + tail_c
+    else:
+        slack = deadlines[None, :] - static - swap_i
+        vals = _miss_prob(wt, rho_tpu[:, None], cpu_wait, rho_cpu, slack)
+    value = (r_full * vals).sum(axis=1)
+    overload = jnp.maximum(0.0, rho_tpu - 1.0) + F[:, PKCOL_OVERLOAD]
+    return value, overload
 
 
 @partial(
@@ -239,6 +352,10 @@ class JaxPlanEvaluator:
     rates: jax.Array      # [n] float32
     svc_tab: jax.Array    # [n, W] float32
     tl_tab: jax.Array     # [n, W] float32
+    ix_tab: jax.Array     # [n] float32 input transfer (SLO objectives)
+    bnd_tab: jax.Array    # [n, W] float32 boundary transfer
+    s1c_tab: jax.Array    # [n, W] float32 one-core CPU suffix time
+    npoints: jax.Array    # [n] int32 partition points per tenant
 
     @classmethod
     def from_tables(cls, et: EvalTables) -> "JaxPlanEvaluator":
@@ -249,6 +366,10 @@ class JaxPlanEvaluator:
             rates=jnp.asarray(et.rates, dtype=jnp.float32),
             svc_tab=jnp.asarray(et.base.prefix_service, dtype=jnp.float32),
             tl_tab=jnp.asarray(et.base.load, dtype=jnp.float32),
+            ix_tab=jnp.asarray(et.base.input_xfer, dtype=jnp.float32),
+            bnd_tab=jnp.asarray(et.base.boundary, dtype=jnp.float32),
+            s1c_tab=jnp.asarray(et.base.suffix1, dtype=jnp.float32),
+            npoints=jnp.asarray(et.base.num_points, dtype=jnp.int32),
         )
 
     @classmethod
@@ -274,13 +395,42 @@ class JaxPlanEvaluator:
     ) -> bool:
         return self.et.matches(tenants, platform)
 
-    def _eval(self, partitions, cores, force_alpha_zero, discipline):
+    def _eval(
+        self,
+        partitions,
+        cores,
+        force_alpha_zero,
+        discipline,
+        objective=None,
+        deadlines=None,
+    ):
         P = jnp.asarray(np.asarray(partitions, dtype=np.int32))
         K = jnp.asarray(np.asarray(cores, dtype=np.int32))
         if P.ndim != 2 or P.shape != K.shape:
             raise ValueError(
                 f"expected [B, n] partitions/cores, got {P.shape}/{K.shape}"
             )
+        if not is_default(objective):
+            if discipline.batches:
+                raise ValueError(
+                    "JaxPlanEvaluator does not support SLO objectives under "
+                    "batching disciplines; use the NumPy evaluator "
+                    "(hill_climb without evaluator=)"
+                )
+            if deadlines is None:
+                deadlines = np.full(self.rates.shape[0], np.inf)
+            value, overload = _slo_kernel(
+                self.pstack, self.pkstack, self.rates,
+                self.svc_tab, self.tl_tab, self.ix_tab, self.bnd_tab,
+                self.s1c_tab, self.npoints,
+                float(self.et.sram_bytes),
+                jnp.asarray(np.asarray(deadlines, dtype=np.float32)),
+                P, K,
+                force_alpha_zero=bool(force_alpha_zero),
+                kind=objective.kind,
+                q=float(objective.q),
+            )
+            return value, overload
         total, overload = _objective_kernel(
             self.pstack, self.pkstack, self.rates, self.svc_tab, self.tl_tab,
             float(self.et.sram_bytes), P, K,
@@ -298,9 +448,14 @@ class JaxPlanEvaluator:
         *,
         force_alpha_zero: bool = False,
         discipline: DisciplineSpec = FCFS,
+        objective: Objective | None = None,
+        deadlines=None,
     ) -> np.ndarray:
         """Eq. 5 objective for B plans; float32-on-device, float64 out."""
-        total, _ = self._eval(partitions, cores, force_alpha_zero, discipline)
+        total, _ = self._eval(
+            partitions, cores, force_alpha_zero, discipline, objective,
+            deadlines,
+        )
         return np.asarray(total, dtype=np.float64)
 
     def penalized_objective_batch(
@@ -310,12 +465,21 @@ class JaxPlanEvaluator:
         *,
         force_alpha_zero: bool = False,
         discipline: DisciplineSpec = FCFS,
+        objective: Objective | None = None,
+        deadlines=None,
     ) -> np.ndarray:
         """Batched ``latency.penalized_objective`` under the statistical
         contract: infeasible plans priced at ``_PENALTY_BASE * (1 +
-        overload)``, exactly the NumPy convention."""
+        overload)``, exactly the NumPy convention.
+
+        ``objective=`` selects the opt-in SLO objectives (``deadlines``
+        carries the per-tenant budget vector for ``deadline_miss`` -- the
+        evaluator holds tables, not tenant specs); the ``None`` default is
+        the pinned mean kernel.
+        """
         total, overload = self._eval(
-            partitions, cores, force_alpha_zero, discipline
+            partitions, cores, force_alpha_zero, discipline, objective,
+            deadlines,
         )
         total = np.asarray(total, dtype=np.float64)
         overload = np.asarray(overload, dtype=np.float64)

@@ -8,6 +8,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import queueing, swap
+from repro.core.objective import Objective, deadlines_of, is_default
 from repro.core.plan_tables import (
     PCOL_ACTIVE,
     PCOL_LAM,
@@ -287,10 +288,133 @@ def objective(
     platform: Platform,
     *,
     force_alpha_zero: bool = False,
+    objective: Objective | None = None,
 ) -> float:
-    """Eq. 5 objective; ``inf`` when any queue is unstable."""
+    """Eq. 5 objective; ``inf`` when any queue is unstable.
+
+    ``objective`` selects the opt-in SLO objectives of
+    ``repro.core.objective``; ``None`` (or an explicit mean spec) is the
+    pinned Eq. 5 path above.
+    """
     pred = predict(tenants, plan, platform, force_alpha_zero=force_alpha_zero)
+    if not is_default(objective):
+        return _slo_value(tenants, pred, objective)
     return pred.weighted_latency(tenants)
+
+
+def _miss_prob(wt, rho_t, wc, rho_c, slack):
+    """P(W_tpu + W_cpu > slack) under the exponential-tail wait model.
+
+    The two waits are treated as independent, with the slack split between
+    them proportionally to their means (all the slack goes to the only
+    nonzero wait when one is zero).  Monotone non-increasing in ``slack``;
+    1 when ``slack < 0`` (the static path already blew the budget) and when
+    either queue is unstable (``wait_exceed_prob`` maps infinite waits to
+    1).  Element-wise over any broadcastable shapes -- the scalar
+    reference, the batched evaluator, and ``benchmarks/model_vs_sim`` all
+    run this exact function.
+    """
+    wt = np.asarray(wt, dtype=np.float64)
+    wc = np.asarray(wc, dtype=np.float64)
+    slack = np.asarray(slack, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        wsum = wt + wc
+        ft = np.where(wsum > 0.0, wt / wsum, 0.0)
+        fc = np.where(wsum > 0.0, wc / wsum, 0.0)
+        # inf * 0 guards: an all-slack-to-one-side split stays exact and an
+        # infinite budget never produces NaN shares.
+        sa = np.where(ft > 0.0, slack * ft, 0.0)
+        sb = np.where(fc > 0.0, slack * fc, 0.0)
+        pt = queueing.wait_exceed_prob(wt, rho_t, sa)
+        pc = queueing.wait_exceed_prob(wc, rho_c, sb)
+        miss = 1.0 - (1.0 - pt) * (1.0 - pc)
+    return np.where(slack < 0.0, 1.0, miss)
+
+
+def predict_tail_latencies(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    q: float = 0.99,
+    *,
+    force_alpha_zero: bool = False,
+    pred: SystemPrediction | None = None,
+) -> np.ndarray:
+    """Per-tenant analytic q-quantile latency ``T_i(q)``.
+
+    ``T_i(q)`` replaces each mean queueing delay of the Eq. 4 breakdown
+    with its q-quantile under the M/G/1 exponential-tail model
+    (``queueing.wait_tail_quantile``); statics and the expected swap stay
+    at their means.  Summing the marginal TPU and CPU quantiles is
+    conservative -- ``benchmarks/model_vs_sim.py`` maps the error against
+    the DES p99.  Off-TPU tenants get a zero TPU term; unstable queues
+    produce ``inf``.
+    """
+    if pred is None:
+        pred = predict(tenants, plan, platform, force_alpha_zero=force_alpha_zero)
+    rho_t = pred.tpu_utilization
+    out = np.empty(len(tenants), dtype=np.float64)
+    for i, b in enumerate(pred.per_model):
+        tail_t = float(queueing.wait_tail_quantile(b.tpu_wait, rho_t, q))
+        tail_c = float(
+            queueing.wait_tail_quantile(b.cpu_wait, pred.cpu_utilizations[i], q)
+        )
+        out[i] = b.static + b.tpu_swap + tail_t + tail_c
+    return out
+
+
+def predict_miss_probs(
+    tenants: Sequence[TenantSpec],
+    plan: Plan,
+    platform: Platform,
+    deadlines: np.ndarray | None = None,
+    *,
+    force_alpha_zero: bool = False,
+    pred: SystemPrediction | None = None,
+) -> np.ndarray:
+    """Per-tenant analytic deadline-miss probability ``P(T_i > d_i)``.
+
+    ``deadlines`` defaults to the budgets carried on the mix
+    (``TenantSpec.deadline``; tenants without one never miss).  The miss
+    splits each tenant's slack ``d_i - static_i - swap_i`` across the TPU
+    and CPU waits -- see ``_miss_prob`` for the model and its conventions.
+    Monotone non-increasing in every deadline.
+    """
+    if pred is None:
+        pred = predict(tenants, plan, platform, force_alpha_zero=force_alpha_zero)
+    if deadlines is None:
+        deadlines = deadlines_of(tenants)
+    d = np.asarray(deadlines, dtype=np.float64)
+    rho_t = pred.tpu_utilization
+    out = np.empty(len(tenants), dtype=np.float64)
+    for i, b in enumerate(pred.per_model):
+        slack = d[i] - b.static - b.tpu_swap
+        out[i] = float(
+            _miss_prob(
+                b.tpu_wait, rho_t, b.cpu_wait, pred.cpu_utilizations[i], slack
+            )
+        )
+    return out
+
+
+def _slo_value(
+    tenants: Sequence[TenantSpec],
+    pred: SystemPrediction,
+    objective: Objective,
+) -> float:
+    """Scalar-path SLO objective value from a computed prediction.
+
+    ``p_tail``: ``sum_i lambda_i * T_i(q)`` -- Eq. 5 with quantile
+    latencies.  ``deadline_miss``: ``sum_i lambda_i * P(T_i > d_i)``, the
+    rate of deadline misses per second.  Zero-rate tenants on unstable
+    queues contribute ``0 * inf = NaN`` exactly as the mean path does.
+    """
+    rates = np.array([t.rate for t in tenants], dtype=np.float64)
+    if objective.kind == "p_tail":
+        vals = predict_tail_latencies(tenants, None, None, objective.q, pred=pred)
+    else:
+        vals = predict_miss_probs(tenants, None, None, pred=pred)
+    return float(np.sum(rates * vals))
 
 
 # Any finite objective is < _PENALTY_BASE; overload adds gradient on top so
@@ -305,6 +429,7 @@ def penalized_objective(
     platform: Platform,
     *,
     force_alpha_zero: bool = False,
+    objective: Objective | None = None,
 ) -> float:
     """Eq. 5 objective with a smooth infeasibility penalty.
 
@@ -316,7 +441,20 @@ def penalized_objective(
     This is the allocator's hot path (hundreds of evaluations per
     re-planning); it computes the scalar objective without materializing the
     per-model breakdown dataclasses ``predict`` builds for reporting.
+
+    ``objective`` selects the opt-in SLO objectives (same penalty and
+    feasibility semantics, SLO value instead of the weighted mean); the
+    ``None`` default is the pinned pre-refactor mean path below.
     """
+    if not is_default(objective):
+        pred = predict(
+            tenants, plan, platform, force_alpha_zero=force_alpha_zero
+        )
+        total = _slo_value(tenants, pred, objective)
+        over = pred.overload
+        if over == 0.0 and math.isfinite(total):
+            return total
+        return _PENALTY_BASE * (1.0 + over)
     partition, cores = plan.partition, plan.cores
     if force_alpha_zero:
         alphas = [0.0] * len(tenants)
@@ -414,6 +552,7 @@ def _batch_eval(
     force_alpha_zero: bool,
     tables: PlanTables | EvalTables | None,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Shared core: per-plan (weighted_latency_total, overload) arrays.
 
@@ -433,6 +572,16 @@ def _batch_eval(
         raise ValueError(f"expected [B, n] partitions/cores, got {P.shape}/{K.shape}")
     et = _resolve_tables(tenants, platform, K, tables)
 
+    if not is_default(objective):
+        return _batch_eval_slo(
+            tenants,
+            et,
+            P,
+            K,
+            force_alpha_zero=force_alpha_zero,
+            discipline=discipline,
+            objective=objective,
+        )
     ti = et.tenant_idx
     A = et.pstack[ti, P].sum(axis=1)       # [B, 9] per-tenant aggregates
     F = et.pkstack[ti, P, K].sum(axis=1)   # [B, 2] static latency + overload
@@ -551,6 +700,100 @@ def _aggregate_objective_batched_swap(
     return total, overload
 
 
+def _batch_eval_slo(
+    tenants: Sequence[TenantSpec],
+    et: EvalTables,
+    P: np.ndarray,
+    K: np.ndarray,
+    *,
+    force_alpha_zero: bool,
+    discipline: DisciplineSpec,
+    objective: Objective,
+) -> tuple[np.ndarray, np.ndarray]:
+    """SLO (non-mean) tail of the batched evaluator: (value, overload).
+
+    The mean objective's linear decomposition (``F_STATIC + lam * W +
+    swap``) cannot price nonlinear per-tenant objectives, so this path
+    gathers the per-tenant static pieces from the rate-free tables ([B, n]
+    instead of the aggregate [B, 9]) and runs exactly the formulas the
+    scalar ``predict_tail_latencies`` / ``predict_miss_probs`` reference
+    runs -- the batch == scalar invariant extends to every objective at
+    <= 1e-9 relative (tests/test_slo.py).
+    """
+    ti = et.tenant_idx
+    A = et.pstack[ti, P].sum(axis=1)       # [B, 9] per-tenant aggregates
+    F = et.pkstack[ti, P, K].sum(axis=1)   # [B, 2] static latency + overload
+    lam = A[:, PCOL_LAM]
+    on = P > 0
+    on_cpu = P < et.num_points[None, :]
+    r_full = np.broadcast_to(et.rates[None, :], P.shape)
+    r = np.where(on, r_full, 0.0)
+    svc = np.where(on, et.base.prefix_service[ti, P], 0.0)
+    tl = np.where(on, et.base.load[ti, P], 0.0)
+
+    with np.errstate(divide="ignore", invalid="ignore"):
+        if force_alpha_zero:
+            alphas = np.zeros_like(r)
+        else:
+            shared = (
+                (A[:, PCOL_WEIGHT] > et.sram_bytes)
+                & (A[:, PCOL_ACTIVE] > 1.0)
+                & (lam > 0.0)
+            )
+            # Eq. 10 shared-occupancy alphas, per tenant (the scalar path's
+            # swap.weight_miss_probs; the mean path's (SL - Q/lam) collapse
+            # is the aggregate of exactly these).
+            alphas = np.where(
+                shared[:, None] & on,
+                np.maximum(0.0, 1.0 - r / np.where(lam > 0, lam, 1.0)[:, None]),
+                0.0,
+            )
+        if discipline.batches and not force_alpha_zero:
+            tpu_wait, rho_tpu, alpha_eff = queueing.swap_batch_amortization(
+                lam, A[:, PCOL_S1], A[:, PCOL_S2], r, alphas, tl, svc,
+                discipline.batch_cap, staleness=discipline.staleness,
+            )
+        else:
+            alpha_eff = alphas
+            sl = (r * alpha_eff * tl).sum(axis=-1)
+            u = (r * alpha_eff * tl * (2.0 * svc + tl)).sum(axis=-1)
+            rho_tpu = A[:, PCOL_S1] + sl
+            es2_num = A[:, PCOL_S2] + u
+            tpu_wait = np.where(
+                rho_tpu >= 1.0, np.inf, es2_num / (2.0 * (1.0 - rho_tpu))
+            )
+
+        swap_i = alpha_eff * tl                                   # [B, n]
+        # Per-tenant CPU pool: the PKCOL_STATIC fold buries the mdk wait, so
+        # recompute it from the one-core suffix table (same scalar formula).
+        s1c = np.where(on_cpu, et.base.suffix1[ti, P], 0.0)
+        mu_one = np.where(s1c > 0.0, 1.0 / np.where(s1c > 0.0, s1c, 1.0), np.inf)
+        cpu_wait = queueing.mdk_wait_batch(r_full, mu_one, K)
+        cpu_wait = np.where(on_cpu, cpu_wait, 0.0)
+        rho_cpu = r_full * s1c / np.maximum(K, 1)
+        # Per-tenant static pieces (input transfer, prefix service, boundary
+        # transfer on genuinely split plans, one-core suffix service).
+        bnd = np.where(on & on_cpu, et.base.boundary[ti, P], 0.0)
+        static = (
+            np.where(on, et.base.input_xfer[None, :], 0.0) + svc + bnd + s1c
+        )
+
+        wt = np.where(on, tpu_wait[:, None], 0.0)
+        if objective.kind == "p_tail":
+            tail_t = queueing.wait_tail_quantile(
+                wt, rho_tpu[:, None], objective.q
+            )
+            tail_c = queueing.wait_tail_quantile(cpu_wait, rho_cpu, objective.q)
+            vals = static + swap_i + tail_t + tail_c
+        else:
+            d = deadlines_of(tenants)[None, :]
+            slack = d - static - swap_i
+            vals = _miss_prob(wt, rho_tpu[:, None], cpu_wait, rho_cpu, slack)
+        value = (r_full * vals).sum(axis=1)
+        overload = np.maximum(0.0, rho_tpu - 1.0) + F[:, PKCOL_OVERLOAD]
+    return value, overload
+
+
 def objective_batch(
     tenants: Sequence[TenantSpec],
     partitions: np.ndarray,
@@ -560,6 +803,7 @@ def objective_batch(
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> np.ndarray:
     """Eq. 5 objective for B candidate plans at once; ``inf`` where unstable.
 
@@ -575,6 +819,7 @@ def objective_batch(
         force_alpha_zero=force_alpha_zero,
         tables=tables,
         discipline=discipline,
+        objective=objective,
     )
     return total
 
@@ -588,6 +833,7 @@ def penalized_objective_batch(
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> np.ndarray:
     """Batched ``penalized_objective``: one pass of array ops over B plans.
 
@@ -604,6 +850,7 @@ def penalized_objective_batch(
         force_alpha_zero=force_alpha_zero,
         tables=tables,
         discipline=discipline,
+        objective=objective,
     )
     feasible = (overload == 0.0) & np.isfinite(total)
     return np.where(feasible, total, _PENALTY_BASE * (1.0 + overload))
@@ -620,6 +867,7 @@ def penalized_objective_delta_batch(
     force_alpha_zero: bool = False,
     tables: PlanTables | EvalTables | None = None,
     discipline: DisciplineSpec = FCFS,
+    objective: Objective | None = None,
 ) -> np.ndarray:
     """``penalized_objective_batch`` for neighbors of one base plan.
 
@@ -648,6 +896,21 @@ def penalized_objective_delta_batch(
     et = _resolve_tables(
         tenants, platform, np.concatenate([K.ravel(), K0]), tables
     )
+    if not is_default(objective):
+        # The delta decomposition is mean-only (it reconstructs the linear
+        # aggregate sums); SLO objectives are nonlinear per tenant, so score
+        # the neighbors with the full batched evaluator instead.  Mean keeps
+        # the O(changed) fast path below untouched.
+        return penalized_objective_batch(
+            tenants,
+            partitions,
+            cores,
+            platform,
+            force_alpha_zero=force_alpha_zero,
+            tables=et,
+            discipline=discipline,
+            objective=objective,
+        )
     ti = et.tenant_idx
     B = P.shape[0]
     F0 = et.pkstack[ti, P0, K0].sum(axis=0)                  # [2]

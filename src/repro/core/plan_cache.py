@@ -37,6 +37,14 @@ Key design points:
 the same machinery for ``run_adaptive_fleet``, with the verify step
 delegated to ``fleet_plan_objective`` and fleet identity (device class
 keys) folded into the key.
+
+Objective identity (``repro.core.objective.objective_key``) is part of
+both keys: a plan searched for the mean and one searched for p99 are
+different answers to different questions, and the verify step must
+re-score with the same metric or verify-then-reuse silently compares
+different quantities.  The default mean objective appends *nothing* --
+the pre-refactor keyspace (and every persisted digest) is preserved
+bitwise.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ import math
 from typing import Sequence
 
 from repro.core.latency import _PENALTY_BASE, penalized_objective
+from repro.core.objective import Objective, objective_key
 from repro.core.planner import DisciplineSpec, Plan, TenantSpec
 from repro.hw.specs import Platform
 
@@ -348,14 +357,19 @@ class PlanCache(_LruMixin):
         platform: Platform,
         k_max: int,
         discipline_space: Sequence[DisciplineSpec] | None,
+        objective: Objective | None = None,
     ) -> tuple:
-        return (
+        key = (
             quantize_rates([t.rate for t in tenants], self.rel),
             mix_fingerprint(tenants),
             platform,
             int(k_max),
             _space_key(discipline_space),
         )
+        okey = objective_key(objective, tenants)
+        # The default mean appends nothing: pre-refactor keys (and their
+        # persisted digests) stay bitwise identical.
+        return key if okey is None else key + (okey,)
 
     def lookup(
         self,
@@ -364,12 +378,17 @@ class PlanCache(_LruMixin):
         k_max: int,
         *,
         discipline_space: Sequence[DisciplineSpec] | None = None,
+        objective: Objective | None = None,
     ) -> tuple[Plan, float] | None:
-        entry = self._get(self._key(tenants, platform, k_max, discipline_space))
+        entry = self._get(
+            self._key(tenants, platform, k_max, discipline_space, objective)
+        )
         if entry is None:
             self.stats.misses += 1
             return None
-        obj = penalized_objective(tenants, entry.plan, platform)
+        obj = penalized_objective(
+            tenants, entry.plan, platform, objective=objective
+        )
         hit = self._admit(entry, obj, sum(t.rate for t in tenants))
         if hit is None:
             self.stats.rejects += 1
@@ -383,20 +402,23 @@ class PlanCache(_LruMixin):
         platform: Platform,
         k_max: int,
         plan: Plan,
-        objective: float,
+        value: float,
         *,
         discipline_space: Sequence[DisciplineSpec] | None = None,
+        objective: Objective | None = None,
     ) -> None:
         """Record a freshly planned state; silently skips unusable entries
-        (idle mix, infeasible/non-finite objective)."""
+        (idle mix, infeasible/non-finite value).  ``value`` is the plan's
+        scored objective; ``objective`` is the metric spec it was scored
+        under (part of the key)."""
         tot_rate = sum(t.rate for t in tenants)
         if not tot_rate > 0:
             return
-        norm = objective / tot_rate
-        if not math.isfinite(norm) or objective >= _PENALTY_BASE:
+        norm = value / tot_rate
+        if not math.isfinite(norm) or value >= _PENALTY_BASE:
             return
         self._put(
-            self._key(tenants, platform, k_max, discipline_space),
+            self._key(tenants, platform, k_max, discipline_space, objective),
             _Entry(plan, norm),
         )
 
@@ -450,14 +472,17 @@ class FleetPlanCache(_LruMixin):
         fleet: Sequence,
         k_max: int | None,
         discipline_space: Sequence[DisciplineSpec] | None,
+        objective: Objective | None = None,
     ) -> tuple:
-        return (
+        key = (
             quantize_rates([t.rate for t in tenants], self.rel),
             mix_fingerprint(tenants),
             tuple(d.class_key for d in fleet),
             None if k_max is None else int(k_max),
             _space_key(discipline_space),
         )
+        okey = objective_key(objective, tenants)
+        return key if okey is None else key + (okey,)
 
     def lookup(
         self,
@@ -466,14 +491,19 @@ class FleetPlanCache(_LruMixin):
         *,
         k_max: int | None = None,
         discipline_space: Sequence[DisciplineSpec] | None = None,
+        objective: Objective | None = None,
     ):
         from repro.core.fleet import fleet_plan_objective
 
-        entry = self._get(self._key(tenants, fleet, k_max, discipline_space))
+        entry = self._get(
+            self._key(tenants, fleet, k_max, discipline_space, objective)
+        )
         if entry is None:
             self.stats.misses += 1
             return None
-        obj = fleet_plan_objective(tenants, entry.plan, fleet)
+        obj = fleet_plan_objective(
+            tenants, entry.plan, fleet, objective=objective
+        )
         hit = self._admit(entry, obj, sum(t.rate for t in tenants))
         if hit is None:
             self.stats.rejects += 1
@@ -486,19 +516,20 @@ class FleetPlanCache(_LruMixin):
         tenants: Sequence[TenantSpec],
         fleet: Sequence,
         fleet_plan,
-        objective: float,
+        value: float,
         *,
         k_max: int | None = None,
         discipline_space: Sequence[DisciplineSpec] | None = None,
+        objective: Objective | None = None,
     ) -> None:
         tot_rate = sum(t.rate for t in tenants)
         if not tot_rate > 0:
             return
-        norm = objective / tot_rate
-        if not math.isfinite(norm) or objective >= _PENALTY_BASE:
+        norm = value / tot_rate
+        if not math.isfinite(norm) or value >= _PENALTY_BASE:
             return
         self._put(
-            self._key(tenants, fleet, k_max, discipline_space),
+            self._key(tenants, fleet, k_max, discipline_space, objective),
             _Entry(fleet_plan, norm),
         )
 

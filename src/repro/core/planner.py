@@ -253,10 +253,17 @@ class ModelProfile:
 
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
-    """One co-located model with its arrival rate (requests/s)."""
+    """One co-located model with its arrival rate (requests/s).
+
+    ``deadline`` is the tenant's end-to-end latency budget in seconds
+    (``None`` = no SLO): it is carried on the mix so the opt-in
+    ``deadline_miss`` objective (``repro.core.objective``) can price plans
+    against it, and it is ignored by every default (mean-objective) path.
+    """
 
     profile: ModelProfile
     rate: float
+    deadline: float | None = None
 
 
 _DISCIPLINE_KINDS = ("fcfs", "swap_batch", "priority", "weighted_fair")

@@ -112,6 +112,60 @@ def mdk_wait_batch(lam: np.ndarray, mu: np.ndarray, k: np.ndarray) -> np.ndarray
     return np.where(lam <= 0.0, 0.0, wait)
 
 
+def wait_exceed_prob(wq, rho, t):
+    """P(W > t) for an M/G/1-style queueing delay, exponential-tail model.
+
+    The waiting time has an atom at zero of mass ``1 - rho``; the
+    conditional wait is approximated as exponential with mean ``wq / rho``
+    (the exact conditional mean), so
+
+        P(W > t) ~= rho * exp(-rho * t / wq)          for t >= 0.
+
+    This is exact for M/M/1 and a standard light-tail approximation for
+    M/G/1 (the same model the ``swap_batch_amortization`` staleness bracket
+    uses).  ``benchmarks/model_vs_sim.py`` maps where it breaks against the
+    DES ground truth.
+
+    Broadcasting element-wise over any shapes.  Conventions:
+
+    * ``rho <= 0`` (idle queue) -> 0.
+    * ``rho >= 1`` or ``wq`` infinite (unstable) -> 1.
+    * ``wq <= 0`` with ``0 < rho < 1`` (degenerate zero wait) -> 0.
+    * ``t < 0`` is clamped to 0, so the result at ``t <= 0`` is ``rho``
+      (the probability of waiting at all).
+    """
+    wq = np.asarray(wq, dtype=np.float64)
+    rho = np.asarray(rho, dtype=np.float64)
+    t = np.maximum(np.asarray(t, dtype=np.float64), 0.0)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        p = rho * np.exp(-rho * t / wq)
+    p = np.where((wq <= 0.0) | ~np.isfinite(wq), 0.0, p)
+    p = np.where((rho >= 1.0) | np.isinf(wq), 1.0, p)
+    return np.where(rho <= 0.0, 0.0, p)
+
+
+def wait_tail_quantile(wq, rho, q):
+    """q-th quantile of the queueing delay under the same tail model.
+
+    Inverting ``wait_exceed_prob``: the quantile is 0 while the zero atom
+    covers it (``1 - q >= rho``), else
+
+        W(q) = (wq / rho) * ln(rho / (1 - q)).
+
+    Broadcasting element-wise.  Unstable entries (``rho >= 1`` or infinite
+    ``wq``) return ``inf``; idle or degenerate queues (``rho <= 0`` or
+    ``wq <= 0``) return 0, mirroring ``wait_exceed_prob``'s conventions.
+    """
+    wq = np.asarray(wq, dtype=np.float64)
+    rho = np.asarray(rho, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        tail = (wq / rho) * np.log(rho / (1.0 - q))
+    tail = np.where((1.0 - q) >= rho, 0.0, tail)
+    tail = np.where((rho >= 1.0) | np.isinf(wq), np.inf, tail)
+    return np.where((rho <= 0.0) | (wq <= 0.0), 0.0, tail)
+
+
 # Finite stand-in for an infinite queueing delay inside the swap-batch
 # fixed-point iteration (damping with a literal inf would poison the
 # average); any real wait is astronomically below this.

@@ -24,6 +24,8 @@ from typing import TYPE_CHECKING, Callable, Sequence
 import numpy as np
 
 from repro.core.allocator import hill_climb
+from repro.core.latency import penalized_objective
+from repro.core.objective import Objective, is_default
 from repro.core.plan_tables import PlanTables
 from repro.core.planner import DisciplineSpec, ModelProfile, Plan, TenantSpec
 from repro.hw.specs import Platform
@@ -195,6 +197,9 @@ def run_adaptive(
     degrade_restore: float = 1.3,
     min_speed_factor: float = 0.05,
     health_probe: bool = False,
+    objective: Objective | None = None,
+    rate_margin: float | None = None,
+    deadlines: Sequence[float | None] | None = None,
 ) -> AdaptiveRunResult:
     """Simulate the full adaptive runtime over a (possibly dynamic) trace.
 
@@ -264,6 +269,24 @@ def run_adaptive(
     default), keeping ``run_adaptive(fleet=...)`` defaults bitwise equal
     to ``run_adaptive_fleet`` defaults.
 
+    ``objective`` (opt-in, ``repro.core.objective``) selects the metric
+    every re-plan minimizes -- mean (the ``None`` default, bitwise the
+    pre-objective controller), ``p_tail(q)``, or ``deadline_miss`` against
+    the per-tenant budgets in ``deadlines`` (seconds, ``None`` entries =
+    no budget).  The committed ``plan_objectives`` are then values of that
+    metric, and the plan cache keys fold in the objective identity.  The
+    fault-aware throttle detector always judges observed *means* against a
+    fresh Eq. 5 prediction of the committed plan, whatever the planning
+    objective.
+
+    ``rate_margin`` (opt-in) plans against rates inflated by the factor
+    ``1 + rate_margin`` instead of the point estimate -- a cheap
+    upper-quantile stand-in for forecast uncertainty, so the committed
+    plan keeps headroom when the estimate lags a rising burst.  The
+    estimator and the simulator always see real traffic; only the
+    planner's input inflates.  ``None`` (the default) is bitwise the
+    margin-free controller.
+
     ``faults`` injects a ``serving.faults.FaultSchedule`` into the
     underlying simulator (device 0 in single-device mode); ``fault_aware``
     reacts to the *observed* degradation: when the windowed mean latency
@@ -318,10 +341,20 @@ def run_adaptive(
             degrade_restore=degrade_restore,
             min_speed_factor=min_speed_factor,
             health_probe=health_probe,
+            objective=objective,
+            rate_margin=rate_margin,
+            deadlines=deadlines,
         )
     if cold_fallback_margin is _UNSET_MARGIN:
         cold_fallback_margin = 0.05
+    if rate_margin is not None and rate_margin < 0:
+        raise ValueError("rate_margin must be non-negative (or None)")
     n = len(profiles)
+    if deadlines is not None and len(deadlines) != n:
+        raise ValueError("deadlines length must match model count")
+    dl: list[float | None] = (
+        list(deadlines) if deadlines is not None else [None] * n
+    )
     est = SlidingRateEstimator(n, window=window, decay=rate_decay)
 
     # The rate-free half of the vectorized evaluation engine depends only on
@@ -336,18 +369,25 @@ def run_adaptive(
     if "tables" in params:
         planner_kwargs["tables"] = PlanTables.build(profiles, platform, k_max)
     warm_capable = "init_plan" in params
+    # A **kwargs wrapper around hill_climb accepts kwargs without naming
+    # them, so VAR_KEYWORD counts as support.
+    takes_kw = any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
     if discipline_space is not None:
-        # A **kwargs wrapper around hill_climb accepts the kwarg without
-        # naming it, so VAR_KEYWORD counts as support.
-        takes_kw = any(
-            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
-        )
         if "discipline_space" not in params and not takes_kw:
             raise ValueError(
                 "planner does not support discipline co-optimization "
                 "(needs a discipline_space parameter)"
             )
         planner_kwargs["discipline_space"] = tuple(discipline_space)
+    if objective is not None:
+        if "objective" not in params and not takes_kw:
+            raise ValueError(
+                "planner does not support SLO objectives "
+                "(needs an objective parameter)"
+            )
+        planner_kwargs["objective"] = objective
 
     # Normalized (per-request) objectives of recent committed plans: the
     # incumbent trend the cold-fallback guard compares against.
@@ -362,6 +402,10 @@ def run_adaptive(
         now: float = 0.0,
         speed: float = 1.0,
     ) -> tuple[Plan, float, float]:
+        if rate_margin is not None:
+            # Headroom planning: the plan is searched for inflated rates,
+            # everything else (estimator, simulator, metrics) sees reality.
+            rates = [r * (1.0 + rate_margin) for r in rates]
         if speed < 1.0:
             # Degraded (fault-aware throttle) re-plan: score against the
             # observed slowdown by scaling the profiles, skip the plan
@@ -369,8 +413,8 @@ def run_adaptive(
             # speed) and the cold-fallback trend (a degraded normalized
             # objective is a different baseline).
             tenants = [
-                TenantSpec(p.scaled(speed, speed), max(r, min_rate))
-                for p, r in zip(profiles, rates)
+                TenantSpec(p.scaled(speed, speed), max(r, min_rate), deadline=d)
+                for p, r, d in zip(profiles, rates, dl)
             ]
             t0 = time.perf_counter()
             kwargs = {
@@ -381,13 +425,18 @@ def run_adaptive(
             plan, obj = planner(tenants, platform, k_max, **kwargs)
             return plan, obj, time.perf_counter() - t0
         tenants = [
-            TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
+            TenantSpec(p, max(r, min_rate), deadline=d)
+            for p, r, d in zip(profiles, rates, dl)
         ]
         tot_rate = sum(t.rate for t in tenants)
         t0 = time.perf_counter()
         if plan_cache is not None:
             hit = plan_cache.lookup(
-                tenants, platform, k_max, discipline_space=discipline_space
+                tenants,
+                platform,
+                k_max,
+                discipline_space=discipline_space,
+                objective=objective,
             )
             if hit is not None:
                 plan, obj = hit
@@ -421,6 +470,7 @@ def run_adaptive(
                 plan,
                 obj,
                 discipline_space=discipline_space,
+                objective=objective,
             )
         dt = time.perf_counter() - t0
         # Nan-means-unknown: only finite normalized objectives carry trend
@@ -429,6 +479,24 @@ def run_adaptive(
         if tot_rate > 0 and math.isfinite(obj):
             norm_history.append(obj / tot_rate)
         return plan, obj, dt
+
+    def _detection_value(rates: Sequence[float], p: Plan, value: float) -> float:
+        """What the throttle detector's predicted-mean baseline divides.
+
+        Observed window means must be judged against a *mean* prediction:
+        with a non-mean planning objective the committed value is a tail
+        quantile sum or a miss rate, so the committed plan is re-scored
+        under Eq. 5 here.  On the default mean path this returns ``value``
+        untouched (bitwise pin), and without ``fault_aware`` the baseline
+        is never read, so no extra evaluation is paid.
+        """
+        if is_default(objective) or not fault_aware:
+            return value
+        tenants = [
+            TenantSpec(pr, max(r, min_rate), deadline=d)
+            for pr, r, d in zip(profiles, rates, dl)
+        ]
+        return penalized_objective(tenants, p, platform)
 
     rates0 = list(initial_rates) if initial_rates is not None else [1.0] * n
     plan, obj, dt = plan_for(rates0)
@@ -440,8 +508,9 @@ def run_adaptive(
 
     # Fault-aware throttle detection state (inert unless fault_aware=True).
     speed_est = 1.0
-    pred_mean_inc = obj / sum(max(r, min_rate) for r in rates0) if (
-        math.isfinite(obj) and sum(max(r, min_rate) for r in rates0) > 0
+    base0 = _detection_value(rates0, plan, obj)
+    pred_mean_inc = base0 / sum(max(r, min_rate) for r in rates0) if (
+        math.isfinite(base0) and sum(max(r, min_rate) for r in rates0) > 0
     ) else math.nan
     tracker = LatencyWindowTracker(n)
     degraded_replan_times: list[float] = []
@@ -513,7 +582,9 @@ def run_adaptive(
                     # estimated slowdown, and judging against it would
                     # declare recovery the moment the degraded plan performs
                     # as (degraded-)predicted -- an oscillating restore.
-                    pred_mean_inc = obj / tot
+                    base = _detection_value(plan_rates, new_plan, obj)
+                    if math.isfinite(base):
+                        pred_mean_inc = base / tot
             next_replan += replan_period
 
     if (

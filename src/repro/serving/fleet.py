@@ -39,6 +39,7 @@ from repro.core.fleet import (
     evacuate_device,
     fleet_hill_climb,
 )
+from repro.core.objective import Objective
 from repro.core.planner import (
     DisciplineSpec,
     ModelProfile,
@@ -223,6 +224,9 @@ def run_adaptive_fleet(
     degrade_restore: float = 1.3,
     min_speed_factor: float = 0.05,
     health_probe: bool = False,
+    objective: Objective | None = None,
+    rate_margin: float | None = None,
+    deadlines: Sequence[float | None] | None = None,
 ) -> FleetAdaptiveResult:
     """Adaptive fleet serving: local re-plans, imbalance-gated placement.
 
@@ -295,15 +299,40 @@ def run_adaptive_fleet(
 
     All fault parameters default off; ``faults=None, fault_aware=False``
     is bitwise the pre-fault controller.
+
+    ``objective`` / ``rate_margin`` / ``deadlines`` mirror ``run_adaptive``:
+    every planner invocation (warm, cold, failover) minimizes the chosen
+    metric against optionally margin-inflated rates, with per-tenant
+    deadline budgets carried on the planning mixes.  Fault *detection*
+    stays on observed-vs-predicted means regardless of the planning
+    objective (an SLO value is not a mean and cannot be compared against
+    one).  All three default off, bitwise.
     """
     if not fleet:
         raise ValueError("fleet must contain at least one device")
     if faults is not None:
         faults.validate(len(fleet))
+    if rate_margin is not None and rate_margin < 0:
+        raise ValueError("rate_margin must be non-negative (or None)")
     n = len(profiles)
+    if deadlines is not None and len(deadlines) != n:
+        raise ValueError("deadlines length must match model count")
+    dl: list[float | None] = (
+        list(deadlines) if deadlines is not None else [None] * n
+    )
     n_dev = len(fleet)
     est = SlidingRateEstimator(n, window=window, decay=rate_decay)
     cache = FleetTablesCache()
+
+    def _plan_tenants(rates: Sequence[float]) -> list[TenantSpec]:
+        """The mix every planner invocation sees: optionally
+        margin-inflated rates, clamped, with deadline budgets attached."""
+        if rate_margin is not None:
+            rates = [r * (1.0 + rate_margin) for r in rates]
+        return [
+            TenantSpec(p, max(r, min_rate), deadline=d)
+            for p, r, d in zip(profiles, rates, dl)
+        ]
 
     # Normalized-objective trend for the opt-in warm-tail guard; cleared on
     # every committed placement re-plan (see the docstring).
@@ -325,9 +354,7 @@ def run_adaptive_fleet(
         plans against the nominal fleet unchanged.
         """
         eff_fleet = fleet if fleet_now is None else list(fleet_now)
-        tenants = [
-            TenantSpec(p, max(r, min_rate)) for p, r in zip(profiles, rates)
-        ]
+        tenants = _plan_tenants(rates)
         tot_rate = sum(t.rate for t in tenants)
         gate_firing = (
             incumbent is not None and imbalance_streak >= imbalance_patience
@@ -354,6 +381,7 @@ def run_adaptive_fleet(
                 eff_fleet,
                 k_max=k_max,
                 discipline_space=discipline_space,
+                objective=objective,
             )
             if hit is not None:
                 plan, obj = hit
@@ -369,6 +397,7 @@ def run_adaptive_fleet(
                 k_max=k_max,
                 tables=cache,
                 discipline_space=discipline_space,
+                objective=objective,
             )
             if plan_cache is not None:
                 plan_cache.store(
@@ -378,6 +407,7 @@ def run_adaptive_fleet(
                     obj,
                     k_max=k_max,
                     discipline_space=discipline_space,
+                    objective=objective,
                 )
             return commit(plan, obj, t0, False)
         plan, obj = fleet_hill_climb(
@@ -387,6 +417,7 @@ def run_adaptive_fleet(
             init=incumbent,
             tables=cache,
             discipline_space=discipline_space,
+            objective=objective,
         )
         moved = False
         if gate_firing:
@@ -396,6 +427,7 @@ def run_adaptive_fleet(
                 k_max=k_max,
                 tables=cache,
                 discipline_space=discipline_space,
+                objective=objective,
             )
             if cold_obj < obj:
                 plan, obj = cold_plan, cold_obj
@@ -417,6 +449,7 @@ def run_adaptive_fleet(
                 warm_start=False,
                 tables=cache,
                 discipline_space=discipline_space,
+                objective=objective,
             )
             cold_fallbacks.append(now)
             if cold_obj < obj:
@@ -429,6 +462,7 @@ def run_adaptive_fleet(
                 obj,
                 k_max=k_max,
                 discipline_space=discipline_space,
+                objective=objective,
             )
         return commit(plan, obj, t0, moved)
 
@@ -591,10 +625,7 @@ def run_adaptive_fleet(
                     # transition (cold search against the degraded specs --
                     # migration off a badly throttled device needs the
                     # placement search, which warm re-plans hold fixed).
-                    tenants_plan = [
-                        TenantSpec(p, max(r, min_rate))
-                        for p, r in zip(profiles, plan_rates)
-                    ]
+                    tenants_plan = _plan_tenants(plan_rates)
                     eff = fleet_now if fleet_now is not None else list(fleet)
                     t0 = time.perf_counter()
                     if down_list:
@@ -606,6 +637,7 @@ def run_adaptive_fleet(
                                 k_max=k_max,
                                 tables=cache,
                                 discipline_space=discipline_space,
+                                objective=objective,
                             )
                             dt = time.perf_counter() - t0
                             moved = True
@@ -626,6 +658,7 @@ def run_adaptive_fleet(
                             k_max=k_max,
                             tables=cache,
                             discipline_space=discipline_space,
+                            objective=objective,
                         )
                         dt = time.perf_counter() - t0
                         moved = True

@@ -102,6 +102,66 @@ class SimResult:
         rank = (99 * n + 99) // 100 - 1
         return float(np.partition(np.asarray(ls), rank)[rank])
 
+    def per_model_p99(self) -> list[float]:
+        """Per-model nearest-rank p99 drill-down: ``p99(i)`` for every
+        model, ``nan`` for models with no completions (the class-wide
+        unknown-not-zero convention).  On ``FleetSimResult`` the columns
+        are the pooled fleet samples, so this is the merged per-model p99
+        an external client observes."""
+        return [self.p99(i) for i in range(len(self.latencies))]
+
+    def deadline_misses(self, deadlines: Sequence[float | None]) -> list[int]:
+        """Per-model count of completed requests that missed their
+        deadline (observed latency strictly above the budget).
+
+        Resolved post-hoc from the recorded latency columns -- identical
+        across every backend by construction, and deadline tracking costs
+        nothing on runs that never ask.  Models with no deadline (``None``
+        or ``inf``) never miss.  Requests dropped by a fault policy are not
+        completions and are counted separately (``requests_lost``), so a
+        renege analysis reads both.
+        """
+        if len(deadlines) != len(self.latencies):
+            raise ValueError("deadlines length must match model count")
+        out = []
+        for d, ls in zip(deadlines, self.latencies):
+            if d is None or not len(ls) or math.isinf(d):
+                out.append(0)
+            else:
+                out.append(int(np.sum(np.asarray(ls) > float(d))))
+        return out
+
+    def per_model_deadline_miss_rate(
+        self, deadlines: Sequence[float | None]
+    ) -> list[float]:
+        """Per-model observed miss fraction; ``nan`` for a model with no
+        completions (unknown, not zero) -- deadline-free models with
+        completions read 0.0 (they observably never miss)."""
+        misses = self.deadline_misses(deadlines)
+        return [
+            m / len(ls) if len(ls) else math.nan
+            for m, ls in zip(misses, self.latencies)
+        ]
+
+    def deadline_miss_rate(self, deadlines: Sequence[float | None]) -> float:
+        """Pooled miss fraction over deadline-bearing models' completions.
+
+        Deadline-free models are excluded from both numerator and
+        denominator (they cannot miss, and counting their completions would
+        dilute the rate the SLO contracts on).  ``nan`` when no
+        deadline-bearing model completed anything.
+        """
+        if len(deadlines) != len(self.latencies):
+            raise ValueError("deadlines length must match model count")
+        misses = self.deadline_misses(deadlines)
+        tot_miss, tot_done = 0, 0
+        for d, m, ls in zip(deadlines, misses, self.latencies):
+            if d is None or math.isinf(d):
+                continue
+            tot_miss += m
+            tot_done += len(ls)
+        return tot_miss / tot_done if tot_done else math.nan
+
     def observed_miss_rate(self, model_idx: int) -> float:
         """Fraction of the model's TPU services that paid a swap-in;
         ``nan`` when the model never visited the TPU (full-CPU route or no

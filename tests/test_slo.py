@@ -1,0 +1,430 @@
+"""Tests for the pluggable objective layer (PR 10): mean / p_tail /
+deadline_miss across the scalar, batched, delta, JAX, fleet, cache, and
+controller paths.
+
+The load-bearing contract throughout: objectives are opt-in, and
+``objective=None`` is bitwise the pre-refactor Eq. 5 mean on every layer
+(ROADMAP standing invariant "objectives are opt-in; mean stays pinned").
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import paper_profile
+from repro.core import latency, queueing
+from repro.core.allocator import hill_climb
+from repro.core.fleet import DeviceSpec, fleet_hill_climb, fleet_plan_objective
+from repro.core.objective import (
+    MEAN,
+    Objective,
+    deadline_miss,
+    deadlines_of,
+    is_default,
+    objective_key,
+    p_tail,
+)
+from repro.core.plan_cache import FleetPlanCache, PlanCache
+from repro.core.plan_tables import EvalTables
+from repro.core.planner import Plan, TenantSpec
+from repro.hw.specs import EDGE_TPU_PLATFORM
+from repro.serving.controller import run_adaptive
+from repro.serving.simulator import simulate
+from repro.serving.workload import poisson_trace
+from tests._hypothesis_compat import given, settings, st
+
+HW = EDGE_TPU_PLATFORM
+K_MAX = HW.cpu.n_cores
+
+MODELS = ("inceptionv4", "squeezenet", "mobilenetv2")
+
+
+def _tenants(rates=(0.3, 5.0, 3.75), deadlines=(0.25, 0.10, None)):
+    return [
+        TenantSpec(paper_profile(m), r, deadline=d)
+        for m, r, d in zip(MODELS, rates, deadlines)
+    ]
+
+
+def _random_plans(ts, n_plans, seed):
+    rng = np.random.default_rng(seed)
+    npts = np.asarray([t.profile.num_partition_points for t in ts])
+    P = np.stack(
+        [rng.integers(0, npts + 1) for _ in range(n_plans)]
+    ).astype(np.intp)
+    K = rng.integers(0, K_MAX + 1, size=(n_plans, len(ts))).astype(np.intp)
+    return P, K
+
+
+OBJECTIVES = [None, MEAN, p_tail(0.99), p_tail(0.9), deadline_miss()]
+
+
+class TestObjectiveSpec:
+    def test_kind_validation(self):
+        with pytest.raises(ValueError, match="unknown objective kind"):
+            Objective("p50")
+        with pytest.raises(ValueError, match="quantile"):
+            p_tail(1.0)
+        with pytest.raises(ValueError, match="quantile"):
+            p_tail(0.0)
+
+    def test_is_default(self):
+        assert is_default(None) and is_default(MEAN)
+        assert not is_default(p_tail(0.99))
+        assert not is_default(deadline_miss())
+
+    def test_deadlines_of(self):
+        d = deadlines_of(_tenants())
+        assert d[0] == 0.25 and d[1] == 0.10 and math.isinf(d[2])
+
+    def test_objective_key_identity(self):
+        ts = _tenants()
+        assert objective_key(None, ts) is None
+        assert objective_key(MEAN, ts) is None
+        assert objective_key(p_tail(0.99), ts) == ("p_tail", 0.99)
+        assert objective_key(p_tail(0.99), ts) != objective_key(
+            p_tail(0.9), ts
+        )
+        k1 = objective_key(deadline_miss(), ts)
+        k2 = objective_key(
+            deadline_miss(), _tenants(deadlines=(0.5, 0.10, None))
+        )
+        # The deadline vector must enter the key: mixes differing only in
+        # budgets must not collide.
+        assert k1 != k2
+        assert k1 != objective_key(p_tail(0.99), ts)
+
+
+class TestTailFunctions:
+    @settings(max_examples=20)
+    @given(
+        wq=st.floats(min_value=1e-4, max_value=10.0),
+        rho=st.floats(min_value=0.01, max_value=0.99),
+        t=st.floats(min_value=0.0, max_value=50.0),
+    )
+    def test_exceed_prob_in_unit_interval(self, wq, rho, t):
+        p = queueing.wait_exceed_prob(wq, rho, t)
+        assert 0.0 <= p <= 1.0
+        # Monotone non-increasing in t.
+        assert queueing.wait_exceed_prob(wq, rho, t + 1.0) <= p + 1e-15
+
+    def test_exceed_prob_conventions(self):
+        assert queueing.wait_exceed_prob(1.0, 0.0, 1.0) == 0.0
+        assert queueing.wait_exceed_prob(1.0, 1.0, 1.0) == 1.0
+        assert queueing.wait_exceed_prob(math.inf, 0.5, 1.0) == 1.0
+        assert queueing.wait_exceed_prob(0.0, 0.5, 1.0) == 0.0
+
+    @settings(max_examples=20)
+    @given(
+        wq=st.floats(min_value=1e-4, max_value=10.0),
+        rho=st.floats(min_value=0.01, max_value=0.99),
+    )
+    def test_quantile_inverts_exceed(self, wq, rho):
+        q = 0.99
+        t = queueing.wait_tail_quantile(wq, rho, q)
+        if t > 0.0:
+            p = queueing.wait_exceed_prob(wq, rho, t)
+            assert p == pytest.approx(1.0 - q, rel=1e-9)
+        else:
+            # Mass at zero already covers the quantile.
+            assert rho <= 1.0 - q + 1e-12
+
+    def test_quantile_conventions(self):
+        assert queueing.wait_tail_quantile(1.0, 1.0, 0.99) == math.inf
+        assert queueing.wait_tail_quantile(1.0, 0.0, 0.99) == 0.0
+        # Below the atom at zero: quantile is 0.
+        assert queueing.wait_tail_quantile(1.0, 0.005, 0.99) == 0.0
+
+
+class TestBatchMatchesScalar:
+    @pytest.mark.parametrize("objective", OBJECTIVES)
+    def test_batch_matches_scalar(self, objective):
+        ts = _tenants()
+        P, K = _random_plans(ts, 24, seed=5)
+        et = EvalTables.build(ts, HW, K_MAX)
+        got = latency.penalized_objective_batch(
+            ts, P, K, HW, tables=et, objective=objective
+        )
+        for b in range(P.shape[0]):
+            plan = Plan(tuple(int(x) for x in P[b]), tuple(int(x) for x in K[b]))
+            ref = latency.penalized_objective(
+                ts, plan, HW, objective=objective
+            )
+            assert got[b] == pytest.approx(ref, rel=1e-9, abs=1e-12), (
+                f"objective={objective} plan={plan}"
+            )
+
+    @pytest.mark.parametrize("objective", OBJECTIVES)
+    def test_delta_matches_full_batch(self, objective):
+        ts = _tenants()
+        base, _ = hill_climb(ts, HW, K_MAX)
+        P, K = _random_plans(ts, 24, seed=6)
+        et = EvalTables.build(ts, HW, K_MAX)
+        full = latency.penalized_objective_batch(
+            ts, P, K, HW, tables=et, objective=objective
+        )
+        delta = latency.penalized_objective_delta_batch(
+            ts,
+            np.asarray(base.partition, dtype=np.intp),
+            np.asarray(base.cores, dtype=np.intp),
+            P,
+            K,
+            HW,
+            tables=et,
+            objective=objective,
+        )
+        np.testing.assert_allclose(delta, full, rtol=1e-9)
+
+    def test_default_is_bitwise(self):
+        ts = _tenants()
+        P, K = _random_plans(ts, 24, seed=7)
+        et = EvalTables.build(ts, HW, K_MAX)
+        ref = latency.penalized_objective_batch(ts, P, K, HW, tables=et)
+        for o in (None, MEAN):
+            got = latency.penalized_objective_batch(
+                ts, P, K, HW, tables=et, objective=o
+            )
+            assert np.array_equal(ref, got)
+
+
+class TestJaxPlanIdentity:
+    @pytest.mark.parametrize(
+        "objective", [p_tail(0.99), p_tail(0.9), deadline_miss()]
+    )
+    def test_hill_climb_plans_identical(self, objective):
+        ts = _tenants()
+        et = EvalTables.build(ts, HW, K_MAX)
+        ev = et.to_jax()
+        p_ref, o_ref = hill_climb(
+            ts, HW, K_MAX, tables=et, batch=True, objective=objective
+        )
+        p_jax, o_jax = hill_climb(
+            ts, HW, K_MAX, evaluator=ev, objective=objective
+        )
+        assert p_ref == p_jax
+        assert o_jax == pytest.approx(o_ref, rel=1e-4)
+
+    def test_jax_default_bitwise(self):
+        ts = _tenants()
+        et = EvalTables.build(ts, HW, K_MAX)
+        ev = et.to_jax()
+        P, K = _random_plans(ts, 16, seed=8)
+        ref = ev.penalized_objective_batch(P, K)
+        got = ev.penalized_objective_batch(P, K, objective=None)
+        assert np.array_equal(ref, got)
+
+
+class TestDeadlineMiss:
+    @settings(max_examples=15)
+    @given(
+        d0=st.floats(min_value=0.01, max_value=1.0),
+        bump=st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_miss_prob_monotone_in_budget(self, d0, bump):
+        ts = _tenants(deadlines=(None, None, None))
+        plan, _ = hill_climb(ts, HW, K_MAX)
+        lo = latency.predict_miss_probs(
+            ts, plan, HW, np.array([d0, d0, d0])
+        )
+        hi = latency.predict_miss_probs(
+            ts, plan, HW, np.array([d0 + bump, d0 + bump, d0 + bump])
+        )
+        assert np.all(hi <= lo + 1e-12)
+        assert np.all((lo >= 0.0) & (lo <= 1.0))
+
+    def test_no_deadline_never_misses(self):
+        ts = _tenants(deadlines=(None, None, None))
+        plan, _ = hill_climb(ts, HW, K_MAX)
+        probs = latency.predict_miss_probs(ts, plan, HW)
+        np.testing.assert_array_equal(probs, np.zeros(len(ts)))
+        assert latency.penalized_objective(
+            ts, plan, HW, objective=deadline_miss()
+        ) == pytest.approx(0.0)
+
+    def test_static_over_budget_misses_surely(self):
+        ts = _tenants(deadlines=(1e-9, 1e-9, 1e-9))
+        plan, _ = hill_climb(ts, HW, K_MAX)
+        probs = latency.predict_miss_probs(ts, plan, HW)
+        np.testing.assert_array_equal(probs, np.ones(len(ts)))
+
+    def test_tail_latencies_dominate_means(self):
+        ts = _tenants()
+        plan, _ = hill_climb(ts, HW, K_MAX)
+        pred = latency.predict(ts, plan, HW)
+        tails = latency.predict_tail_latencies(ts, plan, HW, 0.99)
+        # q=0.99 quantile latency can never fall below the static floor
+        # and is >= the q=0.5 quantile.
+        mid = latency.predict_tail_latencies(ts, plan, HW, 0.5)
+        assert np.all(tails >= mid - 1e-12)
+        statics = np.array([b.static for b in pred.per_model])
+        assert np.all(tails >= statics - 1e-12)
+
+
+class TestPlannerPins:
+    def test_hill_climb_default_bitwise(self):
+        ts = _tenants()
+        p_ref, o_ref = hill_climb(ts, HW, K_MAX)
+        for o in (None, MEAN):
+            p_got, o_got = hill_climb(ts, HW, K_MAX, objective=o)
+            assert p_got == p_ref and o_got == o_ref
+
+    def test_slo_objectives_change_search_metric(self):
+        ts = _tenants()
+        for o in (p_tail(0.99), deadline_miss()):
+            plan, value = hill_climb(ts, HW, K_MAX, objective=o)
+            # The returned value is the SLO metric of the returned plan.
+            assert value == pytest.approx(
+                latency.penalized_objective(ts, plan, HW, objective=o),
+                rel=1e-9,
+            )
+
+    def test_fleet_degenerate_matches_single_device(self):
+        ts = _tenants()
+        fleet = [DeviceSpec.from_platform(HW, name="d0")]
+        for o in (None, p_tail(0.99), deadline_miss()):
+            fp, fo = fleet_hill_climb(ts, fleet, objective=o)
+            sp, so = hill_climb(
+                ts,
+                HW,
+                K_MAX,
+                tables=EvalTables.build(ts, HW, K_MAX),
+                batch=True,
+                objective=o,
+            )
+            assert fp.device_plans[0].partition == sp.partition
+            assert fp.device_plans[0].cores == sp.cores
+            assert fo == pytest.approx(so, rel=1e-9)
+            rescored = fleet_plan_objective(ts, fp, fleet, objective=o)
+            assert rescored == pytest.approx(fo, rel=1e-9)
+
+
+class TestCacheKeys:
+    def test_default_keyspace_pinned(self):
+        ts = _tenants()
+        cache = PlanCache()
+        assert cache._key(ts, HW, K_MAX, None) == cache._key(
+            ts, HW, K_MAX, None, objective=None
+        )
+        assert len(cache._key(ts, HW, K_MAX, None)) == 5
+
+    def test_objective_enters_key(self):
+        ts = _tenants()
+        cache = PlanCache()
+        base = cache._key(ts, HW, K_MAX, None)
+        kt = cache._key(ts, HW, K_MAX, None, objective=p_tail(0.99))
+        kd = cache._key(ts, HW, K_MAX, None, objective=deadline_miss())
+        assert kt != base and kd != base and kt != kd
+        assert kt[:5] == base and kd[:5] == base
+
+    def test_no_cross_objective_hits(self):
+        ts = _tenants()
+        cache = PlanCache()
+        plan, obj = hill_climb(ts, HW, K_MAX)
+        cache.store(ts, HW, K_MAX, plan, obj)
+        assert cache.lookup(ts, HW, K_MAX) is not None
+        # A tail-objective lookup must not reuse the mean-keyed entry:
+        # verify-then-reuse would silently compare different metrics.
+        assert cache.lookup(ts, HW, K_MAX, objective=p_tail(0.99)) is None
+        o = p_tail(0.99)
+        plan_t, obj_t = hill_climb(ts, HW, K_MAX, objective=o)
+        cache.store(ts, HW, K_MAX, plan_t, obj_t, objective=o)
+        hit = cache.lookup(ts, HW, K_MAX, objective=o)
+        assert hit is not None and hit[0] == plan_t
+
+    def test_fleet_cache_objective_keyed(self):
+        ts = _tenants()
+        fleet = [DeviceSpec.from_platform(HW, name="d0")]
+        cache = FleetPlanCache()
+        fp, fo = fleet_hill_climb(ts, fleet)
+        cache.store(ts, fleet, fp, fo)
+        assert cache.lookup(ts, fleet) is not None
+        assert cache.lookup(ts, fleet, objective=deadline_miss()) is None
+
+
+class TestControllerPins:
+    def _run(self, **kw):
+        ts = _tenants()
+        profs = [t.profile for t in ts]
+        rates = [t.rate for t in ts]
+        trace = poisson_trace(rates, 120.0, seed=11)
+        return run_adaptive(
+            profs,
+            trace,
+            HW,
+            K_MAX,
+            replan_period=30.0,
+            window=30.0,
+            initial_rates=rates,
+            **kw,
+        )
+
+    def test_explicit_none_bitwise(self):
+        ref = self._run()
+        got = self._run(objective=None, rate_margin=None, deadlines=None)
+        assert got.plans == ref.plans
+        assert got.replan_times == ref.replan_times
+        for i in range(len(MODELS)):
+            assert np.array_equal(
+                np.asarray(ref.sim.latencies[i]),
+                np.asarray(got.sim.latencies[i]),
+            )
+
+    def test_slo_objective_accepted(self):
+        got = self._run(
+            objective=p_tail(0.99), deadlines=[0.25, 0.10, None]
+        )
+        assert got.plans  # committed at least the initial plan
+
+    def test_rate_margin_plans_for_inflated_rates(self):
+        ref = self._run()
+        got = self._run(rate_margin=0.5)
+        assert got.plans  # runs; plans may legitimately differ
+        with pytest.raises(ValueError, match="rate_margin"):
+            self._run(rate_margin=-0.1)
+
+    def test_deadline_validation(self):
+        with pytest.raises(ValueError, match="deadlines"):
+            self._run(deadlines=[0.25, 0.10])
+
+
+class TestSimObservables:
+    def _sim(self):
+        ts = _tenants()
+        plan, _ = hill_climb(ts, HW, K_MAX)
+        trace = poisson_trace([t.rate for t in ts], 200.0, seed=13)
+        return simulate(ts, plan, HW, trace, backend="des")
+
+    def test_per_model_p99(self):
+        sim = self._sim()
+        p99s = sim.per_model_p99()
+        assert len(p99s) == len(MODELS)
+        for i, p in enumerate(p99s):
+            assert p == sim.p99(i)
+
+    def test_deadline_miss_observables(self):
+        sim = self._sim()
+        dls = [0.25, 0.10, None]
+        misses = sim.deadline_misses(dls)
+        rates = sim.per_model_deadline_miss_rate(dls)
+        assert misses[2] == 0  # no deadline -> never a miss
+        for i in (0, 1):
+            expect = sum(
+                1 for x in sim.latencies[i] if float(x) > dls[i]
+            )
+            assert misses[i] == expect
+            assert rates[i] == pytest.approx(
+                expect / len(sim.latencies[i])
+            )
+        pooled = sim.deadline_miss_rate(dls)
+        n0, n1 = len(sim.latencies[0]), len(sim.latencies[1])
+        assert pooled == pytest.approx(
+            (misses[0] + misses[1]) / (n0 + n1)
+        )
+        with pytest.raises(ValueError):
+            sim.deadline_misses([0.1])
+
+    def test_miss_rate_monotone_in_budget(self):
+        sim = self._sim()
+        loose = sim.deadline_miss_rate([0.5, 0.5, 0.5])
+        tight = sim.deadline_miss_rate([0.05, 0.05, 0.05])
+        assert loose <= tight
